@@ -1,0 +1,41 @@
+"""Shared benchmark harness: one entry per paper table/figure.
+
+Each bench function returns rows of (name, us_per_call, derived) where
+``us_per_call`` is the wall time of the benchmark's core computation and
+``derived`` a short result string tied to the paper artifact it reproduces.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.evaluation import MeasureConfig
+from repro.core.latest import LatestConfig, run_latest
+from repro.dvfs import make_device
+
+# fast-but-meaningful defaults for the simulated measurement campaign
+FAST = MeasureConfig(min_measurements=5, max_measurements=8,
+                     rse_check_every=5)
+N_CORES = 6
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def freq_subset(dev, n=5):
+    fs = dev.cfg.frequencies
+    idx = np.linspace(0, len(fs) - 1, n).astype(int)
+    return [float(fs[i]) for i in idx]
+
+
+def measure_table(kind: str, n_freqs: int = 4, seed: int = 0,
+                  unit_seed: int = 0):
+    dev = make_device(kind, seed=seed, unit_seed=unit_seed, n_cores=N_CORES)
+    freqs = freq_subset(dev, n_freqs)
+    table = run_latest(dev, freqs, LatestConfig(measure=FAST),
+                       device_name=kind, device_index=unit_seed)
+    return dev, table

@@ -1,0 +1,45 @@
+"""The paper's §VIII payoff: a latency-table-aware governor vs baselines,
+with region profiles taken from REAL dry-run roofline cells."""
+from __future__ import annotations
+
+import glob
+import json
+
+import numpy as np
+
+from benchmarks.common import measure_table, timed
+from repro.dvfs.governor import (Governor, oblivious_governor_sim, static_sim)
+from repro.dvfs.planner import Region, regions_from_cell
+from repro.dvfs.power_model import PowerModel
+
+
+def _regions():
+    cells = sorted(glob.glob("results/dryrun/*__train_4k__single.json"))
+    for c in cells:
+        cell = json.load(open(c))
+        if cell["status"] == "ok":
+            return regions_from_cell(cell), cell["arch"]
+    return ([Region("compute", 0.3), Region("memory", 0.1),
+             Region("collective", 0.1), Region("host", 0.01)], "synthetic")
+
+
+def bench_governor_energy():
+    regions, src = _regions()
+    rows = []
+    for kind in ("a100", "gh200"):
+        (dev, table), us = timed(measure_table, kind, 4, 21)
+        freqs = sorted({f for f, _ in table.pairs} | {f for _, f in table.pairs})
+        power = PowerModel(f_max_mhz=max(freqs))
+        stream = regions * 100
+        aware = Governor(table, power, freqs).simulate(stream)
+        obliv = oblivious_governor_sim(table, power, freqs, stream)
+        stat = static_sim(power, freqs, stream)
+        save_vs_static = 1 - aware.energy_j / stat.energy_j
+        edp_gain = 1 - (aware.energy_j * aware.time_s) / (obliv.energy_j * obliv.time_s)
+        rows.append((f"governor/{kind}[{src}]", us,
+                     f"energy_save_vs_static={save_vs_static:.1%} "
+                     f"slowdown={aware.time_s/stat.time_s-1:+.1%} "
+                     f"EDP_gain_vs_oblivious={edp_gain:.1%} "
+                     f"switches={aware.switches} suppressed="
+                     f"{aware.suppressed_short}"))
+    return rows

@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + XLA-path timing —
+wall times on this CPU container are for harness completeness, not TPU
+performance claims; TPU numbers come from the roofline terms)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.microbench import microbench, microbench_ref
+from repro.kernels.microbench.ops import flops_per_core, make_input
+from repro.kernels.ssd.ops import ssd_pallas
+from repro.models import layers
+from repro.models.ssm import ssd_ref
+
+
+def bench_microbench_kernel():
+    x = make_input(16)
+    out, us = timed(lambda: jax.block_until_ready(
+        microbench(x, n_iters=32, unroll=16)))
+    ref = microbench_ref(x, n_iters=32, unroll=16)
+    err = float(jnp.abs(out - ref).max())
+    fl = flops_per_core(32, 16) * 16
+    return [("kernel/microbench", us,
+             f"cores=16 flops={fl:.2e} allclose_err={err:.1e}")]
+
+
+def bench_flash_attention_kernel():
+    ks = [jax.random.PRNGKey(i) for i in range(3)]
+    b, s, h, kv, dh = 1, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    out, us = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, blk_q=64, blk_k=64)))
+    ref = flash_attention_ref(q, k, v)
+    err = float(jnp.abs(out - ref).max())
+    return [("kernel/flash_attention", us,
+             f"s={s} gqa={h}/{kv} allclose_err={err:.1e}")]
+
+
+def bench_ssd_kernel():
+    ks = [jax.random.PRNGKey(i) for i in range(5)]
+    b, l, h, p, n, chunk = 1, 256, 4, 16, 32, 64
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, n))
+    C = jax.random.normal(ks[4], (b, l, n))
+    (y1, h1), us = timed(lambda: jax.tree.map(
+        jax.block_until_ready, ssd_pallas(x, dt, A, B, C, chunk)))
+    y2, h2 = ssd_ref(x, dt, A, B, C, chunk)
+    err = float(jnp.abs(y1 - y2).max())
+    return [("kernel/ssd", us, f"l={l} chunk={chunk} allclose_err={err:.1e}")]
+
+
+def bench_xla_attention_paths():
+    """chunked (flash-VJP) vs triangular prefill vs naive, one mid shape."""
+    ks = [jax.random.PRNGKey(i) for i in range(3)]
+    b, s, h, kv, dh = 2, 512, 8, 4, 64
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), jnp.bfloat16)
+    rows = []
+    for name, fn in [
+        ("naive", lambda: layers.naive_attention(q, k, v)),
+        ("chunked", lambda: layers.chunked_attention(q, k, v, kv_chunk=128)),
+        ("prefill_tri", lambda: layers.prefill_attention(q, k, v, kv_chunk=128)),
+    ]:
+        jitted = jax.jit(fn)
+        jax.block_until_ready(jitted())           # compile
+        _, us = timed(lambda: jax.block_until_ready(jitted()))
+        rows.append((f"attention/{name}", us, f"s={s} bf16"))
+    return rows

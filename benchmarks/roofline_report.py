@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run sweep artifacts (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES
+
+
+def load_cells(out_dir="results/dryrun", mesh="single", suffix=""):
+    cells = {}
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            tag = f"{arch}__{shape}__{mesh}{suffix}"
+            p = os.path.join(out_dir, tag + ".json")
+            if os.path.exists(p):
+                cells[(arch, shape)] = json.load(open(p))
+    return cells
+
+
+def bench_roofline_table():
+    rows = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh=mesh)
+        n_ok = sum(1 for c in cells.values() if c["status"] == "ok")
+        n_skip = sum(1 for c in cells.values() if c["status"] == "skipped")
+        rows.append((f"dryrun/{mesh}", 0.0,
+                     f"cells={len(cells)} ok={n_ok} skipped={n_skip} "
+                     f"errors={len(cells)-n_ok-n_skip}"))
+    cells = load_cells(mesh="single")
+    for (arch, shape), c in sorted(cells.items()):
+        if c["status"] != "ok":
+            rows.append((f"roofline/{arch}/{shape}", 0.0,
+                         f"SKIPPED: {c.get('reason','')[:60]}"))
+            continue
+        r = c["roofline"]
+        rows.append((
+            f"roofline/{arch}/{shape}",
+            (c.get("lower_s", 0) + c.get("compile_s", 0)) * 1e6,
+            f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+            f"collective={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+            f"mfu={r['mfu_roofline']:.3f} model/hlo={r['model_flops_ratio']:.2f}"))
+    return rows

@@ -1,0 +1,65 @@
+"""Benchmark driver — one function per paper table/figure plus the roofline
+report.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.governor_energy import bench_governor_energy
+    from benchmarks.kernel_bench import (bench_flash_attention_kernel,
+                                         bench_microbench_kernel,
+                                         bench_ssd_kernel,
+                                         bench_xla_attention_paths)
+    from benchmarks.paper_tables import (bench_dbscan_adaptive,
+                                         bench_fig3_heatmaps,
+                                         bench_fig4_asymmetry,
+                                         bench_fig56_clusters,
+                                         bench_fig789_variability,
+                                         bench_phase1_two_sigma,
+                                         bench_table2_summary)
+    from benchmarks.roofline_report import bench_roofline_table
+
+    benches = [
+        bench_phase1_two_sigma,      # §V-A
+        bench_dbscan_adaptive,       # Alg. 3
+        bench_table2_summary,        # Table II (+ ground-truth recovery)
+        bench_fig3_heatmaps,         # Fig. 3
+        bench_fig4_asymmetry,        # Fig. 4
+        bench_fig56_clusters,        # Figs. 5/6 + §VII-B
+        bench_fig789_variability,    # Figs. 7-9
+        bench_governor_energy,       # §VIII runtime payoff
+        bench_microbench_kernel,     # §V workload (Pallas)
+        bench_flash_attention_kernel,
+        bench_ssd_kernel,
+        bench_xla_attention_paths,
+        bench_roofline_table,        # deliverable (g)
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},nan,ERROR {type(e).__name__}: {e}",
+                  file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, HybridConfig, EncDecConfig,
+    VLMConfig,
+)
+from repro.configs.registry import ARCH_IDS, get_config, model_module, decode_module
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig",
+    "EncDecConfig", "VLMConfig", "ARCH_IDS", "get_config", "model_module",
+    "decode_module", "SHAPES", "ShapeSpec", "applicable",
+]

@@ -1,0 +1,23 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained experts.
+[arXiv:2401.06066; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b", family="moe",
+        n_layers=28, d_model=2048, n_heads=16, n_kv=16, head_dim=128,
+        d_ff=1408, vocab=102400, mlp="swiglu", rope_theta=10000.0,
+        moe=MoEConfig(n_routed=64, n_shared=2, top_k=6, d_expert=1408),
+        source="[arXiv:2401.06066; hf]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=48, vocab=256, mlp="swiglu", rope_theta=10000.0,
+        moe=MoEConfig(n_routed=8, n_shared=2, top_k=2, d_expert=48),
+        attn_kv_chunk=16, attn_q_chunk=16,
+    )

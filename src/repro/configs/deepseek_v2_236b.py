@@ -1,0 +1,26 @@
+"""deepseek-v2-236b [moe] — MLA (kv_lora=512) + 2 shared + 160 routed top-6.
+[arXiv:2405.04434; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig, MLAConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b", family="mla_moe",
+        n_layers=60, d_model=5120, n_heads=128, n_kv=128, head_dim=128,
+        d_ff=1536, vocab=102400, mlp="swiglu", rope_theta=10000.0,
+        moe=MoEConfig(n_routed=160, n_shared=2, top_k=6, d_expert=1536),
+        mla=MLAConfig(kv_lora=512, q_lora=1536, dh_nope=128, dh_rope=64,
+                      dh_v=128),
+        source="[arXiv:2405.04434; hf]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b-smoke", family="mla_moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=48, vocab=256, mlp="swiglu", rope_theta=10000.0,
+        moe=MoEConfig(n_routed=8, n_shared=2, top_k=2, d_expert=48),
+        mla=MLAConfig(kv_lora=32, q_lora=48, dh_nope=16, dh_rope=8, dh_v=16),
+        attn_kv_chunk=16, attn_q_chunk=16,
+    )

@@ -1,0 +1,27 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads, sliding-window
+attention with 3 global layers + 128 meta tokens.  [arXiv:2411.13676; hf]"""
+from repro.configs.base import ModelConfig, SSMConfig, HybridConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b", family="hybrid",
+        n_layers=32, d_model=1600, n_heads=25, n_kv=5, head_dim=64,
+        d_ff=5504, vocab=32001, mlp="swiglu", rope_theta=10000.0,
+        ssm=SSMConfig(d_inner=3200, headdim=64, n_state=16, chunk=256),
+        hybrid=HybridConfig(window=1024, n_meta=128),
+        sub_quadratic=True,
+        source="[arXiv:2411.13676; hf]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b-smoke", family="hybrid",
+        n_layers=6, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, mlp="swiglu", rope_theta=10000.0,
+        ssm=SSMConfig(d_inner=128, headdim=16, n_state=8, chunk=16),
+        hybrid=HybridConfig(window=16, n_meta=8),
+        sub_quadratic=True,
+        attn_kv_chunk=16, attn_q_chunk=16,
+    )

@@ -1,0 +1,22 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m", family="ssm",
+        n_layers=24, d_model=768, vocab=50280,
+        ssm=SSMConfig(d_inner=1536, headdim=64, n_state=128, chunk=256),
+        sub_quadratic=True,
+        source="[arXiv:2405.21060; unverified]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m-smoke", family="ssm",
+        n_layers=2, d_model=64, vocab=256,
+        ssm=SSMConfig(d_inner=128, headdim=16, n_state=16, chunk=16),
+        sub_quadratic=True,
+    )

@@ -1,0 +1,24 @@
+"""pixtral-12b [vlm] — mistral-nemo decoder backbone; pixtral-ViT frontend
+stubbed to precomputed patch embeddings.  [hf:mistralai/Pixtral-12B-2409;
+unverified]"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="vlm",
+        n_layers=40, d_model=5120, n_heads=32, n_kv=8, head_dim=128,
+        d_ff=14336, vocab=131072, mlp="swiglu", rope_theta=1000000.0,
+        vlm=VLMConfig(n_patches=256),
+        source="[hf:mistralai/Pixtral-12B-2409; unverified]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=256, mlp="swiglu", rope_theta=1000000.0,
+        vlm=VLMConfig(n_patches=8),
+        attn_kv_chunk=16, attn_q_chunk=16,
+    )

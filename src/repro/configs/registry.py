@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` selection surface."""
+from __future__ import annotations
+
+from repro.configs import (
+    whisper_medium, deepseek_moe_16b, deepseek_v2_236b, llama3_8b,
+    nemotron_4_15b, chatglm3_6b, qwen3_32b, mamba2_130m, hymba_1_5b,
+    pixtral_12b,
+)
+
+_MODULES = {
+    "whisper-medium": whisper_medium,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "llama3-8b": llama3_8b,
+    "nemotron-4-15b": nemotron_4_15b,
+    "chatglm3-6b": chatglm3_6b,
+    "qwen3-32b": qwen3_32b,
+    "mamba2-130m": mamba2_130m,
+    "hymba-1.5b": hymba_1_5b,
+    "pixtral-12b": pixtral_12b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {', '.join(ARCH_IDS)}")
+    mod = _MODULES[arch]
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def model_module(cfg):
+    """Return the (init/forward/loss/prefill/decode) module for a config."""
+    from repro.models import lm, encdec, decode
+    if cfg.family == "encdec":
+        return encdec
+    return lm
+
+
+def decode_module(cfg):
+    from repro.models import encdec, decode
+    if cfg.family == "encdec":
+        return encdec
+    return decode

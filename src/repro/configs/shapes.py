@@ -1,0 +1,39 @@
+"""Assigned input-shape set (applies to every architecture).
+
+  train_4k     seq 4096,    global_batch 256   -> lowers train_step
+  prefill_32k  seq 32768,   global_batch 32    -> lowers prefill
+  decode_32k   seq 32768,   global_batch 128   -> lowers decode_step (1 token,
+                                                  KV cache of seq_len)
+  long_500k    seq 524288,  global_batch 1     -> decode_step; requires a
+                                                  sub-quadratic arch (SSM /
+                                                  hybrid); skipped + documented
+                                                  for full-attention archs
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention: O(L^2) at 524288 ctx is "
+                       "infeasible by design (DESIGN.md #4); runs only for "
+                       "SSM/hybrid archs")
+    return True, ""

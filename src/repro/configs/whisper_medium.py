@@ -1,0 +1,24 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stubbed to precomputed
+frame embeddings.  [arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig, EncDecConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", family="encdec",
+        n_layers=24, d_model=1024, n_heads=16, n_kv=16, head_dim=64,
+        d_ff=4096, vocab=51865, mlp="gelu",
+        rope_fraction=0.0,                     # learned/sinusoidal positions
+        encdec=EncDecConfig(n_enc_layers=24, n_frames=1500, max_dec_len=32768),
+        source="[arXiv:2212.04356; unverified]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium-smoke", family="encdec",
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=256, mlp="gelu", rope_fraction=0.0,
+        encdec=EncDecConfig(n_enc_layers=2, n_frames=24, max_dec_len=64),
+        attn_kv_chunk=16, attn_q_chunk=16,
+    )

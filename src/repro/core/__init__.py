@@ -1,0 +1,23 @@
+# The paper's primary contribution: the LATEST accelerator frequency-
+# switching-latency measurement methodology (Velicka/Vysocky/Riha, CS.DC'25),
+# implemented device-agnostically in numpy/JAX.
+from repro.core.stats import (FreqStats, mean_std, diff_confidence_interval,
+                              rse, two_sigma_band, two_se_band, welch_t_test,
+                              ci_excludes_zero, null_hypothesis_holds)
+from repro.core.workload import WorkloadSpec, size_workload
+from repro.core.clock_sync import synchronize_timers
+from repro.core.calibration import calibrate, valid_pairs
+from repro.core.switching import measure_switch_once
+from repro.core.evaluation import measure_pair
+from repro.core.dbscan import dbscan, adaptive_dbscan
+from repro.core.silhouette import silhouette_score
+from repro.core.latency_table import LatencyTable, PairResult
+
+__all__ = [
+    "FreqStats", "mean_std", "diff_confidence_interval", "rse",
+    "two_sigma_band", "two_se_band", "welch_t_test", "ci_excludes_zero",
+    "null_hypothesis_holds", "WorkloadSpec", "size_workload",
+    "synchronize_timers", "calibrate", "valid_pairs", "measure_switch_once",
+    "measure_pair", "dbscan", "adaptive_dbscan", "silhouette_score",
+    "LatencyTable", "PairResult",
+]

@@ -1,0 +1,79 @@
+"""Phase 1 (Alg. 1): warm-up + per-frequency baselines + pair validity.
+
+For each candidate frequency the workload runs in several kernels; the
+FIRST kernels warm the device (thermal stabilization + wake-up), the LAST
+kernel's iterations provide the (mean, std) baseline.  Frequency pairs
+whose difference confidence interval contains zero are excluded — their
+execution times cannot be told apart, so the transition end would be
+undetectable (paper §V-B.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core import stats
+from repro.core.workload import WorkloadSpec
+
+
+@dataclasses.dataclass
+class Calibration:
+    baselines: dict             # freq -> FreqStats
+    iter_samples: dict          # freq -> np.ndarray of iteration times
+    wakeup_estimate_s: float
+
+
+def calibrate(device, frequencies, spec: WorkloadSpec) -> Calibration:
+    baselines, samples = {}, {}
+    wakeup = 0.0
+    for f in frequencies:
+        device.set_frequency(f)
+        first_kernel = None
+        data = None
+        for k in range(max(1, spec.wakeup_kernels)):
+            data = device.run_kernel(spec.iters_per_kernel, spec.flops_per_iter)
+            if k == 0:
+                first_kernel = data
+        iters = np.diff(data, axis=-1)[..., 0].ravel()  # (cores*iters,)
+        # driver-spike guard: a handful of huge iterations (CUDA driver
+        # management, host interference — paper §V-C) would inflate sigma
+        # and collapse the 2-sigma detection band onto overlapping pairs;
+        # trim the top 0.5% before fitting the baseline.
+        cut = np.quantile(iters, 0.995)
+        trimmed = iters[iters <= cut]
+        st = stats.mean_std(trimmed, freq_mhz=f)
+        baselines[f] = st
+        samples[f] = trimmed
+        # wake-up estimate (paper §V): first kernel's early iterations vs the
+        # last kernel's average — time until they match
+        fi = np.diff(first_kernel, axis=-1)[..., 0].mean(axis=0)
+        stable = np.abs(fi - st.mean) <= 2 * st.std
+        if not stable.all():
+            first_stable = int(np.argmax(stable)) if stable.any() else len(fi)
+            wakeup = max(wakeup, float(fi[:first_stable].sum()))
+    return Calibration(baselines=baselines, iter_samples=samples,
+                       wakeup_estimate_s=wakeup)
+
+
+def valid_pairs(cal: Calibration, *, z: float = 1.96,
+                use_population_band: bool = True) -> list[tuple[float, float]]:
+    """Pairs whose baselines are statistically distinguishable (Alg. 1 lines
+    8-11).  With use_population_band the 2-sigma bands must not fully
+    overlap either — the accelerator-grade criterion (SE ~ 0 at n ~ 1e6
+    makes the plain CI test accept pairs whose iteration populations are
+    inseparable)."""
+    out = []
+    freqs = sorted(cal.baselines)
+    for a, b in itertools.permutations(freqs, 2):
+        sa, sb = cal.baselines[a], cal.baselines[b]
+        if not stats.ci_excludes_zero(sa, sb, z):
+            continue
+        if use_population_band:
+            lo_a, hi_a = stats.two_sigma_band(sa)
+            lo_b, hi_b = stats.two_sigma_band(sb)
+            if not (hi_a < lo_b or hi_b < lo_a):
+                continue                   # bands overlap: detection unsafe
+        out.append((a, b))
+    return out

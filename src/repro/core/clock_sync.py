@@ -1,0 +1,37 @@
+"""CPU <-> accelerator timer synchronization (IEEE 1588 two-way exchange).
+
+Alg. 2 line 1: ``cpu_sync, acc_sync = synchronizeTimers()``.  The offset is
+estimated from n delay-request exchanges
+
+    offset_i = ((t2 - t1) + (t3 - t4)) / 2
+
+taking the exchange with the smallest round-trip delay (best-of-n filters
+link jitter, the standard PTP trick).  Host timestamps then map to the
+accelerator timeline as  t_acc = t_host + offset.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSync:
+    offset: float          # t_acc - t_host at sync time
+    rtt: float             # best round-trip delay observed
+    n_exchanges: int
+
+    def host_to_acc(self, t_host: float) -> float:
+        return t_host + self.offset
+
+
+def synchronize_timers(device, n_exchanges: int = 16) -> ClockSync:
+    best = None
+    for _ in range(n_exchanges):
+        t1, t2, t3, t4 = device.sync_exchange()
+        rtt = (t4 - t1) - (t3 - t2)
+        offset = ((t2 - t1) + (t3 - t4)) / 2.0
+        if best is None or rtt < best[0]:
+            best = (rtt, offset)
+    return ClockSync(offset=best[1], rtt=best[0], n_exchanges=n_exchanges)

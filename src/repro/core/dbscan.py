@@ -1,0 +1,101 @@
+"""DBSCAN outlier detection with the paper's adaptive parameter selection
+(Alg. 3, §V-C).
+
+DBSCAN from scratch (no sklearn): core points have >= minPts neighbors
+within eps; clusters grow from core points; everything else is noise.
+Adaptive selection sweeps minPts from ceil(4% n) down to floor(2% n) in
+steps of 2, eps = m * quantile_range(0.05, 0.95) (paper: m = 0.15 from the
+k-NN-distance analysis), halting once the noise ratio drops below 10%.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+NOISE = -1
+
+
+def dbscan(x: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
+    """Labels for 1-D (or (n,d)) data: cluster ids 0.. or NOISE (-1)."""
+    x = np.asarray(x, dtype=np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    n = len(x)
+    if n == 0:
+        return np.empty(0, dtype=int)
+    d = np.sqrt(((x[:, None, :] - x[None, :, :]) ** 2).sum(-1))
+    neighbors = [np.nonzero(d[i] <= eps)[0] for i in range(n)]
+    core = np.array([len(nb) >= min_pts for nb in neighbors])
+    labels = np.full(n, NOISE, dtype=int)
+    cid = 0
+    for i in range(n):
+        if labels[i] != NOISE or not core[i]:
+            continue
+        # expand a new cluster from core point i (BFS)
+        labels[i] = cid
+        stack = list(neighbors[i])
+        while stack:
+            j = stack.pop()
+            if labels[j] == NOISE:
+                labels[j] = cid
+                if core[j]:
+                    stack.extend(neighbors[j])
+        cid += 1
+    return labels
+
+
+def knn_distance(x: np.ndarray, k: int) -> np.ndarray:
+    """Distance to the k-th nearest neighbor (the eps-selection heuristic
+    the paper refines into the quantile-range multiplier)."""
+    x = np.asarray(x, dtype=np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    d = np.sqrt(((x[:, None, :] - x[None, :, :]) ** 2).sum(-1))
+    d.sort(axis=1)
+    k = min(k, d.shape[1] - 1)
+    return d[:, k]
+
+
+@dataclasses.dataclass
+class DBSCANResult:
+    labels: np.ndarray
+    eps: float
+    min_pts: int
+    noise_ratio: float
+    n_clusters: int
+    converged: bool          # noise ratio < 10% reached within the sweep
+
+
+def adaptive_dbscan(latencies: np.ndarray, *, mult: float = 0.15,
+                    start_frac: float = 0.04, end_frac: float = 0.02,
+                    step: int = 2, max_noise: float = 0.10) -> DBSCANResult:
+    """Alg. 3: sweep minPts from ceil(4% n) down to floor(2% n) (step -2)
+    with eps = mult * quantile_range(0.05, 0.95); stop when noise < 10%."""
+    x = np.asarray(latencies, dtype=np.float64).ravel()
+    n = len(x)
+    q05, q95 = np.quantile(x, [0.05, 0.95])
+    eps = max(mult * (q95 - q05), 1e-12)
+    start = max(2, math.ceil(start_frac * n))
+    end = max(2, math.floor(end_frac * n))
+    best = None
+    i = start
+    while i >= end:
+        labels = dbscan(x, eps, i)
+        noise = float((labels == NOISE).mean())
+        ncl = int(labels.max() + 1) if (labels >= 0).any() else 0
+        best = DBSCANResult(labels, eps, i, noise, ncl, noise <= max_noise)
+        if noise <= max_noise:
+            return best
+        i -= step
+    return best
+
+
+def split_clusters(latencies: np.ndarray, result: DBSCANResult):
+    """(clean_values, outlier_values, list-of-cluster-arrays)."""
+    x = np.asarray(latencies, dtype=np.float64).ravel()
+    clean = x[result.labels != NOISE]
+    outliers = x[result.labels == NOISE]
+    clusters = [x[result.labels == c] for c in range(result.n_clusters)]
+    return clean, outliers, clusters

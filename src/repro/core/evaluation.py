@@ -1,0 +1,74 @@
+"""Phase 2-3 repetition loop with the LATEST tool's operational semantics
+(paper §VI): RSE-driven stopping, min/max measurement counts, throttle
+checks every 5 passes (thermal -> drop newest 5 + 10 s cool-down; power ->
+skip the pair), RSE checked every 25 passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import stats as statsmod
+from repro.core.switching import measure_switch_once
+from repro.core.workload import WorkloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureConfig:
+    rse_target: float = 0.05
+    min_measurements: int = 10
+    max_measurements: int = 200
+    rse_check_every: int = 25
+    throttle_check_every: int = 5
+    cooldown_s: float = 10.0
+    max_retries: int = 50            # bound on Alg.2 GOTO loops per pass
+    k_sigma: float = 2.0
+
+
+@dataclasses.dataclass
+class PairMeasurement:
+    f_init: float
+    f_target: float
+    latencies: np.ndarray            # one entry per successful pass (s)
+    status: str                      # ok | power_throttled | undetectable
+    retries: int
+    rse: float
+
+
+def measure_pair(device, f_init: float, f_target: float, cal,
+                 spec: WorkloadSpec, mc: MeasureConfig = MeasureConfig()
+                 ) -> PairMeasurement:
+    lat: list[float] = []
+    retries = 0
+    passes = 0
+    while len(lat) < mc.max_measurements:
+        passes += 1
+        res = measure_switch_once(device, f_init, f_target, cal, spec,
+                                  k_sigma=mc.k_sigma)
+        if res is None:
+            retries += 1
+            if retries > mc.max_retries:
+                return PairMeasurement(f_init, f_target, np.asarray(lat),
+                                       "undetectable", retries, float("inf"))
+            continue
+        lat.append(res.latency)
+
+        if len(lat) % mc.throttle_check_every == 0:
+            flags = device.throttle_reasons()
+            if "power" in flags:
+                return PairMeasurement(f_init, f_target, np.asarray(lat),
+                                       "power_throttled", retries,
+                                       float("inf"))
+            if "thermal" in flags:
+                del lat[-mc.throttle_check_every:]          # drop newest 5
+                device.usleep(mc.cooldown_s)
+                continue
+
+        if (len(lat) >= mc.min_measurements
+                and len(lat) % mc.rse_check_every == 0
+                and statsmod.rse(np.asarray(lat)) < mc.rse_target):
+            break
+    arr = np.asarray(lat)
+    return PairMeasurement(f_init, f_target, arr, "ok", retries,
+                           statsmod.rse(arr) if arr.size else float("inf"))

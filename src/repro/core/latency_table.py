@@ -1,0 +1,144 @@
+"""Per-pair results, CSV persistence (LATEST naming convention) and the
+summary statistics of Table II / Figs. 3-4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core.dbscan import adaptive_dbscan, split_clusters
+from repro.core.silhouette import silhouette_score
+
+
+@dataclasses.dataclass
+class PairResult:
+    f_init: float
+    f_target: float
+    latencies: np.ndarray          # raw passes (s)
+    clean: np.ndarray              # after DBSCAN outlier removal
+    outliers: np.ndarray
+    n_clusters: int
+    silhouette: float
+    status: str = "ok"
+
+    @property
+    def worst_case(self) -> float:     # max switching latency (clean)
+        return float(self.clean.max()) if self.clean.size else float("nan")
+
+    @property
+    def best_case(self) -> float:
+        return float(self.clean.min()) if self.clean.size else float("nan")
+
+    @property
+    def mean(self) -> float:
+        return float(self.clean.mean()) if self.clean.size else float("nan")
+
+
+def analyse_pair(f_init, f_target, latencies, status="ok") -> PairResult:
+    lat = np.asarray(latencies, dtype=np.float64).ravel()
+    if lat.size < 5:
+        return PairResult(f_init, f_target, lat, lat, np.empty(0), 1,
+                          float("nan"), status)
+    res = adaptive_dbscan(lat)
+    clean, outliers, clusters = split_clusters(lat, res)
+    sil = silhouette_score(lat, res.labels) if res.n_clusters >= 2 else float("nan")
+    if clean.size == 0:
+        clean = lat
+    return PairResult(f_init, f_target, lat, clean, outliers,
+                      max(1, res.n_clusters), sil, status)
+
+
+class LatencyTable:
+    """All measured pairs for one device; feeds the governor + benchmarks."""
+
+    def __init__(self, device_name: str = "sim", device_index: int = 0,
+                 hostname: str = "node0"):
+        self.device_name = device_name
+        self.device_index = device_index
+        self.hostname = hostname
+        self.pairs: dict[tuple[float, float], PairResult] = {}
+
+    def add(self, pr: PairResult) -> None:
+        self.pairs[(pr.f_init, pr.f_target)] = pr
+
+    def lookup(self, f_init: float, f_target: float) -> PairResult | None:
+        return self.pairs.get((f_init, f_target))
+
+    # ------------------------------------------------------------------ #
+    def csv_name(self, f_init: float, f_target: float) -> str:
+        """LATEST convention: <init>_<target>_<hostname>_<gpuidx>.csv"""
+        return f"{int(f_init)}_{int(f_target)}_{self.hostname}_{self.device_index}.csv"
+
+    def save_csv(self, out_dir: str) -> list[str]:
+        os.makedirs(out_dir, exist_ok=True)
+        paths = []
+        for (fi, ft), pr in self.pairs.items():
+            p = os.path.join(out_dir, self.csv_name(fi, ft))
+            with open(p, "w") as f:
+                f.write("latency_s,is_outlier\n")
+                out = set(np.round(pr.outliers, 12))
+                for v in pr.latencies:
+                    f.write(f"{v:.9f},{int(round(v, 12) in out)}\n")
+            paths.append(p)
+        return paths
+
+    @staticmethod
+    def load_csv(path: str) -> tuple[np.ndarray, np.ndarray]:
+        rows = np.loadtxt(path, delimiter=",", skiprows=1).reshape(-1, 2)
+        return rows[:, 0], rows[:, 1].astype(bool)
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> dict:
+        """Table II analogue: min/mean/max of the worst-case and best-case
+        per-pair switching latencies, with the arg-pairs."""
+        ok = [p for p in self.pairs.values() if p.status == "ok" and p.clean.size]
+        if not ok:
+            return {}
+        worst = np.array([p.worst_case for p in ok])
+        best = np.array([p.best_case for p in ok])
+        pairs = [(p.f_init, p.f_target) for p in ok]
+
+        def stats_of(v):
+            return {"min_ms": float(v.min()) * 1e3,
+                    "mean_ms": float(v.mean()) * 1e3,
+                    "max_ms": float(v.max()) * 1e3,
+                    "argmin": pairs[int(v.argmin())],
+                    "argmax": pairs[int(v.argmax())]}
+
+        return {"worst_case": stats_of(worst), "best_case": stats_of(best),
+                "n_pairs": len(ok),
+                "one_cluster_fraction": float(np.mean(
+                    [p.n_clusters == 1 for p in ok])),
+                "max_clusters": int(max(p.n_clusters for p in ok))}
+
+    def heatmap(self, which: str = "worst") -> tuple[np.ndarray, list, list]:
+        """(matrix, init_freqs, target_freqs) — Fig. 3 analogue; NaN where
+        unmeasured.  Rows = initial, columns = target."""
+        inits = sorted({fi for fi, _ in self.pairs})
+        targets = sorted({ft for _, ft in self.pairs})
+        m = np.full((len(inits), len(targets)), np.nan)
+        for (fi, ft), p in self.pairs.items():
+            if p.status != "ok" or not p.clean.size:
+                continue
+            v = p.worst_case if which == "worst" else p.best_case
+            m[inits.index(fi), targets.index(ft)] = v
+        return m, inits, targets
+
+    def asymmetry(self) -> dict:
+        """Fig. 4 analogue: worst-case latency distributions for increasing
+        (init < target) vs decreasing (init > target) transitions."""
+        up = [p.worst_case for p in self.pairs.values()
+              if p.status == "ok" and p.clean.size and p.f_init < p.f_target]
+        down = [p.worst_case for p in self.pairs.values()
+                if p.status == "ok" and p.clean.size and p.f_init > p.f_target]
+        def dist(v):
+            v = np.asarray(v)
+            if not v.size:
+                return {}
+            return {"mean_ms": float(v.mean()) * 1e3,
+                    "median_ms": float(np.median(v)) * 1e3,
+                    "p95_ms": float(np.quantile(v, 0.95)) * 1e3,
+                    "max_ms": float(v.max()) * 1e3, "n": int(v.size)}
+        return {"increase": dist(up), "decrease": dist(down)}

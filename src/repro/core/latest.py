@@ -1,0 +1,73 @@
+"""LATEST-style top-level driver (paper §VI): benchmark the switching
+latency of a device over a frequency list, with RSE stopping, throttle
+handling and DBSCAN analysis, producing a LatencyTable (+ CSVs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core.calibration import calibrate, valid_pairs
+from repro.core.evaluation import MeasureConfig, measure_pair
+from repro.core.latency_table import LatencyTable, analyse_pair
+from repro.core.workload import WorkloadSpec, size_workload
+
+
+@dataclasses.dataclass(frozen=True)
+class LatestConfig:
+    base_iter_s: float = 40e-6          # iteration time at f_max
+    delay_iters: int = 300
+    confirm_iters: int = 400
+    probe_pairs: int = 3                # low/mid/high probe for sizing
+    measure: MeasureConfig = MeasureConfig()
+
+
+def probe_latency(device, frequencies, spec, cal, mc) -> float:
+    """Upper-bound probe over low/mid/high pairs (workload-sizing rule)."""
+    fs = sorted(frequencies)
+    probes = [(fs[0], fs[-1]), (fs[-1], fs[0]),
+              (fs[len(fs) // 2], fs[-1])]
+    worst = 1e-3
+    for fi, ft in probes:
+        if fi == ft:
+            continue
+        pm = measure_pair(device, fi, ft, cal, spec,
+                          dataclasses.replace(mc, min_measurements=3,
+                                              max_measurements=3))
+        if pm.latencies.size:
+            worst = max(worst, float(pm.latencies.max()))
+    return worst
+
+
+def run_latest(device, frequencies, cfg: LatestConfig = LatestConfig(),
+               device_name: str = "sim", device_index: int = 0,
+               hostname: str = "node0", pair_subset=None,
+               verbose: bool = False) -> LatencyTable:
+    # initial sizing guess; refined after the probe
+    spec0 = WorkloadSpec(
+        iters_per_kernel=cfg.delay_iters + cfg.confirm_iters + 512,
+        flops_per_iter=cfg.base_iter_s, delay_iters=cfg.delay_iters,
+        confirm_iters=cfg.confirm_iters)
+    cal = calibrate(device, frequencies, spec0)
+    pairs = valid_pairs(cal)
+    if pair_subset is not None:
+        pairs = [p for p in pairs if p in set(pair_subset)]
+
+    worst_probe = probe_latency(device, frequencies, spec0, cal, cfg.measure)
+    spec = size_workload(probe_latency_s=worst_probe,
+                         iter_time_s=cfg.base_iter_s,
+                         delay_iters=cfg.delay_iters,
+                         confirm_iters=cfg.confirm_iters)
+
+    table = LatencyTable(device_name, device_index, hostname)
+    for fi, ft in pairs:
+        pm = measure_pair(device, fi, ft, cal, spec, cfg.measure)
+        pr = analyse_pair(fi, ft, pm.latencies, pm.status)
+        table.add(pr)
+        if verbose:
+            print(f"  {fi:.0f}->{ft:.0f} MHz: n={pm.latencies.size} "
+                  f"status={pm.status} worst={pr.worst_case*1e3:.2f}ms "
+                  f"best={pr.best_case*1e3:.2f}ms clusters={pr.n_clusters}")
+    return table

@@ -1,0 +1,86 @@
+"""Statistical machinery for the LATEST methodology (paper §IV-V).
+
+The paper's central statistical point (§V-A): FTaLaT detects the transition
+end with a +-2*SE(mean) confidence band.  On an accelerator, n = cores x
+iterations ~ 1e7 samples drives SE = sigma/sqrt(n) below the device timer
+resolution (~1 us on CUDA), so almost no single iteration ever lands inside
+the band and detection starves.  LATEST replaces it with the +-2*sigma
+POPULATION band: ~95% of iterations under a stable frequency fall inside,
+so per-iteration detection works regardless of n.  Both bands are
+implemented here; tests/test_stats.py reproduces the failure mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqStats:
+    freq_mhz: float
+    mean: float           # mean iteration time (s)
+    std: float            # population std of iteration times
+    n: int                # samples
+
+    @property
+    def se(self) -> float:
+        return self.std / math.sqrt(max(1, self.n))
+
+
+def mean_std(samples: np.ndarray, freq_mhz: float = 0.0) -> FreqStats:
+    s = np.asarray(samples, dtype=np.float64).ravel()
+    return FreqStats(freq_mhz, float(s.mean()), float(s.std(ddof=1) if s.size > 1 else 0.0),
+                     int(s.size))
+
+
+def rse(samples) -> float:
+    """Relative standard error (paper §VI: stop when RSE < 5%)."""
+    s = np.asarray(samples, dtype=np.float64).ravel()
+    if s.size < 2 or s.mean() == 0:
+        return float("inf")
+    return float(s.std(ddof=1) / math.sqrt(s.size) / abs(s.mean()))
+
+
+def two_sigma_band(st: FreqStats, k: float = 2.0) -> tuple[float, float]:
+    """Population band (the paper's accelerator-adapted criterion)."""
+    return st.mean - k * st.std, st.mean + k * st.std
+
+
+def two_se_band(st: FreqStats, k: float = 2.0) -> tuple[float, float]:
+    """FTaLaT's mean-precision band — collapses at accelerator sample
+    counts; kept for the comparison experiment."""
+    return st.mean - k * st.se, st.mean + k * st.se
+
+
+def diff_confidence_interval(a: FreqStats, b: FreqStats,
+                             z: float = 1.96) -> tuple[float, float]:
+    """CI of mean(a) - mean(b) (Alg. 1 pair-validity test)."""
+    se = math.sqrt(a.se ** 2 + b.se ** 2)
+    d = a.mean - b.mean
+    return d - z * se, d + z * se
+
+
+def ci_excludes_zero(a: FreqStats, b: FreqStats, z: float = 1.96) -> bool:
+    lo, hi = diff_confidence_interval(a, b, z)
+    return lo > 0 or hi < 0
+
+
+def welch_t_test(a: FreqStats, b: FreqStats) -> float:
+    """Welch's t statistic for mean difference (alternative null-hypothesis
+    test mentioned in §V-B phase 1: 't-test or z-test or CI test')."""
+    se = math.sqrt(a.se ** 2 + b.se ** 2)
+    if se == 0:
+        return float("inf") if a.mean != b.mean else 0.0
+    return (a.mean - b.mean) / se
+
+
+def null_hypothesis_holds(a: FreqStats, b: FreqStats, *, z: float = 1.96,
+                          tol: float = 0.0) -> bool:
+    """Accept H0 (same mean) if the difference CI contains zero, OR the
+    absolute difference is below tol (Alg. 2 line 20's `meanDiff < tol`)."""
+    lo, hi = diff_confidence_interval(a, b, z)
+    if lo <= 0.0 <= hi:
+        return True
+    return abs(a.mean - b.mean) < tol

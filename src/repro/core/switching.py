@@ -1,0 +1,87 @@
+"""Phase 2 + per-core phase-3 evaluation (Alg. 2).
+
+One measurement pass:
+  1. synchronize timers (IEEE 1588)
+  2. set initial frequency, run the warm-up workload
+  3. launch the benchmark kernel; usleep(delay); record t_s (host clock,
+     mapped to the accelerator timeline); issue the change to the target
+  4. wait for the kernel; per core, find the first iteration at/after t_s
+     whose runtime falls inside the +-2*sigma band of the target baseline
+  5. confirm: the REMAINING iterations' mean must match the target baseline
+     (difference CI contains zero, or |diff| < tol) — rejects "passing
+     through" the target band while still adapting
+  6. switching latency of the pass = max over cores of (t_e - t_s)
+
+Returns None when no core yields a viable (detected + confirmed) result;
+the caller (evaluation.measure_pair) repeats the pass — Alg. 2's GOTO.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import stats
+from repro.core.clock_sync import synchronize_timers
+from repro.core.workload import WorkloadSpec
+
+
+@dataclasses.dataclass
+class SwitchPass:
+    latency: float                 # max over cores (s)
+    t_s: float                     # change request, accelerator timeline
+    core_latencies: np.ndarray     # per-core t_e - t_s (nan = not viable)
+    n_viable: int
+    transition_index: int          # iteration index of detection (max core)
+
+
+def measure_switch_once(device, f_init: float, f_target: float,
+                        cal, spec: WorkloadSpec, *, k_sigma: float = 2.0,
+                        z: float = 1.96, tol_frac: float = 0.02,
+                        min_confirm: int = 64) -> SwitchPass | None:
+    target = cal.baselines[f_target]
+    sync = synchronize_timers(device)
+
+    device.set_frequency(f_init)
+    device.run_kernel(spec.iters_per_kernel // 2, spec.flops_per_iter)  # warm up
+
+    h = device.launch_kernel(spec.iters_per_kernel, spec.flops_per_iter)
+    init_iter = cal.baselines[f_init].mean
+    device.usleep(spec.delay_iters * init_iter)
+    t_s = sync.host_to_acc(device.host_now())       # Alg.2 line 6
+    device.set_frequency(f_target)
+    data = device.wait(h)                           # (cores, iters, 2)
+
+    starts, ends = data[..., 0], data[..., 1]
+    durs = ends - starts
+    lo, hi = stats.two_sigma_band(target, k_sigma)
+    tol = tol_frac * target.mean
+
+    n_cores, n_iters = durs.shape
+    after = starts >= t_s                                    # Alg.2 line 12
+    in_band = (durs >= lo) & (durs <= hi) & after
+    has_hit = in_band.any(axis=1)
+    first_hit = np.where(has_hit, in_band.argmax(axis=1), n_iters)
+
+    core_lat = np.full(n_cores, np.nan)
+    trans_idx = np.full(n_cores, -1, dtype=int)
+    for c in np.nonzero(has_hit)[0]:
+        i = int(first_hit[c])
+        rest = durs[c, i:]
+        if rest.size < min_confirm:
+            continue
+        rest_stats = stats.mean_std(rest)
+        if stats.null_hypothesis_holds(rest_stats, target, z=z, tol=tol):
+            core_lat[c] = ends[c, i] - t_s                   # t_e - t_s
+            trans_idx[c] = i
+
+    viable = ~np.isnan(core_lat)
+    if not viable.any():
+        return None                                          # Alg.2 GOTO
+    return SwitchPass(
+        latency=float(np.nanmax(core_lat)),
+        t_s=float(t_s),
+        core_latencies=core_lat,
+        n_viable=int(viable.sum()),
+        transition_index=int(trans_idx[np.nanargmax(core_lat)]),
+    )

@@ -1,0 +1,52 @@
+"""Artificial iterative workload specification + sizing rules (paper §V).
+
+The workload is "the same arithmetic instruction repeated multiple times in
+each performed iteration", launched on every accelerator core.  Its length
+must cover four events (§V bullet list):
+
+  wake-up      : sustained load until the device stabilizes at the set
+                 frequency (estimated by comparing first-kernel iteration
+                 times against the last kernel's average)
+  delay        : several hundred iterations at the initial frequency before
+                 the change call, so init/target regions are separable
+  switching    : ~10x the longest observed switching latency among a probe
+                 subset of pairs (low/mid/high); retried 10x longer if the
+                 latency is not captured
+  confirmation : several hundred .. a thousand iterations to confirm the
+                 target frequency statistically
+
+On real TPU/GPU hardware the workload is the Pallas microbench kernel
+(repro.kernels.microbench) — an unrolled FMA chain per grid cell with
+MXU/VPU-aligned tiles.  Against the simulator, the same spec drives
+SimulatedAccelerator.launch_kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    iters_per_kernel: int            # iterations per kernel launch
+    flops_per_iter: float            # arithmetic work per iteration per core
+    delay_iters: int                 # iterations before the switch call
+    confirm_iters: int               # iterations for target confirmation
+    wakeup_kernels: int = 3          # kernels to burn before measuring
+
+    def delay_seconds(self, iter_time_s: float) -> float:
+        return self.delay_iters * iter_time_s
+
+
+def size_workload(*, probe_latency_s: float, iter_time_s: float,
+                  delay_iters: int = 400, confirm_iters: int = 600,
+                  safety: float = 10.0) -> WorkloadSpec:
+    """Apply the paper's sizing rules given a probe of the switching latency
+    (upper bound over a few low/mid/high pairs) and the iteration runtime."""
+    switch_iters = int(safety * probe_latency_s / iter_time_s) + 1
+    total = delay_iters + switch_iters + confirm_iters
+    return WorkloadSpec(
+        iters_per_kernel=total,
+        flops_per_iter=iter_time_s,     # simulator: work expressed in seconds
+        delay_iters=delay_iters,
+        confirm_iters=confirm_iters,
+    )

@@ -1,0 +1,11 @@
+from repro.dvfs.device_model import SimulatedAccelerator, KernelHandle, DeviceConfig
+from repro.dvfs.transition_models import (TransitionModel, A100Like, GH200Like,
+                                          RTXQuadro6000Like, make_device)
+from repro.dvfs.power_model import PowerModel
+from repro.dvfs.governor import Governor, GovernorConfig, Region
+
+__all__ = [
+    "SimulatedAccelerator", "KernelHandle", "DeviceConfig", "TransitionModel",
+    "A100Like", "GH200Like", "RTXQuadro6000Like", "make_device", "PowerModel",
+    "Governor", "GovernorConfig", "Region",
+]

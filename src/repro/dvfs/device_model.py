@@ -1,0 +1,202 @@
+"""Simulated accelerator with an independent clock, uniform core frequency,
+asynchronous host->device frequency-change commands, wake-up ramps,
+throttling and per-core timestamped kernels.
+
+The host-side API mirrors what a CUDA/NVML (or future TPU-platform) backend
+would expose, so `repro.core` never sees simulation internals:
+
+  host_now() / usleep(dt)         host clock
+  set_frequency(mhz)              async: arrives after comm_delay, completes
+                                  after a model-sampled switching latency
+  launch_kernel(spec)             non-blocking; device busy until finished
+  wait(handle)                    -> per-core (start, end) device timestamps,
+                                  quantized to the device timer resolution
+  sync_exchange()                 one IEEE-1588 two-way message exchange
+  throttle_reasons()              flags since last call (paper §VI checks
+                                  every 5 passes)
+
+Kernel timestamps are evaluated lazily at wait() time, when the full
+frequency-event history is known.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.dvfs.transition_models import TransitionModel
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    n_cores: int = 108
+    frequencies: tuple[float, ...] = tuple(np.arange(210.0, 1411.0, 15.0))
+    idle_freq: float | None = None        # default: min frequency
+    timer_resolution_s: float = 1e-6      # CUDA global timer ~1 us
+    iter_noise_sigma: float = 0.02        # per-iteration lognormal sigma
+    core_skew_s: float = 2e-6             # start skew across cores
+    launch_overhead_s: float = 8e-6
+    outlier_prob: float = 0.002           # driver-event spikes
+    outlier_scale: float = 6.0
+    clock_offset_s: float = 1.234         # device clock = host + offset
+    clock_drift: float = 2e-7             # + drift * elapsed
+    link_jitter_s: float = 4e-6           # sync-message jitter
+    idle_timeout_s: float = 0.05
+    thermal_throttle_prob: float = 0.0    # per-kernel; tests can raise it
+    power_throttle_freqs: tuple[float, ...] = ()
+
+
+@dataclasses.dataclass
+class KernelHandle:
+    start_dev: float
+    n_iters: int
+    base_iter_s: float
+    seq: int
+
+
+class SimulatedAccelerator:
+    def __init__(self, model: TransitionModel, cfg: DeviceConfig, seed: int = 0):
+        self.model = model
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self._host_t = 0.0
+        self._t0 = 0.0
+        idle = cfg.idle_freq if cfg.idle_freq is not None else min(cfg.frequencies)
+        self._idle_freq = idle
+        self._set_freq = idle
+        # committed frequency timeline: sorted [(device_time, freq)]
+        self._events: list[tuple[float, float]] = [(-np.inf, idle)]
+        self._busy_until_dev = -np.inf
+        self._last_activity_dev = -np.inf
+        self._seq = 0
+        self._throttle_flags: set[str] = set()
+        self._pending_power_throttle = False
+        self.history: list[dict] = []     # ground-truth transition log
+
+    # ------------------------------------------------------------------ #
+    # clocks
+    # ------------------------------------------------------------------ #
+    def host_now(self) -> float:
+        return self._host_t
+
+    def _dev_time(self, host_t: float) -> float:
+        c = self.cfg
+        return host_t + c.clock_offset_s + c.clock_drift * (host_t - self._t0)
+
+    def dev_now(self) -> float:
+        return self._dev_time(self._host_t)
+
+    def usleep(self, dt: float) -> None:
+        self._host_t += dt
+
+    def sync_exchange(self) -> tuple[float, float, float, float]:
+        """One two-way delay-request exchange (IEEE 1588)."""
+        j = self.cfg.link_jitter_s
+        t1 = self._host_t
+        d1 = self.model.comm_delay_s + self.rng.uniform(0, j)
+        t2 = self._dev_time(t1 + d1)
+        proc = 2e-6
+        t3 = t2 + proc
+        d2 = self.model.comm_delay_s + self.rng.uniform(0, j)
+        self._host_t = t1 + d1 + proc + d2
+        t4 = self._host_t
+        return t1, t2, t3, t4
+
+    # ------------------------------------------------------------------ #
+    # frequency control
+    # ------------------------------------------------------------------ #
+    def _freq_at(self, t_dev: float) -> float:
+        times = [e[0] for e in self._events]
+        i = int(np.searchsorted(times, t_dev, side="right")) - 1
+        return self._events[max(0, i)][1]
+
+    def _commit(self, t_dev: float, freq: float) -> None:
+        # drop any scheduled events after t_dev (a new command overrides)
+        self._events = [e for e in self._events if e[0] <= t_dev]
+        self._events.append((t_dev, freq))
+
+    def set_frequency(self, mhz: float) -> None:
+        """Issue the (async) frequency-change command from the host."""
+        if mhz not in self.cfg.frequencies:
+            raise ValueError(f"unsupported frequency {mhz}")
+        arrive_dev = self._dev_time(self._host_t) + self.model.comm_delay_s
+        f_from = self._set_freq
+        lat = self.model.sample_latency(f_from, mhz, self.rng)
+        for dt, f in self.model.trajectory(f_from, mhz, lat, self.rng):
+            self._commit(arrive_dev + dt, f)
+        self._set_freq = mhz
+        if mhz in self.cfg.power_throttle_freqs:
+            self._pending_power_throttle = True
+        self.history.append({
+            "host_t": self._host_t, "arrive_dev": arrive_dev,
+            "from": f_from, "to": mhz, "true_latency": lat,
+            "target_reached_dev": arrive_dev + lat,
+        })
+        # issuing the command costs the host the comm round-trip
+        self._host_t += self.model.comm_delay_s
+
+    def throttle_reasons(self) -> set[str]:
+        flags, self._throttle_flags = self._throttle_flags, set()
+        return flags
+
+    # ------------------------------------------------------------------ #
+    # kernels
+    # ------------------------------------------------------------------ #
+    def launch_kernel(self, n_iters: int, base_iter_s: float) -> KernelHandle:
+        """Enqueue a kernel of n_iters iterations; each iteration costs
+        base_iter_s at max frequency, scaled by f_max/f(t)."""
+        now_dev = self.dev_now() + self.cfg.launch_overhead_s
+        start = max(now_dev, self._busy_until_dev)
+        # wake-up: device idles down after idle_timeout without work
+        if (start - max(self._last_activity_dev, -1e18)) > self.cfg.idle_timeout_s \
+                and self._set_freq != self._idle_freq:
+            # device had fallen back to idle; it ramps back up after wake-up
+            self._commit(start, self._idle_freq)
+            self._commit(start + self.model.wakeup_s, self._set_freq)
+        if self.cfg.thermal_throttle_prob > 0 and \
+                self.rng.random() < self.cfg.thermal_throttle_prob:
+            self._throttle_flags.add("thermal")
+            cap = min(self._set_freq, 0.8 * max(self.cfg.frequencies))
+            self._commit(start, cap)
+            self._commit(start + 5e-3, self._set_freq)
+        if self._pending_power_throttle:
+            self._throttle_flags.add("power")
+        h = KernelHandle(start_dev=start, n_iters=n_iters,
+                         base_iter_s=base_iter_s, seq=self._seq)
+        self._seq += 1
+        return h
+
+    def wait(self, h: KernelHandle) -> np.ndarray:
+        """Block until the kernel finishes; returns device timestamps
+        (n_cores, n_iters, 2) [start, end], timer-quantized."""
+        c = self.cfg
+        n, it = c.n_cores, h.n_iters
+        f_max = max(c.frequencies)
+        t = np.full(n, h.start_dev) + self.rng.uniform(0, c.core_skew_s, n)
+        starts = np.empty((n, it))
+        ends = np.empty((n, it))
+        noise = self.rng.lognormal(0.0, c.iter_noise_sigma, (n, it))
+        spikes = self.rng.random((n, it)) < c.outlier_prob
+        noise = np.where(spikes, noise * c.outlier_scale, noise)
+        ev_t = np.array([e[0] for e in self._events])
+        ev_f = np.array([e[1] for e in self._events])
+        for i in range(it):
+            starts[:, i] = t
+            idx = np.searchsorted(ev_t, t, side="right") - 1
+            f = ev_f[np.maximum(idx, 0)]
+            dur = h.base_iter_s * (f_max / f) * noise[:, i]
+            t = t + dur
+            ends[:, i] = t
+        end_dev = float(t.max())
+        self._busy_until_dev = end_dev
+        self._last_activity_dev = end_dev
+        # host blocks until completion
+        host_end = end_dev - c.clock_offset_s - c.clock_drift * (self._host_t - self._t0)
+        self._host_t = max(self._host_t, host_end)
+        q = c.timer_resolution_s
+        out = np.stack([starts, ends], axis=-1)
+        return np.floor(out / q) * q
+
+    # convenience: blocking run
+    def run_kernel(self, n_iters: int, base_iter_s: float) -> np.ndarray:
+        return self.wait(self.launch_kernel(n_iters, base_iter_s))

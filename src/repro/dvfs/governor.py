@@ -1,0 +1,139 @@
+"""Energy-aware DVFS governor driven by the MEASURED switching-latency
+table — the runtime system the paper motivates (§I, §VIII).
+
+Two decisions per region boundary:
+  1. *Timing* — only request a change when the upcoming region lasts at
+     least ``hysteresis x worst-case-latency(cur -> tgt)``; shorter regions
+     can't amortize the transition (and re-requesting mid-transition leaves
+     the clock undefined — COUNTDOWN's Haswell observation, paper §III).
+  2. *Pair avoidance* — pairs whose worst-case latency exceeds the
+     ``avoid_percentile`` of the table are never used directly; the
+     governor picks the nearest allowed target instead (paper §VIII:
+     "the runtime system may avoid some frequency transitions, which show
+     overhead higher than other frequency pairs").
+
+``simulate`` integrates energy x time over a region stream for this
+governor vs. two baselines (latency-oblivious switcher, static f_max);
+benchmarks/governor_energy.py reports the comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.dvfs.planner import Region
+from repro.dvfs.power_model import PowerModel
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    hysteresis: float = 3.0            # region must be >= h x latency
+    avoid_percentile: float = 95.0     # worst-case latency cap
+    max_slowdown: float = 1.05
+    default_latency_s: float = 0.1     # when a pair was never measured
+
+
+@dataclasses.dataclass
+class GovernorStats:
+    switches: int = 0
+    suppressed_short: int = 0
+    avoided_pairs: int = 0
+    energy_j: float = 0.0
+    time_s: float = 0.0
+    switch_overhead_s: float = 0.0
+
+
+class Governor:
+    def __init__(self, table, power: PowerModel, frequencies,
+                 cfg: GovernorConfig = GovernorConfig()):
+        self.table = table
+        self.power = power
+        self.freqs = sorted(frequencies)
+        self.cfg = cfg
+        ok = [p.worst_case for p in table.pairs.values()
+              if p.status == "ok" and p.clean.size]
+        self._avoid_cap = (np.percentile(ok, cfg.avoid_percentile)
+                          if ok else float("inf"))
+
+    # ------------------------------------------------------------------ #
+    def latency(self, f_from: float, f_to: float) -> float:
+        pr = self.table.lookup(f_from, f_to)
+        if pr is None or not pr.clean.size:
+            return self.cfg.default_latency_s
+        return pr.worst_case
+
+    def allowed(self, f_from: float, f_to: float) -> bool:
+        return self.latency(f_from, f_to) <= self._avoid_cap
+
+    def pick_target(self, region: Region, f_cur: float) -> tuple[float, str]:
+        """(frequency to run the region at, reason)."""
+        f_star = self.power.best_frequency(region.duration_s,
+                                           region.sensitivity, self.freqs,
+                                           max_slowdown=self.cfg.max_slowdown)
+        if f_star == f_cur:
+            return f_cur, "already_optimal"
+        # timing rule
+        if region.duration_s < self.cfg.hysteresis * self.latency(f_cur, f_star):
+            return f_cur, "too_short"
+        # pair-avoidance rule: walk toward f_cur until the pair is allowed
+        cand = sorted(self.freqs, key=lambda f: abs(f - f_star))
+        for f in cand:
+            if f == f_cur:
+                return f_cur, "avoided_all"
+            if self.allowed(f_cur, f):
+                ok_reason = "optimal" if f == f_star else "avoid_detour"
+                # re-check timing for the detour target
+                if region.duration_s >= self.cfg.hysteresis * self.latency(f_cur, f):
+                    return f, ok_reason
+        return f_cur, "avoided_all"
+
+    # ------------------------------------------------------------------ #
+    def simulate(self, regions: list[Region], f_start: float | None = None
+                 ) -> GovernorStats:
+        f = f_start if f_start is not None else max(self.freqs)
+        st = GovernorStats()
+        for r in regions:
+            tgt, reason = self.pick_target(r, f)
+            if reason == "too_short":
+                st.suppressed_short += 1
+            if reason in ("avoid_detour", "avoided_all"):
+                st.avoided_pairs += 1
+            if tgt != f:
+                lat = self.latency(f, tgt)
+                # during the transition the region runs at the OLD frequency
+                st.switch_overhead_s += lat
+                t_old = min(lat, self.power.region_time(r.duration_s, f,
+                                                        r.sensitivity))
+                st.energy_j += self.power.power(f) * t_old
+                st.time_s += t_old
+                frac_done = t_old / max(self.power.region_time(
+                    r.duration_s, f, r.sensitivity), 1e-12)
+                rest = Region(r.kind, r.duration_s * max(0.0, 1 - frac_done))
+                st.switches += 1
+                f = tgt
+                r = rest
+            t = self.power.region_time(r.duration_s, f, r.sensitivity)
+            st.energy_j += self.power.power(f) * t
+            st.time_s += t
+        return st
+
+
+def oblivious_governor_sim(table, power: PowerModel, frequencies,
+                           regions: list[Region]) -> GovernorStats:
+    """Latency-oblivious baseline: always jumps to the energy-optimal
+    frequency, pays the (unknown to it) transition every time."""
+    g = Governor(table, power, frequencies,
+                 GovernorConfig(hysteresis=0.0, avoid_percentile=100.0))
+    return g.simulate(regions)
+
+
+def static_sim(power: PowerModel, frequencies, regions: list[Region],
+               f: float | None = None) -> GovernorStats:
+    f = f if f is not None else max(frequencies)
+    st = GovernorStats()
+    for r in regions:
+        t = power.region_time(r.duration_s, f, r.sensitivity)
+        st.energy_j += power.power(f) * t
+        st.time_s += t
+    return st

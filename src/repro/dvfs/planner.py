@@ -1,0 +1,56 @@
+"""Region classification for training/serving steps (COUNTDOWN-style,
+generalized with the *measured* switching latency).
+
+A train step decomposes into phases with different frequency sensitivity:
+  compute      fwd/bwd matmuls               sensitivity ~ 1.0
+  collective   grad all-reduce / all-gather  sensitivity ~ 0.15
+  memory       optimizer update, cache reads sensitivity ~ 0.2
+  host         data pipeline, checkpoints    sensitivity ~ 0.0
+
+``regions_from_cell`` derives the durations directly from a dry-run
+roofline cell (EXPERIMENTS.md #Dry-run), tying the governor to the actual
+compiled workload rather than hand-waved numbers.  The paper's 500 us
+short-region rule becomes device-relative: regions shorter than
+``min_region_factor x worst-case switching latency`` are never frequency-
+scaled (COUNTDOWN's Haswell lesson: re-requesting mid-transition leaves the
+clock undefined).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# frequency sensitivity of runtime per region kind.  Paper §III/[9,10]:
+# memory/collective-bound regions tolerate ~75% clocks with ~no runtime
+# impact => near-zero sensitivity; compute scales ~1/f.
+SENSITIVITY = {"compute": 1.0, "collective": 0.05, "memory": 0.05, "host": 0.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    kind: str                  # compute | collective | memory | host
+    duration_s: float          # at f_max
+
+    @property
+    def sensitivity(self) -> float:
+        return SENSITIVITY[self.kind]
+
+
+def regions_from_cell(cell: dict, *, host_fraction: float = 0.03) -> list[Region]:
+    """Build one step's region list from a dry-run JSON cell."""
+    r = cell["roofline"]
+    comp, mem, coll = r["compute_s"], r["memory_s"], r["collective_s"]
+    # memory term overlaps compute on real hardware; the exposed memory
+    # region is the excess over compute (optimizer/cache-bound tail)
+    mem_exposed = max(0.0, mem - comp)
+    regions = [Region("compute", comp)]
+    if mem_exposed > 0:
+        regions.append(Region("memory", mem_exposed))
+    if coll > 0:
+        regions.append(Region("collective", coll))
+    step = sum(x.duration_s for x in regions)
+    regions.append(Region("host", host_fraction * step))
+    return regions
+
+
+def steps_from_cell(cell: dict, n_steps: int, **kw) -> list[Region]:
+    return regions_from_cell(cell, **kw) * n_steps

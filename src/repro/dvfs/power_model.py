@@ -1,0 +1,51 @@
+"""Accelerator power/energy model for the governor's planning.
+
+P(f) = P_static + c * (f/f_max)^3 * P_dyn_max  (cubic dynamic power).
+Runtime scaling with frequency depends on the region's boundedness:
+compute-bound time ~ 1/f; memory/collective-bound time is nearly flat
+(the paper's §III observation that ~75% clocks trade ~0 runtime for real
+energy savings on memory-bound codes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    f_max_mhz: float
+    p_static_w: float = 80.0
+    p_dyn_max_w: float = 320.0
+
+    def power(self, f_mhz: float) -> float:
+        r = f_mhz / self.f_max_mhz
+        return self.p_static_w + self.p_dyn_max_w * r ** 3
+
+    def region_time(self, duration_at_fmax: float, f_mhz: float,
+                    sensitivity: float) -> float:
+        """sensitivity 1.0 = perfectly compute-bound (t ~ 1/f);
+        0.0 = fully memory/IO-bound (t flat)."""
+        r = self.f_max_mhz / f_mhz
+        return duration_at_fmax * (sensitivity * r + (1.0 - sensitivity))
+
+    def region_energy(self, duration_at_fmax: float, f_mhz: float,
+                      sensitivity: float) -> float:
+        return self.power(f_mhz) * self.region_time(duration_at_fmax, f_mhz,
+                                                    sensitivity)
+
+    def best_frequency(self, duration_at_fmax: float, sensitivity: float,
+                       frequencies, *, max_slowdown: float = 1.02) -> float:
+        """Energy-minimal frequency subject to a runtime constraint
+        (paper §III: 'no runtime extension' static-tuning constraint,
+        relaxed to max_slowdown)."""
+        t0 = self.region_time(duration_at_fmax, self.f_max_mhz, sensitivity)
+        best, best_e = self.f_max_mhz, self.region_energy(
+            duration_at_fmax, self.f_max_mhz, sensitivity)
+        for f in frequencies:
+            t = self.region_time(duration_at_fmax, f, sensitivity)
+            if t > max_slowdown * t0:
+                continue
+            e = self.region_energy(duration_at_fmax, f, sensitivity)
+            if e < best_e:
+                best, best_e = f, e
+        return best

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical compute layers:
+#   microbench       the paper's artificial iterative workload (per-core FMA
+#                    chain) — the measurement instrument itself
+#   flash_attention  blockwise causal attention (train/prefill hot spot)
+#   ssd              mamba2 intra-chunk SSD kernel
+# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper) and
+# ref.py (pure-jnp oracle); tests sweep shapes/dtypes with interpret=True.

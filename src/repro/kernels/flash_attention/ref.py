@@ -1,0 +1,6 @@
+"""Oracle: the O(S^2) naive attention from the model zoo."""
+from repro.models.layers import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    return naive_attention(q, k, v, causal=causal)

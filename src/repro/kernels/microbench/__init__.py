@@ -1,0 +1,2 @@
+from repro.kernels.microbench.ops import microbench
+from repro.kernels.microbench.ref import microbench_ref

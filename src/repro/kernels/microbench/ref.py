@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the microbench FMA chain."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def microbench_ref(x: jax.Array, *, n_iters: int = 64, unroll: int = 32) -> jax.Array:
+    c1 = jnp.float32(1.000000119)
+    c2 = jnp.float32(1e-7)
+
+    def iter_fn(_, a):
+        for _ in range(unroll):
+            a = a * c1 + c2
+        return a
+
+    return jax.lax.fori_loop(0, n_iters, iter_fn, x)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd.ops import ssd_chunk
+from repro.kernels.ssd.ref import ssd_chunk_ref

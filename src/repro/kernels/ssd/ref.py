@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the intra-chunk SSD computation (mirrors the masked
+einsum form in repro.models.ssm.ssd_ref's scan body)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, B, C, cs, dt):
+    """Same signature/layout as the kernel; returns (y_intra, S)."""
+    b, nc, h, q, p = x.shape
+    xf = x.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    csf = cs.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    idx = jnp.arange(q)
+    causal = idx[:, None] >= idx[None, :]
+    decay = jnp.where(causal[None, None, None],
+                      csf[..., :, None] - csf[..., None, :], -jnp.inf)
+    L = jnp.exp(decay)                                     # (b,nc,h,i,j)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)
+    att = cb[:, :, None] * L * dtf[..., None, :]
+    y = jnp.einsum("bchij,bchjp->bchip", att, xf)
+    w = jnp.exp(csf[..., -1:] - csf) * dtf                 # (b,nc,h,q)
+    S = jnp.einsum("bchj,bcjn,bchjp->bchpn", w, Bf, xf)
+    return y, S

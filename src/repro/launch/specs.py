@@ -1,0 +1,175 @@
+"""Build (fn, abstract args, in_shardings) for every (arch x shape x mesh)
+dry-run cell — ShapeDtypeStruct stand-ins only, no device allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.registry import model_module, decode_module
+from repro.optim import adamw
+from repro.parallel.sharding import make_env, param_shardings
+
+
+def batch_spec(env, b, *extra):
+    """Shard batch dim over the data axes when divisible, else replicate."""
+    if env.mesh is None:
+        return None
+    if b % env.dp == 0 and env.dp > 1:
+        d = env.data_axes if len(env.data_axes) > 1 else env.data_axes[0]
+        return NamedSharding(env.mesh, P(d, *extra))
+    return NamedSharding(env.mesh, P(None, *extra))
+
+
+def _rep(env):
+    return None if env.mesh is None else NamedSharding(env.mesh, P())
+
+
+@functools.lru_cache(maxsize=64)
+def _abstract_init_cached(cfg):
+    """(param ShapeDtypeStructs, logical axes) without allocating anything.
+
+    init runs under eval_shape; the axes tree (static python tuples) escapes
+    via closure side effect since tracers never touch it."""
+    mod = model_module(cfg)
+    box = {}
+
+    def f(k):
+        p, a = mod.init(k, cfg)
+        box["axes"] = a
+        return p
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, box["axes"]
+
+
+def abstract_init(cfg):
+    return _abstract_init_cached(cfg)
+
+
+def mod_axes(cfg):
+    return _abstract_init_cached(cfg)[1]
+
+
+def make_train_step(cfg, env, opt_cfg=adamw.AdamWConfig(), microbatches: int = 1,
+                    grad_compression: bool = False):
+    """grad_compression: bf16 gradients + error feedback before the
+    (cross-pod) reduction — opt_state must carry an "err" tree
+    (repro.optim.compression.init_error)."""
+    mod = model_module(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(p, batch, cfg, env))(params)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mbatch):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: mod.loss_fn(p, mbatch, cfg, env))(params)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        err = None
+        if grad_compression:
+            from repro.optim import compression
+            grads, err = compression.compress(grads, opt_state["err"])
+        opt_core = {k: v for k, v in opt_state.items() if k != "err"}
+        new_params, new_opt, gnorm = adamw.update(params, grads, opt_core,
+                                                  opt_cfg)
+        if err is not None:
+            new_opt["err"] = err
+        return loss, new_params, new_opt
+
+    return train_step
+
+
+def batch_struct(cfg, shape, for_train=True):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vlm.n_patches, cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encdec.n_frames, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def batch_shardings(cfg, shape, env):
+    b = shape.global_batch
+    sh = {"tokens": batch_spec(env, b, None)}
+    if cfg.family == "vlm":
+        sh["img_embeds"] = batch_spec(env, b, None, None)
+    if cfg.family == "encdec":
+        sh["enc_frames"] = batch_spec(env, b, None, None)
+    return sh
+
+
+def build_case(arch: str, shape_name: str, mesh, *, multi_pod=False,
+               microbatches: int = 1, fsdp: bool = True, smoke=False,
+               dp_only: bool = False, param_dtype: str | None = None):
+    """Returns dict(fn, args, in_shardings, donate, cfg, env, kind)."""
+    import dataclasses
+    cfg = get_config(arch, smoke=smoke)
+    if param_dtype is not None:
+        dt = {"fp8": jnp.float8_e4m3fn, "bf16": jnp.bfloat16,
+              "f32": jnp.float32}[param_dtype]
+        cfg = dataclasses.replace(cfg, param_dtype=dt)
+    shape = SHAPES[shape_name]
+    env = make_env(cfg, mesh, fsdp=fsdp, dp_only=dp_only)
+    mod = model_module(cfg)
+    dec = decode_module(cfg)
+
+    p_sds, axes = abstract_init(cfg)
+    p_sh = param_shardings(env, axes, p_sds)
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, env, microbatches=microbatches)
+        o_sds = jax.eval_shape(adamw.init, p_sds)
+        o_sh = {"m": p_sh, "v": p_sh, "step": _rep(env)}
+        args = (p_sds, o_sds, batch_struct(cfg, shape))
+        in_sh = (p_sh, o_sh, batch_shardings(cfg, shape, env))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        fn = lambda params, batch: dec.prefill(params, batch, cfg, env,
+                                               shape.seq_len)
+        args = (p_sds, batch_struct(cfg, shape, for_train=False))
+        in_sh = (p_sh, batch_shardings(cfg, shape, env))
+        donate = ()
+    else:  # decode
+        b = shape.global_batch
+        c_sds, c_axes = dec.cache_spec(cfg, b, shape.seq_len, env)
+
+        def cache_sharding(k):
+            ax = c_axes[k]
+            if b % env.dp != 0 or env.dp == 1:   # replicate non-divisible batch
+                ax = tuple(None if a == "batch" else a for a in ax)
+            return NamedSharding(env.mesh, env.spec_sized(ax, c_sds[k].shape))
+
+        c_sh = {k: (None if env.mesh is None else cache_sharding(k))
+                for k in c_sds}
+        fn = lambda params, cache, token, pos: dec.decode_step(
+            params, cache, token, pos, cfg, env)
+        args = (p_sds, c_sds,
+                jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_sh, c_sh, batch_spec(env, b, None), _rep(env))
+        donate = (1,)
+
+    return {"fn": fn, "args": args, "in_shardings": in_sh, "donate": donate,
+            "cfg": cfg, "env": env, "shape": shape}

@@ -1,0 +1,3 @@
+from repro.models import layers, lm, moe, mla, ssm, encdec
+
+__all__ = ["layers", "lm", "moe", "mla", "ssm", "encdec"]

@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv audio frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, n_frames, d_model).  The encoder
+is bidirectional; the decoder has causal self-attention + cross-attention.
+Positions: sinusoidal (encoder) / learned table (decoder) — whisper uses no
+RoPE (cfg.rope_fraction = 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _sinusoid(n, d):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(1, d // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def _enc_block_init(key, cfg):
+    ks = layers.split(key, 2)
+    p, a = {}, {}
+    p["attn"], a["attn"] = layers.attention_init(ks[0], cfg)
+    p["ffn"], a["ffn"] = layers.mlp_init(ks[1], cfg)
+    for n in ("ln1", "ln2"):
+        p[n] = jnp.ones((cfg.d_model,), cfg.param_dtype); a[n] = (None,)
+        p[n + "_b"] = jnp.zeros((cfg.d_model,), cfg.param_dtype); a[n + "_b"] = (None,)
+    return p, a
+
+
+def _dec_block_init(key, cfg):
+    ks = layers.split(key, 3)
+    p, a = {}, {}
+    p["self"], a["self"] = layers.attention_init(ks[0], cfg)
+    p["cross"], a["cross"] = layers.attention_init(ks[1], cfg)
+    p["ffn"], a["ffn"] = layers.mlp_init(ks[2], cfg)
+    for n in ("ln1", "ln2", "ln3"):
+        p[n] = jnp.ones((cfg.d_model,), cfg.param_dtype); a[n] = (None,)
+        p[n + "_b"] = jnp.zeros((cfg.d_model,), cfg.param_dtype); a[n + "_b"] = (None,)
+    return p, a
+
+
+def init(key, cfg):
+    ed = cfg.encdec
+    ks = layers.split(key, 5)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = layers.embed_init(ks[0], cfg)
+    params["pos_dec"] = (jax.random.normal(ks[1], (ed.max_dec_len, cfg.d_model))
+                         * 0.01).astype(cfg.param_dtype)
+    axes["pos_dec"] = (None, "embed")
+    from repro.models.lm import _stacked_init  # shared stacking helper
+    params["enc"], axes["enc"] = _stacked_init(
+        ks[2], ed.n_enc_layers, lambda k: _enc_block_init(k, cfg))
+    params["dec"], axes["dec"] = _stacked_init(
+        ks[3], cfg.n_layers, lambda k: _dec_block_init(k, cfg))
+    for n in ("ln_enc", "ln_f"):
+        params[n] = jnp.ones((cfg.d_model,), cfg.param_dtype); axes[n] = (None,)
+        params[n + "_b"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        axes[n + "_b"] = (None,)
+    return params, axes
+
+
+# --------------------------------------------------------------------------- #
+# encoder
+# --------------------------------------------------------------------------- #
+def encode(params, frames, cfg, env):
+    """frames: (B, F, D) precomputed embeddings (stub frontend)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cfg.compute_dtype)[None]
+    x = env.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    def body(carry, p):
+        h = carry
+        hh = layers.layer_norm(h, p["ln1"], p["ln1_b"])
+        q, k, v = layers.qkv_project(p["attn"], hh, cfg, positions, env)
+        att = layers.chunked_attention(q, k, v, causal=False,
+                                       kv_chunk=cfg.attn_kv_chunk)
+        h = h + layers.attn_output(p["attn"], att, cfg)
+        hh = layers.layer_norm(h, p["ln2"], p["ln2_b"])
+        h = env.constrain(h + layers.mlp_apply(p["ffn"], hh, cfg),
+                          ("batch", "seq", None))
+        return h, None
+
+    fn = jax.checkpoint(body) if env.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc"])
+    return layers.layer_norm(x, params["ln_enc"], params["ln_enc_b"])
+
+
+# --------------------------------------------------------------------------- #
+# decoder blocks
+# --------------------------------------------------------------------------- #
+def _dec_block(p, x, enc_out, cfg, env, positions, *, self_kv=None, pos=None):
+    """One decoder layer.  Training/prefill when self_kv is None; decode when
+    (kc, vc) caches are given (returns updated caches)."""
+    hh = layers.layer_norm(x, p["ln1"], p["ln1_b"])
+    q, k, v = layers.qkv_project(p["self"], hh, cfg, positions, env)
+    new_kv = None
+    if self_kv is None:
+        att = layers.chunked_attention(q, k, v, causal=True,
+                                       kv_chunk=cfg.attn_kv_chunk)
+        new_kv = (k, v)
+    else:
+        kc, vc = self_kv
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        att = layers.decode_attention(q, kc, vc, pos + 1)
+        new_kv = (kc, vc)
+    x = x + layers.attn_output(p["self"], att, cfg)
+
+    hh = layers.layer_norm(x, p["ln2"], p["ln2_b"])
+    cd = cfg.compute_dtype
+    qx = jnp.einsum("bsd,dhk->bshk", hh, p["cross"]["wq"].astype(cd))
+    kx = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(cd))
+    vx = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(cd))
+    xatt = layers.chunked_attention(qx, kx, vx, causal=False,
+                                    kv_chunk=cfg.attn_kv_chunk)
+    x = x + layers.attn_output(p["cross"], xatt, cfg)
+
+    hh = layers.layer_norm(x, p["ln3"], p["ln3_b"])
+    x = env.constrain(x + layers.mlp_apply(p["ffn"], hh, cfg),
+                      ("batch", None, None))
+    return x, new_kv
+
+
+def forward(params, batch, cfg, env):
+    """batch: dict(tokens (B,S), enc_frames (B,F,D)) -> (logits, aux)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    enc_out = encode(params, batch["enc_frames"], cfg, env)
+    x = layers.embed_lookup(params["embed"], tokens, cfg)
+    x = x + params["pos_dec"][:s].astype(cfg.compute_dtype)[None]
+    x = env.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, p):
+        h, _ = carry
+        h, _kv = _dec_block(p, h, enc_out, cfg, env, positions)
+        return (h, jnp.float32(0)), None
+
+    fn = jax.checkpoint(body) if env.remat else body
+    (x, _), _ = jax.lax.scan(fn, (x, jnp.float32(0)), params["dec"])
+    x = layers.layer_norm(x, params["ln_f"], params["ln_f_b"])
+    logits = layers.unembed(params["embed"], x, cfg)
+    return env.constrain(logits, ("batch", None, "vocab")), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg, env):
+    logits, _ = forward(params, batch, cfg, env)
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def cache_spec(cfg, batch, max_len, env=None):
+    ed = cfg.encdec
+    cd = cfg.compute_dtype
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+    ck = (cfg.n_layers, batch, ed.n_frames, cfg.n_kv, cfg.head_dim)
+    ax = (None, "batch", None, "kv_heads", None)
+    shapes = {
+        "k": jax.ShapeDtypeStruct(kv, cd), "v": jax.ShapeDtypeStruct(kv, cd),
+        "enc_k": jax.ShapeDtypeStruct(ck, cd), "enc_v": jax.ShapeDtypeStruct(ck, cd),
+    }
+    axes = {"k": ax, "v": ax, "enc_k": ax, "enc_v": ax}
+    return shapes, axes
+
+
+def prefill(params, batch, cfg, env, max_len):
+    """Encode + run decoder context; cache = self KV + precomputed cross KV."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    enc_out = encode(params, batch["enc_frames"], cfg, env)
+    x = layers.embed_lookup(params["embed"], tokens, cfg)
+    x = x + params["pos_dec"][:s].astype(cfg.compute_dtype)[None]
+    x = env.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cd = cfg.compute_dtype
+
+    def body(h, p):
+        h, (k, v) = _dec_block(p, h, enc_out, cfg, env, positions)
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(cd))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(cd))
+        pad = max_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, (k, v, kx, vx)
+
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x, params["dec"])
+    cache = {"k": ks, "v": vs, "enc_k": kxs, "enc_v": vxs}
+    x = layers.layer_norm(x[:, -1:], params["ln_f"], params["ln_f_b"])
+    logits = layers.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, token, pos, cfg, env):
+    b = token.shape[0]
+    cd = cfg.compute_dtype
+    x = layers.embed_lookup(params["embed"], token, cfg)
+    x = x + jax.lax.dynamic_slice(params["pos_dec"], (pos, 0),
+                                  (1, cfg.d_model)).astype(cd)[None]
+    x = env.constrain(x, ("batch", "seq", None))
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(h, inp):
+        p, kc, vc, kx, vx = inp
+        hh = layers.layer_norm(h, p["ln1"], p["ln1_b"])
+        q, k, v = layers.qkv_project(p["self"], hh, cfg, positions, env)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        att = layers.decode_attention(q, kc, vc, pos + 1)
+        h = h + layers.attn_output(p["self"], att, cfg)
+        hh = layers.layer_norm(h, p["ln2"], p["ln2_b"])
+        qx = jnp.einsum("bsd,dhk->bshk", hh, p["cross"]["wq"].astype(cd))
+        xatt = layers.decode_attention(qx, kx, vx, kx.shape[1])
+        h = h + layers.attn_output(p["cross"], xatt, cfg)
+        hh = layers.layer_norm(h, p["ln3"], p["ln3_b"])
+        h = h + layers.mlp_apply(p["ffn"], hh, cfg)
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["enc_k"], cache["enc_v"]))
+    cache = dict(cache, k=ks, v=vs)
+    x = layers.layer_norm(x, params["ln_f"], params["ln_f_b"])
+    logits = layers.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, cache

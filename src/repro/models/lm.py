@@ -1,0 +1,272 @@
+"""Generic decoder-only LM covering the dense / MoE / MLA / SSM / hybrid /
+VLM families, with scan-over-layers (stacked params), remat, and the
+train / prefill / decode entry points the launcher lowers.
+
+Layer topology per family (cfg.family):
+  dense   : [attn+mlp] * L                              (llama3/nemotron/chatglm3/qwen3/pixtral)
+  moe     : [attn+dense-mlp] + [attn+moe] * (L-1)       (deepseek-moe-16b)
+  mla_moe : [mla+dense-mlp] + [mla+moe] * (L-1)         (deepseek-v2-236b)
+  ssm     : [mamba2] * L                                (mamba2-130m)
+  hybrid  : 3 global-attn layers {0, L/2, L-1} + sliding-window layers,
+            each = (attn || ssm) + mlp, 128 meta tokens (hymba-1.5b)
+  vlm     : dense with image-patch prefix embeddings    (pixtral-12b)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mla as mla_mod, moe as moe_mod, ssm as ssm_mod
+
+
+# --------------------------------------------------------------------------- #
+# per-layer blocks
+# --------------------------------------------------------------------------- #
+def _attn_block_init(key, cfg, use_moe):
+    ks = layers.split(key, 2)
+    p, a = {}, {}
+    if cfg.family == "mla_moe":
+        p["attn"], a["attn"] = mla_mod.mla_init(ks[0], cfg)
+    else:
+        p["attn"], a["attn"] = layers.attention_init(ks[0], cfg)
+    if use_moe:
+        p["ffn"], a["ffn"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["ffn"], a["ffn"] = layers.mlp_init(ks[1], cfg)
+    p["ln1"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["ln1"] = (None,)
+    p["ln2"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["ln2"] = (None,)
+    return p, a
+
+
+def _attn_block_apply(p, x, cfg, env, positions, use_moe):
+    h = layers.rms_norm(x, p["ln1"])
+    if cfg.family == "mla_moe":
+        att, _ = mla_mod.mla_forward(p["attn"], h, cfg, env, positions)
+    else:
+        q, k, v = layers.qkv_project(p["attn"], h, cfg, positions, env)
+        att = layers.chunked_attention(q, k, v, causal=True,
+                                       kv_chunk=cfg.attn_kv_chunk)
+        att = layers.attn_output(p["attn"], att, cfg)
+    x = x + att
+    h = layers.rms_norm(x, p["ln2"])
+    if use_moe:
+        f, aux = moe_mod.moe_apply(p["ffn"], h, cfg, env)
+    else:
+        f, aux = layers.mlp_apply(p["ffn"], h, cfg), jnp.float32(0)
+    x = env.constrain(x + f, ("batch", "seq", None))
+    return x, aux
+
+
+def _ssm_block_init(key, cfg):
+    p, a = {}, {}
+    p["mix"], a["mix"] = ssm_mod.ssm_init(key, cfg)
+    p["ln"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["ln"] = (None,)
+    return p, a
+
+
+def _ssm_block_apply(p, x, cfg, env):
+    h = layers.rms_norm(x, p["ln"])
+    y, _ = ssm_mod.ssm_forward(p["mix"], h, cfg, env)
+    return env.constrain(x + y, ("batch", "seq", None)), jnp.float32(0)
+
+
+def _hybrid_block_init(key, cfg):
+    ks = layers.split(key, 3)
+    p, a = {}, {}
+    p["attn"], a["attn"] = layers.attention_init(ks[0], cfg)
+    p["mix"], a["mix"] = ssm_mod.ssm_init(ks[1], cfg)
+    p["ffn"], a["ffn"] = layers.mlp_init(ks[2], cfg)
+    p["ln1"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["ln1"] = (None,)
+    p["ln2"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["ln2"] = (None,)
+    p["na"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["na"] = (None,)
+    p["ns"] = jnp.ones((cfg.d_model,), cfg.param_dtype); a["ns"] = (None,)
+    p["beta"] = jnp.ones((2,), jnp.float32); a["beta"] = (None,)
+    return p, a
+
+
+def _hybrid_block_apply(p, x, cfg, env, positions, *, window):
+    """Hymba: parallel attention + SSM heads, outputs normed and averaged.
+
+    For window layers the 128 meta tokens (sequence prefix) stay globally
+    visible: meta queries run causal attention among themselves, sequence
+    queries run sliding-window attention with the meta K/V as an
+    always-visible prefix.
+    """
+    h = layers.rms_norm(x, p["ln1"])
+    q, k, v = layers.qkv_project(p["attn"], h, cfg, positions, env)
+    if window is None:
+        att = layers.chunked_attention(q, k, v, causal=True,
+                                       kv_chunk=cfg.attn_kv_chunk)
+    else:
+        nm = cfg.hybrid.n_meta
+        att_meta = layers.naive_attention(q[:, :nm], k[:, :nm], v[:, :nm],
+                                          causal=True)
+        att_seq = layers.windowed_attention(
+            q[:, nm:], k[:, nm:], v[:, nm:], window=window,
+            q_chunk=cfg.attn_q_chunk, q_pos0=nm,
+            prefix_kv=(k[:, :nm], v[:, :nm]))
+        att = jnp.concatenate([att_meta, att_seq], axis=1)
+    att = layers.attn_output(p["attn"], att, cfg)
+    sso, _ = ssm_mod.ssm_forward(p["mix"], h, cfg, env)
+    b = p["beta"]
+    y = (0.5 * (b[0] * layers.rms_norm(att, p["na"])
+                + b[1] * layers.rms_norm(sso, p["ns"]))).astype(cfg.compute_dtype)
+    x = x + y
+    h2 = layers.rms_norm(x, p["ln2"])
+    x = env.constrain(x + layers.mlp_apply(p["ffn"], h2, cfg),
+                      ("batch", "seq", None))
+    return x, jnp.float32(0)
+
+
+# --------------------------------------------------------------------------- #
+# model init
+# --------------------------------------------------------------------------- #
+def _stacked_init(key, n, init_fn):
+    """Init n layers and stack every leaf along axis 0 (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    p0, a0 = init_fn(keys[0])
+    if n == 1:
+        return jax.tree.map(lambda x: x[None], p0), _stack_axes(a0)
+    ps = [p0] + [init_fn(k)[0] for k in keys[1:]]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ps)
+    return stacked, _stack_axes(a0)
+
+
+def _stack_axes(axes_tree):
+    return jax.tree.map(
+        lambda t: (None, *t),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def init(key, cfg):
+    ks = layers.split(key, 6)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = layers.embed_init(ks[0], cfg)
+    params["ln_f"] = jnp.ones((cfg.d_model,), cfg.param_dtype); axes["ln_f"] = (None,)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"], axes["blocks"] = _stacked_init(
+            ks[1], cfg.n_layers, lambda k: _attn_block_init(k, cfg, False))
+    elif fam in ("moe", "mla_moe"):
+        params["block0"], axes["block0"] = _attn_block_init(ks[1], cfg, False)
+        params["blocks"], axes["blocks"] = _stacked_init(
+            ks[2], cfg.n_layers - 1, lambda k: _attn_block_init(k, cfg, True))
+    elif fam == "ssm":
+        params["blocks"], axes["blocks"] = _stacked_init(
+            ks[1], cfg.n_layers, lambda k: _ssm_block_init(k, cfg))
+    elif fam == "hybrid":
+        hy = cfg.hybrid
+        params["meta"] = (jax.random.normal(ks[3], (hy.n_meta, cfg.d_model))
+                          * 0.02).astype(cfg.param_dtype)
+        axes["meta"] = (None, "embed")
+        g = _global_layer_ids(cfg)
+        gkeys = layers.split(ks[1], len(g))
+        for i, gid in enumerate(g):
+            params[f"global{i}"], axes[f"global{i}"] = _hybrid_block_init(gkeys[i], cfg)
+        seg_a, seg_b = _hybrid_seg_sizes(cfg)
+        params["win_a"], axes["win_a"] = _stacked_init(
+            ks[2], seg_a, lambda k: _hybrid_block_init(k, cfg))
+        params["win_b"], axes["win_b"] = _stacked_init(
+            ks[4], seg_b, lambda k: _hybrid_block_init(k, cfg))
+    else:
+        raise ValueError(fam)
+    return params, axes
+
+
+def _global_layer_ids(cfg):
+    return (0, cfg.n_layers // 2, cfg.n_layers - 1)
+
+
+def _hybrid_seg_sizes(cfg):
+    g = _global_layer_ids(cfg)
+    seg_a = g[1] - g[0] - 1
+    seg_b = cfg.n_layers - 3 - seg_a
+    return seg_a, seg_b
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def _scan_blocks(params_stacked, x, body, env):
+    def f(carry, p_slice):
+        h, aux = carry
+        y, a = body(p_slice, h)
+        return (y, aux + a), None
+
+    fn = jax.checkpoint(f) if env.remat else f
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0)), params_stacked)
+    return x, aux
+
+
+def forward(params, batch, cfg, env):
+    """batch: dict(tokens=(B,S) int32 [, img_embeds=(B,P,D)]).
+
+    Returns (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = layers.embed_lookup(params["embed"], tokens, cfg)
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(cfg.compute_dtype)
+        np_ = img.shape[1]
+        x = jnp.concatenate([img, x[:, np_:]], axis=1)
+    x = env.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    aux = jnp.float32(0)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        body = lambda p, h: _attn_block_apply(p, h, cfg, env, positions, False)
+        x, aux = _scan_blocks(params["blocks"], x, body, env)
+    elif fam in ("moe", "mla_moe"):
+        x, a0 = _attn_block_apply(params["block0"], x, cfg, env, positions, False)
+        body = lambda p, h: _attn_block_apply(p, h, cfg, env, positions, True)
+        x, aux = _scan_blocks(params["blocks"], x, body, env)
+        aux = aux + a0
+    elif fam == "ssm":
+        body = lambda p, h: _ssm_block_apply(p, h, cfg, env)
+        x, aux = _scan_blocks(params["blocks"], x, body, env)
+    elif fam == "hybrid":
+        hy = cfg.hybrid
+        meta = jnp.broadcast_to(params["meta"].astype(cfg.compute_dtype)[None],
+                                (b, hy.n_meta, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+        sm = s + hy.n_meta
+        positions = jnp.broadcast_to(jnp.arange(sm, dtype=jnp.int32)[None], (b, sm))
+        gb = partial(_hybrid_block_apply, cfg=cfg, env=env, positions=positions,
+                     window=None)
+        wb = lambda p, h: _hybrid_block_apply(p, h, cfg, env, positions,
+                                              window=hy.window)
+        x, _ = gb(params["global0"], x)
+        x, _ = _scan_blocks(params["win_a"], x, wb, env)
+        x, _ = gb(params["global1"], x)
+        x, _ = _scan_blocks(params["win_b"], x, wb, env)
+        x, _ = gb(params["global2"], x)
+        x = x[:, hy.n_meta:]
+    else:
+        raise ValueError(fam)
+
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = layers.unembed(params["embed"], x, cfg)
+    logits = env.constrain(logits, ("batch", None, "vocab"))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, env):
+    """Next-token cross-entropy (image/meta positions masked)."""
+    logits, aux = forward(params, batch, cfg, env)
+    tokens = batch["tokens"]
+    labels = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = jnp.ones_like(labels, jnp.float32)
+    if cfg.family == "vlm":
+        np_ = cfg.vlm.n_patches
+        mask = mask.at[:, : np_].set(0.0)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + cfg.aux_loss_weight * aux

@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+KV is down-projected to a kv_lora_rank latent (+ a decoupled shared rope
+head); at decode time attention runs *absorbed* directly in latent space, so
+the per-token cache is (kv_lora + dh_rope) floats — replicated over the
+model axis (it is shared by all heads) and sharded over data (batch).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def mla_init(key, cfg):
+    a = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    ks = layers.split(key, 8)
+    params, axes = {}, {}
+    # queries (optionally low-rank)
+    if a.q_lora:
+        params["wdq"], axes["wdq"] = layers.dense_init(ks[0], (d, a.q_lora), ("embed", None), dt)
+        params["q_norm"] = jnp.ones((a.q_lora,), dt); axes["q_norm"] = (None,)
+        params["wuq"], axes["wuq"] = layers.dense_init(
+            ks[1], (a.q_lora, h, a.dh_nope + a.dh_rope), (None, "heads", None), dt)
+    else:
+        params["wq"], axes["wq"] = layers.dense_init(
+            ks[1], (d, h, a.dh_nope + a.dh_rope), ("embed", "heads", None), dt)
+    # compressed KV + decoupled rope key
+    params["wdkv"], axes["wdkv"] = layers.dense_init(
+        ks[2], (d, a.kv_lora + a.dh_rope), ("embed", None), dt)
+    params["kv_norm"] = jnp.ones((a.kv_lora,), dt); axes["kv_norm"] = (None,)
+    params["wuk"], axes["wuk"] = layers.dense_init(
+        ks[3], (a.kv_lora, h, a.dh_nope), (None, "heads", None), dt)
+    params["wuv"], axes["wuv"] = layers.dense_init(
+        ks[4], (a.kv_lora, h, a.dh_v), (None, "heads", None), dt)
+    params["wo"], axes["wo"] = layers.dense_init(
+        ks[5], (h, a.dh_v, d), ("heads", None, "embed"), dt)
+    return params, axes
+
+
+def _queries(p, x, cfg, positions):
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    if a.q_lora:
+        qd = jnp.einsum("bsd,dr->bsr", x, p["wdq"].astype(cd))
+        qd = layers.rms_norm(qd, p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", qd, p["wuq"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., : a.dh_nope], q[..., a.dh_nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p, x, cfg, positions):
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(cd))
+    c_lat, k_rope = ckv[..., : a.kv_lora], ckv[..., a.kv_lora:]
+    c_lat = layers.rms_norm(c_lat, p["kv_norm"])
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_lat, k_rope                      # (B,S,r), (B,S,dh_rope)
+
+
+def mla_forward(p, x, cfg, env, positions):
+    """Training / prefill path: expand latents to per-head K/V, flash attend."""
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_lat, k_rope = _latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_lat, p["wuk"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_lat, p["wuv"].astype(cd))
+    h = cfg.n_heads
+    q = jnp.concatenate([q_nope, jnp.broadcast_to(q_rope, q_rope.shape)], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], a.dh_rope))],
+        axis=-1)
+    # per-head K here (kv == h): ordinary causal flash attention
+    out = layers.chunked_attention(q, k, v, causal=True, kv_chunk=cfg.attn_kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)), (c_lat, k_rope)
+
+
+def mla_decode(p, x, cache, pos, cfg, env):
+    """Absorbed decode: scores in latent space against the compressed cache.
+
+    cache: dict(c_lat=(B,S,r), k_rope=(B,S,dh_rope)); x: (B,1,D)."""
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    positions = pos[None, None] if pos.ndim == 0 else pos
+    q_nope, q_rope = _queries(p, x, cfg, positions)           # (B,1,H,*)
+    c_new, kr_new = _latent(p, x, cfg, positions)             # (B,1,r)
+    c_lat = jax.lax.dynamic_update_slice(cache["c_lat"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+
+    # absorb W_UK into q:  (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"].astype(cd))
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c_lat)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    scale = 1.0 / math.sqrt(a.dh_nope + a.dh_rope)
+    s = (s_lat + s_rope).astype(jnp.float32) * scale          # (B,H,1,S)
+    mask = jnp.arange(c_lat.shape[1]) <= pos
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(cd)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, c_lat)            # (B,1,H,r)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"].astype(cd))
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+    return y, {"c_lat": c_lat, "k_rope": k_rope}
+
+
+def mla_cache_shape(cfg, batch, max_len):
+    a = cfg.mla
+    return {
+        "c_lat": ((batch, max_len, a.kv_lora), ("batch", None, None)),
+        "k_rope": ((batch, max_len, a.dh_rope), ("batch", None, None)),
+    }

@@ -1,0 +1,3 @@
+from repro.optim import adamw, schedules
+
+__all__ = ["adamw", "schedules"]

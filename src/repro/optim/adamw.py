@@ -1,0 +1,72 @@
+"""AdamW with fp32 moments over (possibly bf16) params.
+
+Moments inherit each parameter's sharding (2-D FSDP+TP via the logical-axes
+tree), so optimizer state scales with the full chip count — the ZeRO-style
+partitioning falls out of the sharding annotations rather than a separate
+code path.  Production note (DESIGN.md): bf16 params + fp32 moments; master
+fp32 copies are intentionally omitted to fit the 16 GB/chip envelope at
+236 B params — on real hardware pair this with stochastic rounding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_axes(param_axes):
+    """Logical axes for the optimizer state (moments mirror params)."""
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mh = m_new / bc1
+        vh = v_new / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    p_new = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    m_new = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    v_new = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return p_new, {"m": m_new, "v": v_new, "step": step}, gnorm

@@ -1,0 +1,34 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for cross-pod traffic).
+
+Gradients are quantized to bf16 before the (cross-pod) reduction; the
+quantization residual is accumulated locally in fp32 and added back the
+next step (error feedback), which keeps the long-run bias at zero — the
+standard guarantee that makes compressed SGD/Adam converge like the
+uncompressed baseline.  Halves the "pod"-axis all-reduce bytes in the
+multi-pod mesh (the slowest link in a 2x16x16 deployment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, err, dtype=jnp.bfloat16):
+    """(compressed grads in `dtype`, new error state).
+
+    compressed = cast(g + err); err' = (g + err) - compressed."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q = corrected.astype(dtype)
+        return q, corrected - q.astype(jnp.float32)
+
+    out = jax.tree.map(one, grads, err)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    q = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_err = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    return q, new_err

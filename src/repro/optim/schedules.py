@@ -1,0 +1,17 @@
+"""LR schedules (host-side floats — cheap, steppable, checkpointable)."""
+from __future__ import annotations
+
+import math
+
+
+def cosine_with_warmup(step: int, *, base_lr: float = 1.0,
+                       warmup: int = 100, total: int = 10000,
+                       min_ratio: float = 0.1) -> float:
+    if step < warmup:
+        return base_lr * (step + 1) / warmup
+    t = min(1.0, (step - warmup) / max(1, total - warmup))
+    return base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + math.cos(math.pi * t)))
+
+
+def constant(step: int, *, base_lr: float = 1.0) -> float:
+    return base_lr

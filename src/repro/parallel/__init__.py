@@ -1,0 +1,4 @@
+from repro.parallel.sharding import MeshEnv, logical_to_spec, param_shardings
+from repro.parallel.collectives import parse_collective_bytes
+
+__all__ = ["MeshEnv", "logical_to_spec", "param_shardings", "parse_collective_bytes"]

@@ -1,0 +1,117 @@
+"""Parse collective-communication traffic out of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so the roofline's
+collective term is derived here: scan the compiled HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, decode each op's result shape, and convert to *per-chip link bytes*
+using the standard ring-algorithm factors:
+
+  all-reduce       2 * s * (n-1)/n   (reduce-scatter + all-gather)
+  all-gather       s_out * (n-1)/n
+  reduce-scatter   s_in  * (n-1)/n   (~= s_out * (n-1))
+  all-to-all       s * (n-1)/n
+  collective-permute  s
+
+where s is the (per-shard) tensor size in the SPMD program.  n is read from
+the op's replica_groups when present, else the mesh size is used.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.  %all-gather.3 = bf16[4,1024,512] all-gather(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_txt):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    per_chip_link_bytes: float = 0.0          # ring-factor adjusted
+    raw_bytes: float = 0.0                    # sum of result sizes
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "per_chip_link_bytes": self.per_chip_link_bytes,
+            "raw_bytes": self.raw_bytes,
+            "count": self.count,
+            "by_kind": self.by_kind,
+        }
+
+
+def _group_size(line: str, default_n: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, len([t for t in first.split(",") if t.strip() != ""]))
+    return default_n
+
+
+def parse_collective_bytes(hlo_text: str, mesh_size: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_started: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        # avoid double counting async start/done pairs: count "-start" once,
+        # skip the matching "-done" (whose operand is the start tuple).
+        if "-done(" in line:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_txt)
+        if size == 0:
+            continue
+        n = _group_size(line, mesh_size)
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            link = 2.0 * size * ring
+        elif kind == "all-gather":
+            link = size * ring            # size is the gathered output
+        elif kind == "reduce-scatter":
+            link = size * (n - 1)         # size is the scattered output
+        elif kind == "all-to-all":
+            link = size * ring
+        else:                             # collective-permute
+            link = float(size)
+        stats.per_chip_link_bytes += link
+        stats.raw_bytes += size
+        stats.count += 1
+        k = stats.by_kind.setdefault(kind, {"count": 0, "link_bytes": 0.0})
+        k["count"] += 1
+        k["link_bytes"] += link
+    return stats

@@ -1,0 +1,98 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e-class target).
+
+  compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+  memory     = HLO_bytes_per_chip / HBM_BW
+  collective = collective_link_bytes_per_chip / ICI_BW
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (per generated/prefilled token), with
+N = active params for MoE.  MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy
+waste (a ratio of 0.75 under full remat is expected: fwd+2bwd+refwd).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-chip serialization proxy)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_total: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (assumes
+        perfect overlap of compute, HBM and ICI)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-optimistic step time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops_total / (t * self.chips * PEAK_FLOPS)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops_total": self.model_flops_total,
+            "model_flops_ratio": self.model_flops_ratio,
+            "mfu_roofline": self.mfu,
+            "step_time_s": self.step_time_s,
+            "chips": self.chips,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6 N D for train, 2 N D for prefill/decode tokens (matmul convention;
+    attention score/V FLOPs excluded by definition)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def terms_from_analysis(cost: dict, coll_link_bytes: float, chips: int,
+                        mflops: float) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll_link_bytes / ICI_BW,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=coll_link_bytes,
+        model_flops_total=mflops,
+        chips=chips,
+    )

@@ -1,0 +1,6 @@
+from repro.runtime.train_loop import TrainConfig, train
+from repro.runtime.serve_loop import ServeConfig, serve
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerPolicy
+
+__all__ = ["TrainConfig", "train", "ServeConfig", "serve",
+           "HeartbeatMonitor", "StragglerPolicy"]

@@ -1,0 +1,124 @@
+"""Continuous batching for serving: a slot-based scheduler that admits new
+requests into finished slots between decode steps (vLLM-style iteration-
+level scheduling), with per-slot position tracking and a governor hook —
+decode is the memory-bound region the paper's §III downclocking targets.
+
+One fixed-shape decode step serves all active slots; finished/empty slots
+carry a pad token and are masked out of the accounting.  This keeps a
+single compiled decode_step regardless of arrival pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import decode_module, model_module
+from repro.data.synthetic import make_batch
+from repro.configs.shapes import ShapeSpec
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray            # (ctx,) int32
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    steps: int = 0
+    completed: int = 0
+    admitted: int = 0
+    slot_busy_fraction: float = 0.0
+
+
+class ContinuousBatcher:
+    """Fixed slot count; one shared fixed-shape KV cache."""
+
+    def __init__(self, cfg, env, params, *, slots: int, max_len: int,
+                 ctx_len: int):
+        self.cfg, self.env, self.params = cfg, env, params
+        self.slots = slots
+        self.max_len = max_len
+        self.ctx = ctx_len
+        dec = decode_module(cfg)
+        self._dec = dec
+        self._prefill = jax.jit(
+            lambda p, b: dec.prefill(p, b, cfg, env, max_len))
+        self._step = jax.jit(
+            lambda p, c, t, i: dec.decode_step(p, c, t, i, cfg, env),
+            donate_argnums=(1,))
+        self.cache = None
+        self.slot_req: list = [None] * slots
+        self.pos = ctx_len                     # shared position cursor
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------------------ #
+    def _admit(self, queue: list) -> None:
+        fresh = []
+        for s in range(self.slots):
+            if self.slot_req[s] is None and queue:
+                self.slot_req[s] = queue.pop(0)
+                self.stats.admitted += 1
+                fresh.append(s)
+        # (re)prefill when slots changed; a production engine would do
+        # per-slot prefill — with one shared fixed-shape cache we batch all
+        # current prompts together, which keeps ONE compiled prefill
+        if fresh:
+            prompts = []
+            for s in range(self.slots):
+                r = self.slot_req[s]
+                prompts.append(r.prompt if r is not None
+                               else jnp.zeros((self.ctx,), jnp.int32))
+            batch = {"tokens": jnp.stack(prompts)}
+            if self.cfg.family == "vlm":
+                batch["img_embeds"] = jnp.zeros(
+                    (self.slots, self.cfg.vlm.n_patches, self.cfg.d_model),
+                    self.cfg.compute_dtype)
+            if self.cfg.family == "encdec":
+                batch["enc_frames"] = jnp.zeros(
+                    (self.slots, self.cfg.encdec.n_frames, self.cfg.d_model),
+                    self.cfg.compute_dtype)
+            logits, self.cache = self._prefill(self.params, batch)
+            self._next = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            self.pos = self.ctx
+
+    def run(self, requests: list[Request], max_steps: int = 10_000,
+            governor=None, device=None) -> SchedulerStats:
+        queue = list(requests)
+        busy_acc = 0.0
+        while (queue or any(r is not None for r in self.slot_req)) \
+                and self.stats.steps < max_steps and self.pos < self.max_len - 1:
+            self._admit(queue)
+            tok = self._next
+            logits, self.cache = self._step(self.params, self.cache, tok,
+                                            jnp.int32(self.pos))
+            self._next = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            self.pos += 1
+            self.stats.steps += 1
+            busy = 0
+            for s in range(self.slots):
+                r = self.slot_req[s]
+                if r is None:
+                    continue
+                busy += 1
+                r.generated.append(int(tok[s, 0]))
+                if len(r.generated) >= r.max_new:
+                    r.done = True
+                    self.stats.completed += 1
+                    self.slot_req[s] = None
+            busy_acc += busy / self.slots
+            if governor is not None and device is not None:
+                from repro.dvfs.planner import Region
+                tgt, _ = governor.pick_target(Region("memory", 0.01),
+                                              getattr(governor, "_f_cur",
+                                                      max(governor.freqs)))
+                if tgt != getattr(governor, "_f_cur", None):
+                    device.set_frequency(tgt)
+                governor._f_cur = tgt
+        self.stats.slot_busy_fraction = busy_acc / max(1, self.stats.steps)
+        return self.stats

@@ -1,0 +1,100 @@
+"""Fault tolerance: heartbeats, straggler detection/mitigation, elastic
+re-mesh, and a retrying step executor.
+
+On a real multi-pod job these hooks bind to the cluster control plane; here
+they are exercised against simulated failure injectors (tests) with the
+same interfaces:
+
+  HeartbeatMonitor   per-worker liveness from step-completion stamps;
+                     a worker silent for > timeout is declared dead ->
+                     the driver triggers elastic_remesh + checkpoint restore
+  StragglerPolicy    EWMA of per-step durations; a step slower than
+                     ratio x EWMA marks the step degraded; after `budget`
+                     consecutive degraded steps the driver requests the
+                     slow worker's eviction (descheduling beats waiting —
+                     the standard large-fleet mitigation)
+  retry_step         transient-failure wrapper (preemption, ICI hiccup):
+                     re-executes a pure step function; correctness is free
+                     because steps are pure (params, opt, batch) -> ...
+  elastic_remesh     rebuild the mesh from the surviving device list and
+                     recompute shardings (restore re-shards the state)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: int, timeout_s: float = 60.0,
+                 clock=time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        now = clock()
+        self.last = {w: now for w in range(workers)}
+
+    def beat(self, worker: int, t: float | None = None) -> None:
+        self.last[worker] = self.clock() if t is None else t
+
+    def dead(self, now: float | None = None) -> list[int]:
+        now = self.clock() if now is None else now
+        return [w for w, t in self.last.items() if now - t > self.timeout]
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    ratio: float = 1.8          # step slower than ratio x EWMA = degraded
+    alpha: float = 0.2
+    budget: int = 5             # consecutive degraded steps before eviction
+    _ewma: float = 0.0
+    _degraded: int = 0
+
+    def observe(self, step_time_s: float) -> str:
+        """Returns ok | degraded | evict."""
+        if self._ewma == 0.0:
+            self._ewma = step_time_s
+            return "ok"
+        verdict = "ok"
+        if step_time_s > self.ratio * self._ewma:
+            self._degraded += 1
+            verdict = "evict" if self._degraded >= self.budget else "degraded"
+        else:
+            self._degraded = 0
+            # only fold healthy steps into the EWMA (stragglers would poison it)
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * step_time_s
+        return verdict
+
+
+def retry_step(fn, *args, retries: int = 3, on_error=None):
+    last = None
+    for i in range(retries):
+        try:
+            return fn(*args)
+        except Exception as e:      # noqa: BLE001 — deliberate catch-all boundary
+            last = e
+            if on_error is not None:
+                on_error(i, e)
+    raise last
+
+
+def elastic_remesh(devices=None, *, axis_names=("data", "model")):
+    """Rebuild the largest usable mesh from the surviving devices.
+
+    Keeps the model axis as large as possible (TP degree preserved) and
+    shrinks the data axis; returns (mesh, dropped_devices)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    tp = 1
+    # largest power-of-two TP that divides the survivor count
+    for cand in (16, 8, 4, 2, 1):
+        if n % cand == 0:
+            tp = cand
+            break
+    dp = n // tp
+    used = devices[: dp * tp]
+    import numpy as np
+    mesh = jax.sharding.Mesh(
+        np.array(used).reshape(dp, tp), axis_names)
+    return mesh, devices[dp * tp:]

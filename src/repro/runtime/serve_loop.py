@@ -1,0 +1,56 @@
+"""Batched serving driver: prefill + greedy decode with a jit'd step.
+
+The governor hook mirrors train_loop: decode is memory-bound (roofline
+#Dry-run), so the governor steers toward lower frequencies between prefill
+bursts — the paper's §III memory-bound downclocking opportunity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import decode_module
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    greedy: bool = True
+    seed: int = 0
+
+
+def serve(cfg, env, params, batch, sc: ServeConfig = ServeConfig(),
+          max_len: int | None = None, verbose=False) -> dict:
+    dec = decode_module(cfg)
+    b, s = batch["tokens"].shape
+    max_len = max_len or (s + sc.max_new_tokens)
+
+    prefill = jax.jit(lambda p, bt: dec.prefill(p, bt, cfg, env, max_len))
+    step = jax.jit(lambda p, c, t, i: dec.decode_step(p, c, t, i, cfg, env),
+                   donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(sc.max_new_tokens - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(s + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    tokens = jnp.concatenate(out, axis=1)
+    return {
+        "tokens": tokens,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "tokens_per_s": (b * (sc.max_new_tokens - 1)) / max(t_decode, 1e-9),
+    }

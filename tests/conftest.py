@@ -1,0 +1,11 @@
+import os
+import sys
+
+# src layout import without install; single CPU device (the dry-run sets its
+# own 512-device XLA flag in-process and must NOT leak here)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,23 @@
+"""IEEE-1588 sync: recovered offset within the link-jitter bound."""
+import pytest
+
+from repro.core.clock_sync import synchronize_timers
+from repro.dvfs import make_device
+
+
+@pytest.mark.parametrize("kind", ["a100", "gh200", "rtx6000"])
+def test_offset_recovery(kind):
+    dev = make_device(kind, seed=0, n_cores=4)
+    sync = synchronize_timers(dev, n_exchanges=16)
+    true_offset = dev.cfg.clock_offset_s
+    # asymmetric comm adds up to ~jitter of error; drift negligible here
+    assert abs(sync.offset - true_offset) < 5 * dev.cfg.link_jitter_s
+    assert sync.rtt >= 0
+
+
+def test_sync_improves_with_exchanges():
+    dev = make_device("a100", seed=3, n_cores=4)
+    s1 = synchronize_timers(dev, n_exchanges=2)
+    s16 = synchronize_timers(dev, n_exchanges=32)
+    true_offset = dev.cfg.clock_offset_s
+    assert abs(s16.offset - true_offset) <= abs(s1.offset - true_offset) + 1e-6

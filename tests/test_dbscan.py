@@ -1,0 +1,65 @@
+"""DBSCAN (Alg. 3) + silhouette: outlier recall, adaptive convergence."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dbscan import NOISE, adaptive_dbscan, dbscan, split_clusters
+from repro.core.silhouette import silhouette_score
+
+
+def _dataset(n=200, n_out=6, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(20e-3, 0.5e-3, n - n_out)        # one tight cluster
+    outliers = rng.uniform(80e-3, 300e-3, n_out)       # far spikes
+    return np.concatenate([base, outliers]), n_out
+
+
+def test_outliers_detected():
+    x, n_out = _dataset()
+    res = adaptive_dbscan(x)
+    clean, outliers, _ = split_clusters(x, res)
+    assert len(outliers) >= n_out                  # all injected spikes caught
+    assert res.noise_ratio <= 0.10                 # Alg.3 halting criterion
+    assert clean.max() < 40e-3
+
+
+def test_multi_cluster_silhouette():
+    """Paper §VII-B: separated clusters score > 0.4."""
+    rng = np.random.default_rng(1)
+    a = rng.normal(10e-3, 0.3e-3, 120)
+    b = rng.normal(25e-3, 0.3e-3, 60)
+    x = np.concatenate([a, b])
+    res = adaptive_dbscan(x)
+    assert res.n_clusters == 2
+    s = silhouette_score(x, res.labels)
+    assert s > 0.4
+
+
+def test_dbscan_all_same_point():
+    labels = dbscan(np.ones(50), eps=0.1, min_pts=3)
+    assert (labels == 0).all()
+
+
+def test_adaptive_minpts_range():
+    x, _ = _dataset(n=300)
+    res = adaptive_dbscan(x)
+    assert 2 <= res.min_pts <= max(2, int(np.ceil(0.04 * len(x))))
+
+
+@given(st.integers(60, 300), st.integers(0, 8), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_noise_ratio_bounded_on_clustered_data(n, n_out, seed):
+    """Property: on one-tight-cluster + few-spikes data (the paper's typical
+    shape), adaptive DBSCAN never marks more than ~10% + spikes as noise."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(15e-3, 0.4e-3, n)
+    spikes = rng.uniform(0.1, 0.4, n_out)
+    x = np.concatenate([base, spikes])
+    res = adaptive_dbscan(x)
+    assert res.noise_ratio <= 0.10 + n_out / len(x) + 1e-9
+
+
+def test_silhouette_overlapping_clusters_low():
+    rng = np.random.default_rng(3)
+    x = np.concatenate([rng.normal(10, 1.0, 100), rng.normal(10.5, 1.0, 100)])
+    labels = np.array([0] * 100 + [1] * 100)
+    assert silhouette_score(x, labels) < 0.4

@@ -1,0 +1,75 @@
+"""Simulator invariants: frequency scaling, monotonic timestamps, wake-up,
+throttle flags, ground-truth bookkeeping."""
+import numpy as np
+import pytest
+
+from repro.dvfs import make_device
+
+
+def test_iteration_time_scales_inverse_frequency():
+    dev = make_device("a100", seed=0, n_cores=8)
+    fmax = max(dev.cfg.frequencies)
+    fhalf = dev.cfg.frequencies[len(dev.cfg.frequencies) // 2]
+    out = {}
+    for f in (fmax, fhalf):
+        dev.set_frequency(f)
+        dev.usleep(0.5)                      # let the transition finish
+        dev.run_kernel(64, 40e-6)            # wake-up burn
+        data = dev.run_kernel(256, 40e-6)
+        out[f] = np.diff(data, axis=-1).mean()
+    ratio = out[fhalf] / out[fmax]
+    assert ratio == pytest.approx(fmax / fhalf, rel=0.05)
+
+
+def test_timestamps_monotonic_and_quantized():
+    dev = make_device("gh200", seed=1, n_cores=4)
+    data = dev.run_kernel(128, 40e-6)
+    starts, ends = data[..., 0], data[..., 1]
+    assert (ends >= starts).all()
+    assert (starts[:, 1:] >= ends[:, :-1] - 1e-9).all()
+    q = dev.cfg.timer_resolution_s
+    assert np.allclose(data / q, np.round(data / q), atol=1e-6)
+
+
+def test_ground_truth_history_records_transitions():
+    dev = make_device("a100", seed=2, n_cores=4)
+    f1, f2 = dev.cfg.frequencies[0], dev.cfg.frequencies[-1]
+    dev.set_frequency(f1)
+    dev.set_frequency(f2)
+    assert len(dev.history) == 2
+    assert dev.history[1]["from"] == f1 and dev.history[1]["to"] == f2
+    assert dev.history[1]["true_latency"] > 0
+
+
+def test_asymmetry_a100():
+    """Model calibration: decreases must be faster than increases (Fig. 4)."""
+    dev = make_device("a100", seed=3, n_cores=4)
+    rng = np.random.default_rng(0)
+    lo, hi = dev.cfg.frequencies[2], dev.cfg.frequencies[-2]
+    down = [dev.model.sample_latency(hi, lo, rng) for _ in range(50)]
+    up = [dev.model.sample_latency(lo, hi, rng) for _ in range(50)]
+    assert np.mean(down) < np.mean(up)
+
+
+def test_gh200_target_dominates():
+    """Row pattern (Fig. 3): latency variance across inits << across targets."""
+    dev = make_device("gh200", seed=4)
+    fs = dev.cfg.frequencies[:: len(dev.cfg.frequencies) // 8][:8]
+    by_target = [np.mean([dev.model.base_latency(fi, ft) for fi in fs])
+                 for ft in fs]
+    by_init = [np.mean([dev.model.base_latency(fi, ft) for ft in fs])
+               for fi in fs]
+    assert np.std(by_target) > 3 * np.std(by_init)
+
+
+def test_unsupported_frequency_rejected():
+    dev = make_device("a100", n_cores=2)
+    with pytest.raises(ValueError):
+        dev.set_frequency(123.456)
+
+
+def test_thermal_throttle_flags():
+    dev = make_device("a100", seed=5, n_cores=2, thermal_throttle_prob=1.0)
+    dev.run_kernel(32, 40e-6)
+    assert "thermal" in dev.throttle_reasons()
+    assert dev.throttle_reasons() == set()      # flags are consumed

@@ -1,0 +1,58 @@
+"""Heartbeats, straggler policy, retry, elastic remesh."""
+import pytest
+
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, StragglerPolicy,
+                                           elastic_remesh, retry_step)
+
+
+def test_heartbeat_detects_dead_worker():
+    clock = [0.0]
+    hb = HeartbeatMonitor(3, timeout_s=10.0, clock=lambda: clock[0])
+    clock[0] = 5.0
+    hb.beat(0); hb.beat(1)
+    clock[0] = 12.0
+    assert hb.dead() == [2]
+    clock[0] = 30.0
+    assert set(hb.dead()) == {0, 1, 2}
+
+
+def test_straggler_policy_evicts_after_budget():
+    sp = StragglerPolicy(ratio=1.5, budget=3)
+    for _ in range(10):
+        assert sp.observe(1.0) == "ok"
+    verdicts = [sp.observe(5.0) for _ in range(3)]
+    assert verdicts == ["degraded", "degraded", "evict"]
+    # healthy step resets the counter
+    sp2 = StragglerPolicy(ratio=1.5, budget=3)
+    [sp2.observe(1.0) for _ in range(5)]
+    sp2.observe(5.0)
+    sp2.observe(1.0)
+    assert sp2.observe(5.0) == "degraded"
+
+
+def test_straggler_ewma_not_poisoned():
+    sp = StragglerPolicy(ratio=1.5, budget=100)
+    [sp.observe(1.0) for _ in range(5)]
+    [sp.observe(10.0) for _ in range(5)]       # stragglers
+    assert sp._ewma < 1.5                      # EWMA ignored the spikes
+
+
+def test_retry_step_recovers():
+    calls = []
+
+    def flaky(x):
+        calls.append(x)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return x * 2
+
+    assert retry_step(flaky, 21, retries=5) == 42
+    assert len(calls) == 3
+    with pytest.raises(RuntimeError):
+        retry_step(lambda: (_ for _ in ()).throw(RuntimeError("x")), retries=2)
+
+
+def test_elastic_remesh_single_device():
+    mesh, dropped = elastic_remesh()
+    assert mesh.shape["model"] >= 1 and mesh.shape["data"] >= 1
+    assert mesh.size + len(dropped) == len(__import__("jax").devices())

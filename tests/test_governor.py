@@ -1,0 +1,66 @@
+"""Governor invariants: timing rule, pair avoidance, energy dominance."""
+import numpy as np
+
+from repro.core.latency_table import LatencyTable, analyse_pair
+from repro.dvfs.governor import (Governor, GovernorConfig,
+                                 oblivious_governor_sim, static_sim)
+from repro.dvfs.planner import Region
+from repro.dvfs.power_model import PowerModel
+
+FREQS = [500.0, 1000.0, 1500.0, 2000.0]
+
+
+def _table(lat_s=0.010, bad_pair=None, bad_lat=0.4):
+    rng = np.random.default_rng(0)
+    t = LatencyTable()
+    for fi in FREQS:
+        for ft in FREQS:
+            if fi == ft:
+                continue
+            base = bad_lat if (fi, ft) == bad_pair else lat_s
+            t.add(analyse_pair(fi, ft, base * rng.lognormal(0, 0.03, 30)))
+    return t
+
+
+def test_never_switches_on_short_regions():
+    g = Governor(_table(), PowerModel(2000.0), FREQS,
+                 GovernorConfig(hysteresis=3.0))
+    short = Region("memory", 0.005)           # 5 ms < 3 x 10 ms
+    tgt, reason = g.pick_target(short, 2000.0)
+    assert tgt == 2000.0 and reason in ("too_short", "already_optimal")
+    long = Region("memory", 1.0)
+    tgt2, _ = g.pick_target(long, 2000.0)
+    assert tgt2 < 2000.0                      # memory-bound -> downclock
+
+
+def test_avoids_expensive_pairs():
+    bad = (2000.0, 500.0)
+    g = Governor(_table(bad_pair=bad), PowerModel(2000.0), FREQS,
+                 GovernorConfig(avoid_percentile=90.0))
+    r = Region("memory", 1.0)
+    tgt, reason = g.pick_target(r, 2000.0)
+    assert tgt != 500.0                       # the avoided target
+    assert g.allowed(2000.0, tgt)
+
+
+def test_energy_beats_static_and_oblivious():
+    table = _table(lat_s=0.02)
+    power = PowerModel(2000.0)
+    regions = [Region("compute", 0.3), Region("memory", 0.4),
+               Region("collective", 0.2), Region("host", 0.02)] * 20
+    g = Governor(table, power, FREQS).simulate(regions)
+    st = static_sim(power, FREQS, regions)
+    ob = oblivious_governor_sim(table, power, FREQS, regions)
+    assert g.energy_j < st.energy_j                    # saves energy
+    assert g.time_s <= 1.05 * st.time_s                # ~no slowdown
+    # latency-aware beats latency-oblivious on energy-delay product
+    assert g.energy_j * g.time_s <= ob.energy_j * ob.time_s
+    assert g.switch_overhead_s <= ob.switch_overhead_s
+
+
+def test_simulate_counts_switches():
+    g = Governor(_table(), PowerModel(2000.0), FREQS)
+    regions = [Region("compute", 0.5), Region("memory", 0.5)] * 3
+    st = g.simulate(regions)
+    assert st.switches >= 1
+    assert st.energy_j > 0 and st.time_s > 0

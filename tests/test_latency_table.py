@@ -1,0 +1,50 @@
+"""Latency table: CSV naming convention, persistence, summaries."""
+import numpy as np
+
+from repro.core.latency_table import LatencyTable, analyse_pair
+
+
+def _table():
+    rng = np.random.default_rng(0)
+    t = LatencyTable(hostname="karolina1", device_index=2)
+    for fi, ft, base in [(210.0, 1410.0, 20e-3), (1410.0, 210.0, 5e-3)]:
+        lat = base * rng.lognormal(0, 0.05, 40)
+        lat[-1] = base * 8                       # inject one outlier
+        t.add(analyse_pair(fi, ft, lat))
+    return t
+
+
+def test_csv_naming_convention():
+    t = _table()
+    assert t.csv_name(210.0, 1410.0) == "210_1410_karolina1_2.csv"
+
+
+def test_csv_roundtrip(tmp_path):
+    t = _table()
+    paths = t.save_csv(str(tmp_path))
+    assert len(paths) == 2
+    lat, outl = LatencyTable.load_csv(paths[0])
+    assert len(lat) == 40
+    assert outl.sum() >= 1                      # the injected outlier marked
+
+
+def test_summary_shape():
+    s = _table().summary()
+    assert s["n_pairs"] == 2
+    assert s["worst_case"]["max_ms"] >= s["worst_case"]["min_ms"]
+    assert s["best_case"]["mean_ms"] <= s["worst_case"]["mean_ms"]
+
+
+def test_outlier_filtered_from_worst_case():
+    t = _table()
+    pr = t.lookup(210.0, 1410.0)
+    assert pr.worst_case < 0.1                  # 160 ms spike excluded
+    assert pr.outliers.size >= 1
+
+
+def test_heatmap_and_asymmetry():
+    t = _table()
+    m, inits, targets = t.heatmap("worst")
+    assert m.shape == (2, 2) and np.isnan(m).sum() == 2
+    asym = t.asymmetry()
+    assert asym["increase"]["mean_ms"] > asym["decrease"]["mean_ms"]

@@ -1,0 +1,74 @@
+"""End-to-end methodology validation: the pipeline must RECOVER the
+simulator's ground-truth switching latencies — the calibration loop the
+paper itself cannot run on real silicon."""
+import numpy as np
+import pytest
+
+from repro.core.calibration import calibrate, valid_pairs
+from repro.core.evaluation import MeasureConfig, measure_pair
+from repro.core.latest import LatestConfig, run_latest
+from repro.core.workload import WorkloadSpec
+from repro.dvfs import make_device
+
+FAST = MeasureConfig(min_measurements=5, max_measurements=8, rse_check_every=5)
+
+
+def _spec():
+    return WorkloadSpec(iters_per_kernel=1100, flops_per_iter=40e-6,
+                        delay_iters=300, confirm_iters=400)
+
+
+def test_calibration_orders_frequencies():
+    dev = make_device("a100", seed=0, n_cores=8)
+    freqs = [210.0, 705.0, 1410.0]
+    cal = calibrate(dev, freqs, _spec())
+    means = [cal.baselines[f].mean for f in freqs]
+    assert means[0] > means[1] > means[2]      # slower clock, longer iters
+    assert len(valid_pairs(cal)) == 6          # all pairs distinguishable
+
+
+def test_single_pair_recovers_truth():
+    dev = make_device("a100", seed=1, n_cores=8)
+    freqs = [210.0, 1410.0]
+    cal = calibrate(dev, freqs, _spec())
+    pm = measure_pair(dev, 210.0, 1410.0, cal, _spec(), FAST)
+    assert pm.status == "ok" and pm.latencies.size >= 5
+    truth = [h["true_latency"] for h in dev.history
+             if h["from"] == 210.0 and h["to"] == 1410.0]
+    # worst measured within 25% of the true max (comm delay + iteration
+    # granularity are part of the DEFINITION of switching latency)
+    assert pm.latencies.max() == pytest.approx(max(truth), rel=0.25)
+
+
+@pytest.mark.parametrize("kind", ["a100", "gh200"])
+def test_full_pipeline_ground_truth(kind):
+    dev = make_device(kind, seed=2, n_cores=8)
+    freqs = [dev.cfg.frequencies[0], dev.cfg.frequencies[-1]]
+    table = run_latest(dev, freqs,
+                       LatestConfig(base_iter_s=40e-6, measure=FAST))
+    assert len(table.pairs) == 2
+    for (fi, ft), pr in table.pairs.items():
+        truth = np.array([h["true_latency"] for h in dev.history
+                          if h["from"] == fi and h["to"] == ft])
+        assert pr.status == "ok"
+        assert pr.worst_case <= truth.max() * 1.35 + 2e-3
+        assert pr.worst_case >= truth.min() * 0.65
+
+
+def test_undetectable_pair_rejected():
+    """Adjacent frequencies whose baselines overlap must be filtered in
+    phase 1, not produce bogus latencies."""
+    dev = make_device("a100", seed=3, n_cores=4,
+                      iter_noise_sigma=0.2)       # huge jitter
+    freqs = [1395.0, 1410.0]
+    cal = calibrate(dev, freqs, _spec())
+    assert valid_pairs(cal) == []
+
+
+def test_power_throttle_skips_pair():
+    dev = make_device("a100", seed=4, n_cores=4,
+                      power_throttle_freqs=(1410.0,))
+    freqs = [210.0, 1410.0]
+    cal = calibrate(dev, freqs, _spec())
+    pm = measure_pair(dev, 210.0, 1410.0, cal, _spec(), FAST)
+    assert pm.status == "power_throttled"

@@ -1,0 +1,75 @@
+"""Statistics layer: CI/t-test/RSE properties + the paper's 2-sigma-vs-2-SE
+insight (§V-A) reproduced quantitatively."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats
+
+
+def test_mean_std_basic():
+    s = stats.mean_std(np.array([1.0, 2.0, 3.0]), freq_mhz=100)
+    assert s.mean == pytest.approx(2.0)
+    assert s.n == 3
+    assert s.se == pytest.approx(s.std / np.sqrt(3))
+
+
+def test_two_se_band_fails_at_accelerator_scale():
+    """Paper §V-A: at n ~ 1e7 the SE band shrinks below the timer resolution
+    so almost no iteration lands inside it; the 2-sigma band keeps ~95%."""
+    rng = np.random.default_rng(0)
+    timer_res = 1e-6
+    mean, sigma = 40e-6, 1.0e-6           # 40 us iterations, 1 us jitter
+    big = rng.normal(mean, sigma, 2_000_000)
+    big = np.round(big / timer_res) * timer_res          # timer quantization
+    s = stats.mean_std(big)
+    lo_se, hi_se = stats.two_se_band(s)
+    lo_sg, hi_sg = stats.two_sigma_band(s)
+    frac_se = np.mean((big >= lo_se) & (big <= hi_se))
+    frac_sg = np.mean((big >= lo_sg) & (big <= hi_sg))
+    assert hi_se - lo_se < timer_res          # band below timer resolution
+    assert frac_se < 0.45                     # detection starves
+    assert frac_sg > 0.90                     # population band works
+
+
+def test_ci_excludes_zero_distinguishable():
+    rng = np.random.default_rng(1)
+    a = stats.mean_std(rng.normal(10.0, 0.1, 1000))
+    b = stats.mean_std(rng.normal(10.5, 0.1, 1000))
+    assert stats.ci_excludes_zero(a, b)
+    c = stats.mean_std(rng.normal(10.0, 0.1, 1000))
+    assert not stats.ci_excludes_zero(a, c)
+
+
+def test_null_hypothesis_tolerance():
+    a = stats.FreqStats(0, 1.00, 0.001, 10)
+    b = stats.FreqStats(0, 1.001, 0.001, 10)
+    assert stats.null_hypothesis_holds(a, b, tol=0.01)
+    c = stats.FreqStats(0, 2.0, 0.001, 1000)
+    assert not stats.null_hypothesis_holds(a, c, tol=0.01)
+
+
+@given(st.lists(st.floats(1e-6, 1e-2), min_size=3, max_size=200),
+       st.floats(1.5, 3.0))
+@settings(max_examples=50, deadline=None)
+def test_two_sigma_band_contains_mean(vals, k):
+    s = stats.mean_std(np.array(vals))
+    lo, hi = stats.two_sigma_band(s, k)
+    assert lo <= s.mean <= hi
+
+
+@given(st.integers(10, 5000))
+@settings(max_examples=30, deadline=None)
+def test_rse_shrinks_with_n(n):
+    rng = np.random.default_rng(42)
+    x = rng.normal(1.0, 0.1, n)
+    assert stats.rse(x) < stats.rse(x[: max(3, n // 4)]) * 2.5
+
+
+@given(st.floats(0.1, 10), st.floats(0.001, 0.1), st.integers(50, 500))
+@settings(max_examples=30, deadline=None)
+def test_welch_symmetry(mu, sigma, n):
+    rng = np.random.default_rng(7)
+    a = stats.mean_std(rng.normal(mu, sigma, n))
+    b = stats.mean_std(rng.normal(mu * 1.5, sigma, n))
+    assert stats.welch_t_test(a, b) == pytest.approx(-stats.welch_t_test(b, a))

@@ -1,0 +1,19 @@
+"""Workload sizing rules (paper §V bullet list)."""
+from repro.core.workload import size_workload
+
+
+def test_sizing_covers_all_events():
+    spec = size_workload(probe_latency_s=50e-3, iter_time_s=40e-6,
+                         delay_iters=400, confirm_iters=600)
+    switch_iters = spec.iters_per_kernel - spec.delay_iters - spec.confirm_iters
+    # 10x rule: switching window covers >= 10 x the probed latency
+    assert switch_iters * 40e-6 >= 10 * 50e-3
+    assert spec.delay_iters == 400 and spec.confirm_iters == 600
+
+
+def test_ten_times_longer_retry_semantics():
+    s1 = size_workload(probe_latency_s=5e-3, iter_time_s=40e-6)
+    s10 = size_workload(probe_latency_s=50e-3, iter_time_s=40e-6)
+    grow = (s10.iters_per_kernel - s10.delay_iters - s10.confirm_iters) / \
+           (s1.iters_per_kernel - s1.delay_iters - s1.confirm_iters)
+    assert 9.0 < grow < 11.0
