@@ -11,13 +11,14 @@ import time
 import numpy as np
 
 from repro.core.evaluation import MeasureConfig
-from repro.core.latest import LatestConfig, run_latest
-from repro.dvfs import make_device
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
 
 # fast-but-meaningful defaults for the simulated measurement campaign
 FAST = MeasureConfig(min_measurements=5, max_measurements=8,
                      rse_check_every=5)
 N_CORES = 6
+BACKEND = "vmapped-sim"          # the batched always-vectorized simulator
 
 
 def timed(fn, *args, **kw):
@@ -27,15 +28,24 @@ def timed(fn, *args, **kw):
 
 
 def freq_subset(dev, n=5):
-    fs = dev.cfg.frequencies
+    fs = dev.frequencies
     idx = np.linspace(0, len(fs) - 1, n).astype(int)
     return [float(fs[i]) for i in idx]
 
 
+def measure_session(kind: str, n_freqs: int = 4, seed: int = 0,
+                    unit_seed: int = 0) -> MeasurementSession:
+    from repro.backends import create_backend
+    dev = create_backend(BACKEND, kind=kind, seed=seed, unit_seed=unit_seed,
+                         n_cores=N_CORES)
+    return MeasurementSession(
+        dev, freq_subset(dev, n_freqs),
+        SessionConfig(latest=LatestConfig(measure=FAST)),
+        device_name=kind, device_index=unit_seed)
+
+
 def measure_table(kind: str, n_freqs: int = 4, seed: int = 0,
                   unit_seed: int = 0):
-    dev = make_device(kind, seed=seed, unit_seed=unit_seed, n_cores=N_CORES)
-    freqs = freq_subset(dev, n_freqs)
-    table = run_latest(dev, freqs, LatestConfig(measure=FAST),
-                       device_name=kind, device_index=unit_seed)
-    return dev, table
+    session = measure_session(kind, n_freqs, seed, unit_seed)
+    table = session.run()
+    return session.device, table

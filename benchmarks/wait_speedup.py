@@ -1,0 +1,94 @@
+"""Hot-path benchmark: vectorized segment-cumsum timestamp evaluation vs
+the seed per-iteration loop it replaced, on a 1000-iteration kernel.
+
+The evaluation runs inside SimulatedAccelerator.wait() under every
+calibration kernel, probe and measurement pass, so the whole simulated
+campaign scales with it.  Scenarios:
+
+  stable      kernel entirely inside one frequency segment (calibration /
+              warm-up shape — the most common kernel in a sweep)
+  mid-switch  one frequency change arrives mid-kernel (the phase-2
+              measurement shape)
+
+``speedup`` times the two implementations on identical inputs (same RNG
+draws, same event timeline — they return bit-identical boundaries, which
+is also asserted); ``e2e`` is the full wait() ratio including the shared
+RNG-draw and timer-quantization cost.  Acceptance bar: speedup >= 5x.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.dvfs import make_device
+from repro.dvfs.device_model import SimulatedAccelerator
+
+N_ITERS = 1000
+N_CORES = 108
+REPS = 5
+
+
+def _device_state(mid_switch: bool, seed: int = 0):
+    """A realistic device mid-sweep + the wait() inputs for one kernel."""
+    dev = make_device("a100", seed=seed, n_cores=N_CORES)
+    fs = dev.cfg.frequencies
+    dev.set_frequency(fs[0])
+    dev.run_kernel(64, 40e-6)
+    h = dev.launch_kernel(N_ITERS, 40e-6)
+    if mid_switch:
+        dev.usleep(0.004)
+        dev.set_frequency(fs[-1])
+    c = dev.cfg
+    t0 = np.full(c.n_cores, h.start_dev) \
+        + dev.rng.uniform(0, c.core_skew_s, c.n_cores)
+    noise = dev.rng.lognormal(0.0, c.iter_noise_sigma,
+                              (c.n_cores, N_ITERS))
+    ev_t = np.array([e[0] for e in dev._events])
+    ev_f = np.array([e[1] for e in dev._events])
+    return h.base_iter_s, t0, noise, ev_t, ev_f, max(c.frequencies)
+
+
+def _time_eval(fn, args) -> float:
+    fn(*args)                                   # warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        fn(*args)
+    return (time.perf_counter() - t0) / REPS
+
+
+def _time_wait(impl: str, mid_switch: bool) -> float:
+    dev = make_device("a100", seed=1, n_cores=N_CORES, wait_impl=impl)
+    fs = dev.cfg.frequencies
+    dev.set_frequency(fs[-1])
+    dev.run_kernel(8, 40e-6)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        if mid_switch:
+            dev.set_frequency(fs[0])
+            h = dev.launch_kernel(N_ITERS, 40e-6)
+            dev.usleep(0.004)
+            dev.set_frequency(fs[-1])
+            dev.wait(h)
+        else:
+            dev.run_kernel(N_ITERS, 40e-6)
+    return (time.perf_counter() - t0) / REPS
+
+
+def bench_wait_vectorized():
+    rows = []
+    for label, mid_switch in (("stable", False), ("mid-switch", True)):
+        args = _device_state(mid_switch)
+        loop_s = _time_eval(SimulatedAccelerator._eval_timestamps_loop, args)
+        vec_s = _time_eval(SimulatedAccelerator._eval_timestamps_vectorized,
+                           args)
+        same = np.array_equal(
+            SimulatedAccelerator._eval_timestamps_loop(*args),
+            SimulatedAccelerator._eval_timestamps_vectorized(*args))
+        e2e = _time_wait("loop", mid_switch) / _time_wait("vectorized",
+                                                          mid_switch)
+        rows.append((f"wait_vectorized/{label}", vec_s * 1e6,
+                     f"speedup={loop_s / vec_s:.1f}x "
+                     f"e2e={e2e:.1f}x loop_us={loop_s*1e6:.0f} "
+                     f"identical={same}"))
+    return rows

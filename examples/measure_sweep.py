@@ -1,42 +1,64 @@
-"""LATEST-style CLI sweep over the three simulated GPU architectures with
-CSV output — the tool-usage surface of paper §VI.
+"""LATEST-style CLI sweep over the simulated GPU architectures with CSV
+output — the tool-usage surface of paper §VI, now with backend selection,
+thread-parallel scheduling and resume-from-disk.
 
   PYTHONPATH=src python examples/measure_sweep.py --device a100 \
       --freqs 210,705,1410 --rse 0.05 --min 8 --max 24
+
+  # pluggable backend + parallel workers + resumable state:
+  PYTHONPATH=src python examples/measure_sweep.py --backend vmapped-sim \
+      --parallel 4 --state results/sweep_state
+  (interrupt it; the same command resumes where it stopped)
 """
 import argparse
 
+from repro.backends import create_backend, list_backends
 from repro.core.evaluation import MeasureConfig
-from repro.core.latest import LatestConfig, run_latest
-from repro.dvfs import make_device
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--device", choices=("a100", "gh200", "rtx6000"),
                 default="a100")
+ap.add_argument("--backend", choices=list_backends(), default="simulated")
 ap.add_argument("--device-index", type=int, default=0)
 ap.add_argument("--freqs", default=None,
                 help="comma-separated MHz list (mandatory arg in LATEST)")
 ap.add_argument("--rse", type=float, default=0.05)
 ap.add_argument("--min", type=int, default=8, dest="min_meas")
 ap.add_argument("--max", type=int, default=24, dest="max_meas")
+ap.add_argument("--parallel", type=int, default=0,
+                help="thread workers, one independent device each "
+                     "(0 = serial)")
+ap.add_argument("--state", default=None,
+                help="session dir: partial results persist here and a "
+                     "re-run resumes instead of restarting")
 ap.add_argument("--out", default="results/latest_csv")
 args = ap.parse_args()
 
-dev = make_device(args.device, seed=args.device_index,
-                  unit_seed=args.device_index, n_cores=8)
+dev = create_backend(args.backend, kind=args.device, seed=args.device_index,
+                     unit_seed=args.device_index, n_cores=8)
 if args.freqs:
     freqs = [float(f) for f in args.freqs.split(",")]
 else:
-    fs = dev.cfg.frequencies
+    fs = dev.frequencies
     freqs = [float(fs[i]) for i in (0, len(fs) // 2, -1)]
 
-table = run_latest(
+session = MeasurementSession(
     dev, freqs,
-    LatestConfig(measure=MeasureConfig(rse_target=args.rse,
-                                       min_measurements=args.min_meas,
-                                       max_measurements=args.max_meas)),
-    device_name=args.device, device_index=args.device_index,
-    verbose=True)
+    SessionConfig(
+        latest=LatestConfig(measure=MeasureConfig(
+            rse_target=args.rse, min_measurements=args.min_meas,
+            max_measurements=args.max_meas)),
+        executor="threads" if args.parallel else "serial",
+        max_workers=args.parallel or 1,
+        out_dir=args.state),
+    backend=args.backend,
+    backend_options={"kind": args.device, "seed": args.device_index,
+                     "unit_seed": args.device_index, "n_cores": 8},
+    device_name=args.device, device_index=args.device_index)
+
+table = session.run(verbose=True)
 paths = table.save_csv(args.out)
 print(f"\nsummary: {table.summary()}")
 print(f"{len(paths)} CSVs -> {args.out}")

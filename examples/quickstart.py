@@ -1,24 +1,26 @@
 """Quickstart: measure a simulated accelerator's frequency-switching
-latency end-to-end (the paper's full pipeline in ~30 lines).
+latency end-to-end (the paper's full pipeline in ~30 lines), through the
+backend registry + MeasurementSession API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core.evaluation import MeasureConfig
-from repro.core.latest import LatestConfig, run_latest
-from repro.dvfs import make_device
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
 
-# an A100-like simulated accelerator (8 core stand-ins for speed)
-device = make_device("a100", seed=0, n_cores=8)
-freqs = [210.0, 705.0, 1095.0, 1410.0]
-
-table = run_latest(
-    device, freqs,
-    LatestConfig(measure=MeasureConfig(min_measurements=8,
-                                       max_measurements=16,
-                                       rse_check_every=8)),
-    verbose=True)
+# an A100-like simulated accelerator (8 core stand-ins for speed) from the
+# registry; "vmapped-sim" batches calibration kernels in one numpy pass
+session = MeasurementSession(
+    frequencies=[210.0, 705.0, 1095.0, 1410.0],
+    cfg=SessionConfig(latest=LatestConfig(
+        measure=MeasureConfig(min_measurements=8, max_measurements=16,
+                              rse_check_every=8))),
+    backend="vmapped-sim",
+    backend_options={"kind": "a100", "seed": 0, "n_cores": 8})
+table = session.run(verbose=True)
+device = session.device
 
 print("\n=== Table II-style summary ===")
 for k, v in table.summary().items():

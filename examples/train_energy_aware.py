@@ -6,11 +6,13 @@ table (the paper's §VIII runtime, integrated with the training loop).
 """
 import argparse
 
+from repro.backends import create_backend
 from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
 from repro.core.evaluation import MeasureConfig
-from repro.core.latest import LatestConfig, run_latest
-from repro.dvfs import PowerModel, make_device
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
+from repro.dvfs import PowerModel
 from repro.dvfs.governor import Governor, oblivious_governor_sim, static_sim
 from repro.dvfs.planner import Region
 from repro.parallel.sharding import make_env
@@ -22,18 +24,21 @@ ap.add_argument("--device", choices=("a100", "gh200", "rtx6000"),
                 default="a100")
 args = ap.parse_args()
 
-# 1) measure the accelerator's switching latency (paper pipeline)
+# 1) measure the accelerator's switching latency (paper pipeline) through
+#    the session API, then 2) derive the governor straight from the session
 print(f"== measuring switching latency ({args.device}-like simulator) ==")
-device = make_device(args.device, seed=0, n_cores=8)
-freqs = [float(device.cfg.frequencies[i])
-         for i in (0, len(device.cfg.frequencies) // 2, -1)]
-table = run_latest(device, freqs, LatestConfig(
-    measure=MeasureConfig(min_measurements=6, max_measurements=10,
-                          rse_check_every=6)), verbose=True)
-
-# 2) build the governor from the measured table
-power = PowerModel(f_max_mhz=max(freqs))
-governor = Governor(table, power, freqs)
+device = create_backend("vmapped-sim", kind=args.device, seed=0, n_cores=8)
+fs = device.frequencies
+freqs = [float(fs[i]) for i in (0, len(fs) // 2, -1)]
+session = MeasurementSession(
+    device, freqs,
+    SessionConfig(latest=LatestConfig(
+        measure=MeasureConfig(min_measurements=6, max_measurements=10,
+                              rse_check_every=6))),
+    device_name=args.device)
+governor = Governor.from_session(session, verbose=True)
+table = governor.table
+power = governor.power
 regions = [Region("compute", 0.25), Region("memory", 0.05),
            Region("collective", 0.08), Region("host", 0.01)]
 

@@ -1,0 +1,26 @@
+"""Pluggable accelerator backends for the measurement pipeline.
+
+Importing this package populates the registry with the built-in backends:
+
+  simulated     SimulatedAccelerator calibrated to the paper's three GPUs
+  vmapped-sim   same model, mandatory vectorized evaluation + batched
+                multi-kernel passes
+  cuda-nvml     real-hardware contract stub (needs pynvml + a GPU)
+"""
+from repro.backends.base import AcceleratorBackend, BackendUnavailableError
+from repro.backends.registry import (BackendEntry, create_backend,
+                                     get_backend, list_backends,
+                                     register_backend)
+
+# built-ins register themselves on import
+from repro.backends import simulated as _simulated            # noqa: F401
+from repro.backends import vmapped_sim as _vmapped_sim        # noqa: F401
+from repro.backends import cuda_nvml as _cuda_nvml            # noqa: F401
+from repro.backends.vmapped_sim import VmappedSimAccelerator
+from repro.backends.cuda_nvml import CudaNvmlBackend
+
+__all__ = [
+    "AcceleratorBackend", "BackendUnavailableError", "BackendEntry",
+    "register_backend", "create_backend", "get_backend", "list_backends",
+    "VmappedSimAccelerator", "CudaNvmlBackend",
+]

@@ -1,0 +1,64 @@
+"""The formal host-side contract every measurement backend implements.
+
+`repro.core` (calibration, switching, evaluation, session) is written
+against this protocol only — it never sees simulation internals or NVML
+handles.  The contract mirrors what a CUDA/NVML implementation exposes
+(paper §VI) and what the simulator provides today:
+
+  host_now() / usleep(dt)      host clock, seconds
+  set_frequency(mhz)           asynchronous frequency-change command
+  launch_kernel(n, iter_s)     non-blocking launch of the iterative workload
+  wait(handle)                 -> (n_cores, n_iters, 2) device timestamps
+  run_kernel(n, iter_s)        blocking convenience wrapper
+  sync_exchange()              one IEEE-1588 two-way message exchange
+  throttle_reasons()           throttle flags raised since the last call
+  frequencies                  supported core frequencies, MHz
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+
+class BackendUnavailableError(RuntimeError):
+    """Raised when a registered backend cannot run in this environment
+    (missing driver bindings, no hardware, ...)."""
+
+
+@runtime_checkable
+class AcceleratorBackend(Protocol):
+    """Structural protocol for measurement targets.
+
+    Timestamps returned by :meth:`wait` live on the *device* timeline and
+    are quantized to the device timer resolution; :meth:`sync_exchange`
+    provides the raw material for mapping host time onto that timeline
+    (``repro.core.clock_sync``).
+    """
+
+    @property
+    def frequencies(self) -> tuple[float, ...]:
+        """Supported core frequencies in MHz, ascending."""
+        ...
+
+    def host_now(self) -> float:
+        ...
+
+    def usleep(self, dt: float) -> None:
+        ...
+
+    def set_frequency(self, mhz: float) -> None:
+        ...
+
+    def launch_kernel(self, n_iters: int, base_iter_s: float) -> Any:
+        ...
+
+    def wait(self, handle: Any):
+        ...
+
+    def run_kernel(self, n_iters: int, base_iter_s: float):
+        ...
+
+    def sync_exchange(self) -> tuple[float, float, float, float]:
+        ...
+
+    def throttle_reasons(self) -> set:
+        ...

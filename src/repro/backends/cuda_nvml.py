@@ -1,0 +1,90 @@
+"""`cuda-nvml` backend stub: the real-hardware contract, documented.
+
+This module records how each :class:`AcceleratorBackend` method maps onto
+CUDA + NVML so a hardware port is mechanical.  It registers with
+``requires=("pynvml",)`` — in environments without the NVIDIA bindings the
+registry lists it but :func:`create_backend` raises
+:class:`BackendUnavailableError` instead of constructing it.
+
+Method contract on real hardware (paper §VI, the LATEST tool):
+
+  frequencies        nvmlDeviceGetSupportedGraphicsClocks(mem_clock)
+  set_frequency      nvmlDeviceSetGpuLockedClocks(mhz, mhz); asynchronous —
+                     returns before the clock settles, which is precisely
+                     the latency this repo measures
+  launch_kernel      launch the iterative workload (repro.kernels.microbench
+                     on TPU/Pallas; an unrolled FMA chain per SM on CUDA)
+                     with one block per SM; each iteration stores
+                     %%globaltimer before/after into a device buffer
+  wait               cudaStreamSynchronize + D2H copy of the per-core
+                     (n_iters, 2) globaltimer stamps (1 us resolution)
+  sync_exchange      IEEE-1588 two-way exchange: host clock_gettime vs a
+                     single-thread kernel reading %%globaltimer, repeated;
+                     best-of-n by round-trip time (repro.core.clock_sync)
+  throttle_reasons   nvmlDeviceGetCurrentClocksEventReasons, mapped to
+                     {"thermal", "power"} like the simulator
+  usleep / host_now  time.sleep / time.monotonic
+"""
+from __future__ import annotations
+
+from repro.backends.base import BackendUnavailableError
+from repro.backends.registry import register_backend
+
+
+class CudaNvmlBackend:
+    """Skeleton for the CUDA/NVML implementation.
+
+    Construction requires working NVIDIA bindings; every device method is
+    a placeholder raising NotImplementedError until the hardware port
+    lands.  Kept importable so the registry, docs and tests can reference
+    the contract without a GPU.
+    """
+
+    def __init__(self, device_index: int = 0):
+        try:
+            import pynvml  # noqa: F401
+        except ImportError as e:  # pragma: no cover - exercised via registry
+            raise BackendUnavailableError(
+                "cuda-nvml backend needs the 'pynvml' package and an "
+                "NVIDIA driver") from e
+        self.device_index = device_index
+        raise NotImplementedError(
+            "cuda-nvml backend is a documented stub; see module docstring "
+            "for the method-by-method hardware mapping")
+
+    @property
+    def frequencies(self) -> tuple[float, ...]:
+        raise NotImplementedError
+
+    def host_now(self) -> float:
+        raise NotImplementedError
+
+    def usleep(self, dt: float) -> None:
+        raise NotImplementedError
+
+    def set_frequency(self, mhz: float) -> None:
+        raise NotImplementedError
+
+    def launch_kernel(self, n_iters: int, base_iter_s: float):
+        raise NotImplementedError
+
+    def wait(self, handle):
+        raise NotImplementedError
+
+    def run_kernel(self, n_iters: int, base_iter_s: float):
+        raise NotImplementedError
+
+    def sync_exchange(self) -> tuple[float, float, float, float]:
+        raise NotImplementedError
+
+    def throttle_reasons(self) -> set:
+        raise NotImplementedError
+
+
+@register_backend(
+    "cuda-nvml",
+    description="CUDA + NVML hardware backend (stub: documents the "
+                "real-HW contract)",
+    requires=("pynvml",))
+def make_cuda_nvml(device_index: int = 0, **_ignored):
+    return CudaNvmlBackend(device_index=device_index)

@@ -1,0 +1,77 @@
+"""Backend registry: name -> factory, with availability gating.
+
+Factories register themselves at import time::
+
+    @register_backend("simulated", description="...")
+    def _make(**options) -> AcceleratorBackend: ...
+
+Consumers create instances by name::
+
+    dev = create_backend("vmapped-sim", kind="a100", n_cores=8)
+
+``requires`` lists import names that must be present for the backend to be
+usable; :func:`create_backend` raises :class:`BackendUnavailableError` with
+an actionable message when they are missing, so unavailable backends (e.g.
+``cuda-nvml`` without a GPU) stay *listed* but fail loudly only on use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib.util
+from typing import Callable
+
+from repro.backends.base import AcceleratorBackend, BackendUnavailableError
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendEntry:
+    name: str
+    factory: Callable[..., AcceleratorBackend]
+    description: str = ""
+    requires: tuple[str, ...] = ()
+
+    def missing_requirements(self) -> list[str]:
+        return [m for m in self.requires
+                if importlib.util.find_spec(m) is None]
+
+    @property
+    def available(self) -> bool:
+        return not self.missing_requirements()
+
+
+_REGISTRY: dict[str, BackendEntry] = {}
+
+
+def register_backend(name: str, *, description: str = "",
+                     requires: tuple[str, ...] = ()):
+    """Decorator registering ``factory`` under ``name`` (idempotent per
+    name: re-registration overwrites, so module reloads are harmless)."""
+    def deco(factory: Callable[..., AcceleratorBackend]):
+        _REGISTRY[name] = BackendEntry(name, factory, description, requires)
+        return factory
+    return deco
+
+
+def get_backend(name: str) -> BackendEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def create_backend(name: str, **options) -> AcceleratorBackend:
+    entry = get_backend(name)
+    missing = entry.missing_requirements()
+    if missing:
+        raise BackendUnavailableError(
+            f"backend {name!r} needs missing module(s) {missing}; "
+            f"install them or pick one of "
+            f"{[n for n in sorted(_REGISTRY) if _REGISTRY[n].available]}")
+    return entry.factory(**options)
+
+
+def list_backends(*, available_only: bool = False) -> list[str]:
+    return sorted(n for n, e in _REGISTRY.items()
+                  if e.available or not available_only)

@@ -1,0 +1,19 @@
+"""`simulated` backend: the paper-calibrated SimulatedAccelerator.
+
+Thin registry adapter over :func:`repro.dvfs.transition_models.make_device`;
+``kind`` selects the architecture model (a100 | gh200 | rtx6000), remaining
+options forward to DeviceConfig (n_cores, iter_noise_sigma, wait_impl, ...).
+"""
+from __future__ import annotations
+
+from repro.backends.registry import register_backend
+from repro.dvfs.transition_models import make_device
+
+
+@register_backend(
+    "simulated",
+    description="SimulatedAccelerator calibrated to the paper's three GPUs")
+def make_simulated(kind: str = "a100", *, seed: int = 0, unit_seed: int = 0,
+                   n_cores: int | None = None, **overrides):
+    return make_device(kind, seed=seed, unit_seed=unit_seed,
+                       n_cores=n_cores, **overrides)

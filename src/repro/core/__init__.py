@@ -12,6 +12,10 @@ from repro.core.evaluation import measure_pair
 from repro.core.dbscan import dbscan, adaptive_dbscan
 from repro.core.silhouette import silhouette_score
 from repro.core.latency_table import LatencyTable, PairResult
+from repro.core.executors import SerialExecutor, ThreadExecutor, get_executor
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig, probe_latency)
+from repro.core.latest import run_latest
 
 __all__ = [
     "FreqStats", "mean_std", "diff_confidence_interval", "rse",
@@ -19,5 +23,7 @@ __all__ = [
     "null_hypothesis_holds", "WorkloadSpec", "size_workload",
     "synchronize_timers", "calibrate", "valid_pairs", "measure_switch_once",
     "measure_pair", "dbscan", "adaptive_dbscan", "silhouette_score",
-    "LatencyTable", "PairResult",
+    "LatencyTable", "PairResult", "SerialExecutor", "ThreadExecutor",
+    "get_executor", "LatestConfig", "MeasurementSession", "SessionConfig",
+    "probe_latency", "run_latest",
 ]

@@ -30,12 +30,21 @@ def calibrate(device, frequencies, spec: WorkloadSpec) -> Calibration:
     wakeup = 0.0
     for f in frequencies:
         device.set_frequency(f)
-        first_kernel = None
-        data = None
-        for k in range(max(1, spec.wakeup_kernels)):
-            data = device.run_kernel(spec.iters_per_kernel, spec.flops_per_iter)
-            if k == 0:
-                first_kernel = data
+        n_kernels = max(1, spec.wakeup_kernels)
+        if hasattr(device, "run_kernel_batch"):
+            # vmapped backends evaluate the whole warm-up burst in one
+            # vectorized pass; only the first and last kernels matter here
+            batch = device.run_kernel_batch(
+                n_kernels, spec.iters_per_kernel, spec.flops_per_iter)
+            first_kernel, data = batch[0], batch[-1]
+        else:
+            first_kernel = None
+            data = None
+            for k in range(n_kernels):
+                data = device.run_kernel(spec.iters_per_kernel,
+                                         spec.flops_per_iter)
+                if k == 0:
+                    first_kernel = data
         iters = np.diff(data, axis=-1)[..., 0].ravel()  # (cores*iters,)
         # driver-spike guard: a handful of huge iterations (CUDA driver
         # management, host interference — paper §V-C) would inflate sigma

@@ -35,6 +35,19 @@ class PairMeasurement:
     retries: int
     rse: float
 
+    # persistence hooks for resumable sweeps (repro.core.session)
+    def to_dict(self) -> dict:
+        return {"f_init": self.f_init, "f_target": self.f_target,
+                "latencies": [float(v) for v in self.latencies],
+                "status": self.status, "retries": self.retries,
+                "rse": float(self.rse)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PairMeasurement":
+        return cls(float(d["f_init"]), float(d["f_target"]),
+                   np.asarray(d["latencies"], dtype=np.float64),
+                   str(d["status"]), int(d["retries"]), float(d["rse"]))
+
 
 def measure_pair(device, f_init: float, f_target: float, cal,
                  spec: WorkloadSpec, mc: MeasureConfig = MeasureConfig()

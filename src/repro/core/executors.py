@@ -1,0 +1,69 @@
+"""Pluggable schedulers for frequency-pair measurements.
+
+A sweep is an embarrassingly parallel bag of (f_init, f_target) tasks —
+*provided each worker owns an independent device* (two threads interleaving
+set_frequency on one accelerator would corrupt each other's transitions).
+The session therefore hands every worker its own backend instance; the
+executor only decides how tasks are scheduled:
+
+  SerialExecutor   one device, in-order — the paper's single-GPU campaign
+  ThreadExecutor   N worker threads, one independent device each — the
+                   fleet-measurement shape (multiple boards, or several
+                   simulated units evaluated concurrently)
+
+Results always come back in task order regardless of completion order.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import itertools
+import threading
+
+
+class SerialExecutor:
+    """In-order execution on the session's primary device."""
+
+    n_workers = 1
+
+    def map_pairs(self, fn, pairs):
+        return [fn(p, 0) for p in pairs]
+
+
+class ThreadExecutor:
+    """Thread pool; ``fn(pair, worker_index)`` runs with a stable worker
+    index so the session can pin one device per worker."""
+
+    def __init__(self, max_workers: int = 4):
+        self.n_workers = max(1, int(max_workers))
+
+    def map_pairs(self, fn, pairs):
+        pairs = list(pairs)
+        if not pairs:
+            return []
+        local = threading.local()
+        counter = itertools.count()     # one id per pool thread, thread-safe
+                                        # enough under the GIL for next()
+
+        def worker_index() -> int:
+            if not hasattr(local, "idx"):
+                local.idx = next(counter) % self.n_workers
+            return local.idx
+
+        with concurrent.futures.ThreadPoolExecutor(self.n_workers) as pool:
+            return list(pool.map(lambda p: fn(p, worker_index()), pairs))
+
+
+def get_executor(spec, max_workers: int = 4):
+    """Resolve an executor from a name ("serial" | "threads") or pass an
+    instance through unchanged."""
+    if isinstance(spec, str):
+        if spec == "serial":
+            return SerialExecutor()
+        if spec == "threads":
+            return ThreadExecutor(max_workers=max_workers)
+        raise ValueError(f"unknown executor {spec!r} "
+                         "(expected 'serial' or 'threads')")
+    missing = [a for a in ("map_pairs", "n_workers") if not hasattr(spec, a)]
+    if missing:
+        raise TypeError(f"executor {spec!r} lacks {', '.join(missing)}")
+    return spec

@@ -1,73 +1,38 @@
 """LATEST-style top-level driver (paper §VI): benchmark the switching
 latency of a device over a frequency list, with RSE stopping, throttle
 handling and DBSCAN analysis, producing a LatencyTable (+ CSVs).
+
+Since the session refactor this module is a thin veneer:
+:class:`~repro.core.session.MeasurementSession` owns calibration state,
+executor scheduling and resume-from-disk; ``run_latest`` keeps the
+historical one-call signature on top of it.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
+from repro.core.latency_table import LatencyTable
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig, probe_latency)
 
-import numpy as np
-
-from repro.core.calibration import calibrate, valid_pairs
-from repro.core.evaluation import MeasureConfig, measure_pair
-from repro.core.latency_table import LatencyTable, analyse_pair
-from repro.core.workload import WorkloadSpec, size_workload
+__all__ = ["LatestConfig", "probe_latency", "run_latest"]
 
 
-@dataclasses.dataclass(frozen=True)
-class LatestConfig:
-    base_iter_s: float = 40e-6          # iteration time at f_max
-    delay_iters: int = 300
-    confirm_iters: int = 400
-    probe_pairs: int = 3                # low/mid/high probe for sizing
-    measure: MeasureConfig = MeasureConfig()
-
-
-def probe_latency(device, frequencies, spec, cal, mc) -> float:
-    """Upper-bound probe over low/mid/high pairs (workload-sizing rule)."""
-    fs = sorted(frequencies)
-    probes = [(fs[0], fs[-1]), (fs[-1], fs[0]),
-              (fs[len(fs) // 2], fs[-1])]
-    worst = 1e-3
-    for fi, ft in probes:
-        if fi == ft:
-            continue
-        pm = measure_pair(device, fi, ft, cal, spec,
-                          dataclasses.replace(mc, min_measurements=3,
-                                              max_measurements=3))
-        if pm.latencies.size:
-            worst = max(worst, float(pm.latencies.max()))
-    return worst
-
-
-def run_latest(device, frequencies, cfg: LatestConfig = LatestConfig(),
+def run_latest(device=None, frequencies=None,
+               cfg: LatestConfig | None = None,
                device_name: str = "sim", device_index: int = 0,
                hostname: str = "node0", pair_subset=None,
-               verbose: bool = False) -> LatencyTable:
-    # initial sizing guess; refined after the probe
-    spec0 = WorkloadSpec(
-        iters_per_kernel=cfg.delay_iters + cfg.confirm_iters + 512,
-        flops_per_iter=cfg.base_iter_s, delay_iters=cfg.delay_iters,
-        confirm_iters=cfg.confirm_iters)
-    cal = calibrate(device, frequencies, spec0)
-    pairs = valid_pairs(cal)
-    if pair_subset is not None:
-        pairs = [p for p in pairs if p in set(pair_subset)]
-
-    worst_probe = probe_latency(device, frequencies, spec0, cal, cfg.measure)
-    spec = size_workload(probe_latency_s=worst_probe,
-                         iter_time_s=cfg.base_iter_s,
-                         delay_iters=cfg.delay_iters,
-                         confirm_iters=cfg.confirm_iters)
-
-    table = LatencyTable(device_name, device_index, hostname)
-    for fi, ft in pairs:
-        pm = measure_pair(device, fi, ft, cal, spec, cfg.measure)
-        pr = analyse_pair(fi, ft, pm.latencies, pm.status)
-        table.add(pr)
-        if verbose:
-            print(f"  {fi:.0f}->{ft:.0f} MHz: n={pm.latencies.size} "
-                  f"status={pm.status} worst={pr.worst_case*1e3:.2f}ms "
-                  f"best={pr.best_case*1e3:.2f}ms clusters={pr.n_clusters}")
-    return table
+               verbose: bool = False, *, backend: str | None = None,
+               backend_options: dict | None = None,
+               out_dir: str | None = None, executor="serial",
+               max_workers: int = 4) -> LatencyTable:
+    """One-call sweep.  Pass a live ``device`` (any AcceleratorBackend) or
+    a registry ``backend`` name; with ``out_dir`` the sweep persists pair
+    results as it goes and a re-run resumes instead of restarting."""
+    session = MeasurementSession(
+        device, frequencies,
+        SessionConfig(latest=cfg if cfg is not None else LatestConfig(),
+                      executor=executor, max_workers=max_workers,
+                      out_dir=out_dir),
+        backend=backend, backend_options=backend_options,
+        device_name=device_name, device_index=device_index,
+        hostname=hostname)
+    return session.run(pair_subset=pair_subset, verbose=verbose)

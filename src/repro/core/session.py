@@ -1,0 +1,308 @@
+"""Resumable, backend-agnostic measurement sessions.
+
+The paper's pipeline (calibrate -> switch-detect -> filter) was a serial
+loop over frequency pairs against one concrete simulator.  A
+:class:`MeasurementSession` generalizes it into the shape fleet-scale DVFS
+tooling needs:
+
+* the target is any registered :mod:`repro.backends` backend (or an
+  explicit device instance), never a concrete simulator class;
+* phase-1 calibration state (baselines, workload sizing) is owned by the
+  session and computed once;
+* phase-2/3 pair measurements are scheduled through a pluggable executor —
+  serial on one device, or thread-parallel with one independent device per
+  worker;
+* with ``out_dir`` set, every finished pair is persisted to disk the moment
+  it completes, so an interrupted sweep resumes where it stopped (already
+  measured pairs are loaded, not re-measured) and calibration is reloaded
+  instead of re-run.
+
+``run_latest`` (repro.core.latest) is now a thin veneer over this class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.calibration import Calibration, calibrate, valid_pairs
+from repro.core.evaluation import (MeasureConfig, PairMeasurement,
+                                   measure_pair)
+from repro.core.executors import get_executor
+from repro.core.latency_table import LatencyTable, analyse_pair
+from repro.core.stats import FreqStats
+from repro.core.workload import WorkloadSpec, size_workload
+
+_SESSION_FILE = "session.json"
+_PAIR_DIR = "pairs"
+
+
+@dataclasses.dataclass(frozen=True)
+class LatestConfig:
+    base_iter_s: float = 40e-6          # iteration time at f_max
+    delay_iters: int = 300
+    confirm_iters: int = 400
+    probe_pairs: int = 3                # low/mid/high probe for sizing
+    measure: MeasureConfig = dataclasses.field(default_factory=MeasureConfig)
+
+
+def probe_latency(device, frequencies, spec, cal, mc) -> float:
+    """Upper-bound probe over low/mid/high pairs (workload-sizing rule)."""
+    fs = sorted(frequencies)
+    probes = [(fs[0], fs[-1]), (fs[-1], fs[0]),
+              (fs[len(fs) // 2], fs[-1])]
+    worst = 1e-3
+    for fi, ft in probes:
+        if fi == ft:
+            continue
+        pm = measure_pair(device, fi, ft, cal, spec,
+                          dataclasses.replace(mc, min_measurements=3,
+                                              max_measurements=3))
+        if pm.latencies.size:
+            worst = max(worst, float(pm.latencies.max()))
+    return worst
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    latest: LatestConfig = dataclasses.field(default_factory=LatestConfig)
+    executor: object = "serial"         # "serial" | "threads" | instance
+    max_workers: int = 4
+    out_dir: str | None = None          # persistence root; None = in-memory
+
+
+class MeasurementSession:
+    """Owns one measurement campaign against one device (or one fleet of
+    independent identical devices when thread-parallel)."""
+
+    def __init__(self, device=None, frequencies=None,
+                 cfg: SessionConfig | None = None, *,
+                 backend: str | None = None, backend_options: dict | None = None,
+                 device_factory=None, device_name: str | None = None,
+                 device_index: int = 0, hostname: str = "node0"):
+        if device is None and backend is None:
+            backend = "simulated"
+        self.cfg = cfg if cfg is not None else SessionConfig()
+        self._backend = backend
+        self._backend_options = dict(backend_options or {})
+        if device is None:
+            from repro.backends import create_backend
+            device = create_backend(backend, **self._backend_options)
+        self._devices = [device]
+        self._device_factory = device_factory
+        if self._device_factory is None and backend is not None:
+            def _factory(worker: int):
+                from repro.backends import create_backend
+                opts = dict(self._backend_options)
+                # same modeled unit, independent measurement noise
+                opts["seed"] = int(opts.get("seed", 0)) + worker
+                return create_backend(backend, **opts)
+            self._device_factory = _factory
+        if frequencies is None:
+            frequencies = list(device.frequencies)
+        self.frequencies = [float(f) for f in frequencies]
+        self.device_name = (device_name if device_name is not None
+                            else self._backend_options.get("kind", backend)
+                            or "sim")
+        self.device_index = device_index
+        self.hostname = hostname
+        self.cal: Calibration | None = None
+        self.spec: WorkloadSpec | None = None
+
+    @property
+    def device(self):
+        """The primary device (worker 0)."""
+        return self._devices[0]
+
+    # ------------------------------------------------------------------ #
+    # phase 1: calibration + workload sizing (persisted, reloadable)
+    # ------------------------------------------------------------------ #
+    def _sizing_spec(self) -> WorkloadSpec:
+        lc = self.cfg.latest
+        return WorkloadSpec(
+            iters_per_kernel=lc.delay_iters + lc.confirm_iters + 512,
+            flops_per_iter=lc.base_iter_s, delay_iters=lc.delay_iters,
+            confirm_iters=lc.confirm_iters)
+
+    def calibrate(self, force: bool = False) -> Calibration:
+        if self.cal is not None and self.spec is not None and not force:
+            return self.cal
+        if not force and self._load_calibration():
+            return self.cal
+        lc = self.cfg.latest
+        spec0 = self._sizing_spec()
+        self.cal = calibrate(self.device, self.frequencies, spec0)
+        worst = probe_latency(self.device, self.frequencies, spec0,
+                              self.cal, lc.measure)
+        self.spec = size_workload(probe_latency_s=worst,
+                                  iter_time_s=lc.base_iter_s,
+                                  delay_iters=lc.delay_iters,
+                                  confirm_iters=lc.confirm_iters)
+        self._save_calibration()
+        return self.cal
+
+    # ------------------------------------------------------------------ #
+    # phase 2/3: scheduled pair measurements
+    # ------------------------------------------------------------------ #
+    def valid_pairs(self) -> list[tuple[float, float]]:
+        self.calibrate()
+        return valid_pairs(self.cal)
+
+    def run(self, pair_subset=None, verbose: bool = False) -> LatencyTable:
+        self.calibrate()
+        pairs = valid_pairs(self.cal)
+        if pair_subset is not None:
+            pairs = [p for p in pairs if p in set(pair_subset)]
+        # failed persisted pairs (power_throttled / undetectable) are NOT
+        # treated as done: a resume retries them — the failure may have
+        # been transient
+        done = {p: pm for p, pm in self._load_pairs().items()
+                if pm.status == "ok"}
+        todo = [p for p in pairs if p not in done]
+        if verbose and done:
+            print(f"  resume: {len(done)} pair(s) loaded from "
+                  f"{self.cfg.out_dir}, {len(todo)} to measure")
+        executor = get_executor(self.cfg.executor, self.cfg.max_workers)
+        self._ensure_workers(executor.n_workers)
+        analysed: dict[tuple[float, float], object] = {}
+
+        def one(pair, worker):
+            fi, ft = pair
+            pm = measure_pair(self._devices[worker], fi, ft, self.cal,
+                              self.spec, self.cfg.latest.measure)
+            self._save_pair(pm)
+            if verbose:
+                pr = analyse_pair(fi, ft, pm.latencies, pm.status)
+                analysed[pair] = pr
+                print(f"  {fi:.0f}->{ft:.0f} MHz: n={pm.latencies.size} "
+                      f"status={pm.status} worst={pr.worst_case*1e3:.2f}ms "
+                      f"best={pr.best_case*1e3:.2f}ms "
+                      f"clusters={pr.n_clusters}")
+            return pm
+
+        measured = dict(zip(todo, executor.map_pairs(one, todo)))
+        table = LatencyTable(self.device_name, self.device_index,
+                             self.hostname)
+        for p in pairs:
+            pm = done.get(p) or measured[p]
+            pr = analysed.get(p)
+            if pr is None:
+                pr = analyse_pair(pm.f_init, pm.f_target, pm.latencies,
+                                  pm.status)
+            table.add(pr)
+        return table
+
+    def _ensure_workers(self, n: int) -> None:
+        if n <= len(self._devices):
+            return
+        if self._device_factory is None:
+            raise ValueError(
+                "thread-parallel sweeps need independent devices: construct "
+                "the session with backend=... (registry factory) or pass "
+                "device_factory=")
+        while len(self._devices) < n:
+            self._devices.append(self._device_factory(len(self._devices)))
+
+    # ------------------------------------------------------------------ #
+    # persistence
+    # ------------------------------------------------------------------ #
+    def _config_fingerprint(self) -> dict:
+        """Settings persisted pair results depend on; resuming under a
+        different fingerprint would silently mix measurement regimes.
+        Covers the measurement config AND the device identity (backend +
+        options minus the measurement-noise seed, which is freely
+        resumable across runs)."""
+        lc = self.cfg.latest
+        fp = {"measure": dataclasses.asdict(lc.measure),
+              "base_iter_s": lc.base_iter_s,
+              "delay_iters": lc.delay_iters,
+              "confirm_iters": lc.confirm_iters,
+              "device_name": self.device_name,
+              "backend": self._backend,
+              "backend_options": {k: v for k, v in
+                                  sorted(self._backend_options.items())
+                                  if k != "seed"}}
+        # normalize through JSON so the comparison against a reloaded
+        # session.json is type-stable (tuples become lists, etc.)
+        return json.loads(json.dumps(fp, default=str))
+
+    def _pair_path(self, f_init: float, f_target: float) -> str:
+        return os.path.join(self.cfg.out_dir, _PAIR_DIR,
+                            f"{f_init:g}_{f_target:g}.json")
+
+    def _save_pair(self, pm: PairMeasurement) -> None:
+        if self.cfg.out_dir is None:
+            return
+        path = self._pair_path(pm.f_init, pm.f_target)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(pm.to_dict(), f)
+        os.replace(tmp, path)           # atomic: a crash never half-writes
+
+    def _load_pairs(self) -> dict[tuple[float, float], PairMeasurement]:
+        out: dict[tuple[float, float], PairMeasurement] = {}
+        if self.cfg.out_dir is None:
+            return out
+        pair_dir = os.path.join(self.cfg.out_dir, _PAIR_DIR)
+        if not os.path.isdir(pair_dir):
+            return out
+        for name in sorted(os.listdir(pair_dir)):
+            if not name.endswith(".json"):
+                continue
+            with open(os.path.join(pair_dir, name)) as f:
+                pm = PairMeasurement.from_dict(json.load(f))
+            out[(pm.f_init, pm.f_target)] = pm
+        return out
+
+    def _save_calibration(self) -> None:
+        if self.cfg.out_dir is None:
+            return
+        os.makedirs(self.cfg.out_dir, exist_ok=True)
+        doc = {
+            "device_name": self.device_name,
+            "device_index": self.device_index,
+            "hostname": self.hostname,
+            "frequencies": self.frequencies,
+            "config": self._config_fingerprint(),
+            "wakeup_estimate_s": self.cal.wakeup_estimate_s,
+            "baselines": [dataclasses.asdict(st)
+                          for st in self.cal.baselines.values()],
+            "spec": dataclasses.asdict(self.spec),
+        }
+        tmp = os.path.join(self.cfg.out_dir, _SESSION_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, os.path.join(self.cfg.out_dir, _SESSION_FILE))
+
+    def _load_calibration(self) -> bool:
+        if self.cfg.out_dir is None:
+            return False
+        path = os.path.join(self.cfg.out_dir, _SESSION_FILE)
+        if not os.path.exists(path):
+            return False
+        with open(path) as f:
+            doc = json.load(f)
+        if [float(v) for v in doc["frequencies"]] != self.frequencies:
+            raise ValueError(
+                f"session dir {self.cfg.out_dir} was recorded for "
+                f"frequencies {doc['frequencies']}, not {self.frequencies}; "
+                "use a fresh out_dir")
+        if doc.get("config") != self._config_fingerprint():
+            raise ValueError(
+                f"session dir {self.cfg.out_dir} was recorded with "
+                f"measurement config {doc.get('config')}, which differs "
+                f"from the current {self._config_fingerprint()}; resuming "
+                "would silently mix settings — use a fresh out_dir")
+        baselines = {float(b["freq_mhz"]): FreqStats(**b)
+                     for b in doc["baselines"]}
+        # iteration samples are not persisted (only the fitted baselines
+        # feed detection); an empty dict keeps the dataclass shape
+        self.cal = Calibration(
+            baselines=baselines,
+            iter_samples={f: np.empty(0) for f in baselines},
+            wakeup_estimate_s=float(doc["wakeup_estimate_s"]))
+        self.spec = WorkloadSpec(**doc["spec"])
+        return True

@@ -44,6 +44,7 @@ class DeviceConfig:
     idle_timeout_s: float = 0.05
     thermal_throttle_prob: float = 0.0    # per-kernel; tests can raise it
     power_throttle_freqs: tuple[float, ...] = ()
+    wait_impl: str = "vectorized"         # "vectorized" | "loop" (reference)
 
 
 @dataclasses.dataclass
@@ -72,6 +73,11 @@ class SimulatedAccelerator:
         self._throttle_flags: set[str] = set()
         self._pending_power_throttle = False
         self.history: list[dict] = []     # ground-truth transition log
+
+    @property
+    def frequencies(self) -> tuple[float, ...]:
+        """Supported core frequencies (the AcceleratorBackend contract)."""
+        return self.cfg.frequencies
 
     # ------------------------------------------------------------------ #
     # clocks
@@ -172,22 +178,21 @@ class SimulatedAccelerator:
         c = self.cfg
         n, it = c.n_cores, h.n_iters
         f_max = max(c.frequencies)
-        t = np.full(n, h.start_dev) + self.rng.uniform(0, c.core_skew_s, n)
-        starts = np.empty((n, it))
-        ends = np.empty((n, it))
+        t0 = np.full(n, h.start_dev) + self.rng.uniform(0, c.core_skew_s, n)
         noise = self.rng.lognormal(0.0, c.iter_noise_sigma, (n, it))
         spikes = self.rng.random((n, it)) < c.outlier_prob
-        noise = np.where(spikes, noise * c.outlier_scale, noise)
+        noise[spikes] *= c.outlier_scale       # driver-event spikes, sparse
         ev_t = np.array([e[0] for e in self._events])
         ev_f = np.array([e[1] for e in self._events])
-        for i in range(it):
-            starts[:, i] = t
-            idx = np.searchsorted(ev_t, t, side="right") - 1
-            f = ev_f[np.maximum(idx, 0)]
-            dur = h.base_iter_s * (f_max / f) * noise[:, i]
-            t = t + dur
-            ends[:, i] = t
-        end_dev = float(t.max())
+        if c.wait_impl == "loop":
+            bounds = self._eval_timestamps_loop(
+                h.base_iter_s, t0, noise, ev_t, ev_f, f_max)
+        else:
+            bounds = self._eval_timestamps_vectorized(
+                h.base_iter_s, t0, noise, ev_t, ev_f, f_max)
+        # iteration i runs [bounds[:, i], bounds[:, i+1]]
+        starts, ends = bounds[:, :-1], bounds[:, 1:]
+        end_dev = float(bounds[:, -1].max())
         self._busy_until_dev = end_dev
         self._last_activity_dev = end_dev
         # host blocks until completion
@@ -195,7 +200,105 @@ class SimulatedAccelerator:
         self._host_t = max(self._host_t, host_end)
         q = c.timer_resolution_s
         out = np.stack([starts, ends], axis=-1)
-        return np.floor(out / q) * q
+        out /= q                               # quantize in place
+        np.floor(out, out=out)
+        out *= q
+        return out
+
+    @staticmethod
+    def _eval_timestamps_loop(base_iter_s, t0, noise, ev_t, ev_f, f_max):
+        """Seed reference: one Python pass per iteration, frequency looked up
+        at each iteration's start time.  Returns the (n_cores, n_iters + 1)
+        iteration-boundary timestamps (iteration i runs bounds[:, i] ..
+        bounds[:, i+1])."""
+        n, it = noise.shape
+        t = t0.copy()
+        bounds = np.empty((n, it + 1))
+        bounds[:, 0] = t
+        for i in range(it):
+            idx = np.searchsorted(ev_t, t, side="right") - 1
+            f = ev_f[np.maximum(idx, 0)]
+            dur = base_iter_s * (f_max / f) * noise[:, i]
+            t = t + dur
+            bounds[:, i + 1] = t
+        return bounds
+
+    @staticmethod
+    def _eval_timestamps_vectorized(base_iter_s, t0, noise, ev_t, ev_f, f_max):
+        """Segment-wise cumulative-sum evaluation: the frequency timeline is
+        piecewise constant, so all iterations a core starts inside one
+        segment share one duration scale and their end times are a running
+        sum.  One numpy pass per crossed segment instead of one Python pass
+        per iteration; bit-identical to the loop reference (cumsum with the
+        carried-in start time prepended performs the same left-to-right
+        additions, and frequency is still sampled at each iteration start).
+        """
+        n, it = noise.shape
+        bounds = np.empty((n, it + 1))
+        bounds[:, 0] = t0
+        t = t0.copy()
+        done = np.zeros(n, dtype=np.int64)
+        while (done < it).any():
+            # cores sharing the same progress form a group whose remaining
+            # noise is one contiguous slice — no per-core gather needed; the
+            # start-time skew is tiny, so there are at most 2 such groups
+            for d in np.unique(done):
+                d = int(d)
+                if d >= it:
+                    continue
+                g = np.nonzero(done == d)[0]
+                whole = len(g) == n
+                tg = t if whole else t[g]
+                seg = np.maximum(
+                    np.searchsorted(ev_t, tg, side="right") - 1, 0)
+                scale = base_iter_s * (f_max / ev_f[seg])
+                nxt = np.minimum(seg + 1, len(ev_t) - 1)
+                seg_end = np.where(seg + 1 < len(ev_t), ev_t[nxt], np.inf)
+                last = np.isinf(seg_end).all()
+                w = it - d
+                if not last:
+                    # clamp the evaluation window to roughly the iterations
+                    # that fit in this segment; an undershoot is benign —
+                    # the leftovers are picked up by the next pass, still
+                    # inside the same segment
+                    est = np.max((seg_end - tg) / scale) * 1.05
+                    if np.isfinite(est):
+                        w = min(w, max(int(est) + 2, 1))
+                if whole:
+                    # candidate boundaries computed in place in the output:
+                    # entries past this segment are provisional and get
+                    # overwritten by the pass that owns them
+                    cand = bounds[:, d:d + w + 1]
+                    cand[:, 0] = t
+                    np.multiply(noise[:, d:d + w], scale[:, None],
+                                out=cand[:, 1:])
+                else:
+                    cand = np.empty((len(g), w + 1))
+                    cand[:, 0] = tg
+                    np.multiply(noise[g, d:d + w], scale[:, None],
+                                out=cand[:, 1:])
+                np.add.accumulate(cand, axis=1, out=cand)
+                if last:                           # final segment: all fit
+                    cnt = np.full(len(g), w, dtype=np.int64)
+                else:
+                    # an iteration starting exactly at seg_end belongs to
+                    # the next segment (searchsorted side="right"), so
+                    # strict <; the mask is a per-row prefix since starts
+                    # are increasing
+                    cnt = (cand[:, :-1] < seg_end[:, None]).sum(axis=1)
+                if not whole:
+                    # write back the valid prefix (+ its closing boundary)
+                    m = np.arange(w + 1)[None, :] <= cnt[:, None]
+                    cols = (g[:, None] * (it + 1) + d
+                            + np.arange(w + 1)[None, :])[m]
+                    bounds.flat[cols] = cand[m]
+                adv = cand[np.arange(len(g)), cnt]     # fancy index: a copy
+                if whole:
+                    t = adv
+                else:
+                    t[g] = adv
+                done[g] = d + cnt
+        return bounds
 
     # convenience: blocking run
     def run_kernel(self, n_iters: int, base_iter_s: float) -> np.ndarray:

@@ -55,6 +55,37 @@ class Governor:
               if p.status == "ok" and p.clean.size]
         self._avoid_cap = (np.percentile(ok, cfg.avoid_percentile)
                           if ok else float("inf"))
+        self._f_cur: float | None = None   # planned frequency; None until
+                                           # the first plan() call
+
+    def plan(self, region: Region, device=None) -> float:
+        """One region-boundary decision: pick the target for ``region``
+        from the currently planned frequency, issue the change on
+        ``device`` when one is needed, and track the new state.  The one
+        entry point for runtime loops (train/serve/continuous batching).
+
+        The first call always issues a command: the device may boot at its
+        idle frequency, which the governor cannot observe — planning from
+        max(freqs) without aligning the device would leave it idling."""
+        f_cur = self._f_cur if self._f_cur is not None else max(self.freqs)
+        tgt, _ = self.pick_target(region, f_cur)
+        if device is not None and tgt != self._f_cur:
+            device.set_frequency(tgt)
+        self._f_cur = tgt
+        return tgt
+
+    @classmethod
+    def from_session(cls, session, power: PowerModel | None = None,
+                     cfg: GovernorConfig = GovernorConfig(),
+                     **run_kwargs) -> "Governor":
+        """Build a governor straight from a MeasurementSession: runs (or
+        resumes) the sweep and derives frequencies/power from the session,
+        so runtimes never touch the device or table plumbing directly."""
+        table = session.run(**run_kwargs)
+        freqs = sorted(session.frequencies)
+        if power is None:
+            power = PowerModel(f_max_mhz=max(freqs))
+        return cls(table, power, freqs, cfg)
 
     # ------------------------------------------------------------------ #
     def latency(self, f_from: float, f_to: float) -> float:

@@ -133,8 +133,10 @@ _N_CORES = {"a100": 108, "gh200": 132, "rtx6000": 72}
 
 
 def make_device(kind: str, *, seed: int = 0, unit_seed: int = 0,
-                n_cores: int | None = None, **overrides):
-    """Factory for a paper-calibrated simulated accelerator."""
+                n_cores: int | None = None, cls=None, **overrides):
+    """Factory for a paper-calibrated simulated accelerator.  ``cls`` picks
+    the accelerator class (default SimulatedAccelerator; backends pass
+    subclasses such as VmappedSimAccelerator)."""
     from repro.dvfs.device_model import DeviceConfig, SimulatedAccelerator
     model = _MODELS[kind](unit_seed=unit_seed)
     fmin, fmax, step = _FREQ_TABLES[kind]
@@ -144,4 +146,4 @@ def make_device(kind: str, *, seed: int = 0, unit_seed: int = 0,
         frequencies=tuple(float(f) for f in freqs),
         **overrides,
     )
-    return SimulatedAccelerator(model, cfg, seed=seed)
+    return (cls or SimulatedAccelerator)(model, cfg, seed=seed)

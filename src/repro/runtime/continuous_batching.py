@@ -114,11 +114,6 @@ class ContinuousBatcher:
             busy_acc += busy / self.slots
             if governor is not None and device is not None:
                 from repro.dvfs.planner import Region
-                tgt, _ = governor.pick_target(Region("memory", 0.01),
-                                              getattr(governor, "_f_cur",
-                                                      max(governor.freqs)))
-                if tgt != getattr(governor, "_f_cur", None):
-                    device.set_frequency(tgt)
-                governor._f_cur = tgt
+                governor.plan(Region("memory", 0.01), device)
         self.stats.slot_busy_fraction = busy_acc / max(1, self.stats.steps)
         return self.stats

@@ -2,7 +2,10 @@
 
 The governor hook mirrors train_loop: decode is memory-bound (roofline
 #Dry-run), so the governor steers toward lower frequencies between prefill
-bursts — the paper's §III memory-bound downclocking opportunity.
+bursts — the paper's §III memory-bound downclocking opportunity.  Pass a
+``governor`` (e.g. ``Governor.from_session(...)``, built on a MEASURED
+latency table) plus the backend ``device`` it plans for; the hook consults
+it at the prefill->decode region boundary and again after decode.
 """
 from __future__ import annotations
 
@@ -23,7 +26,8 @@ class ServeConfig:
 
 
 def serve(cfg, env, params, batch, sc: ServeConfig = ServeConfig(),
-          max_len: int | None = None, verbose=False) -> dict:
+          max_len: int | None = None, verbose=False,
+          governor=None, device=None) -> dict:
     dec = decode_module(cfg)
     b, s = batch["tokens"].shape
     max_len = max_len or (s + sc.max_new_tokens)
@@ -37,6 +41,15 @@ def serve(cfg, env, params, batch, sc: ServeConfig = ServeConfig(),
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
+    if governor is not None:
+        from repro.dvfs.planner import Region
+        # decode is memory-bound; one step costs roughly a prefill over a
+        # single token, so the burst lasts ~(t_prefill / prompt_len) per
+        # generated token
+        per_step = max(t_prefill / max(s, 1), 1e-5)
+        governor.plan(Region("memory", per_step * sc.max_new_tokens),
+                      device)
+
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [tok]
     t0 = time.perf_counter()
@@ -46,6 +59,11 @@ def serve(cfg, env, params, batch, sc: ServeConfig = ServeConfig(),
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
+
+    if governor is not None:
+        from repro.dvfs.planner import Region
+        # next prefill burst is compute-bound: plan back up
+        governor.plan(Region("compute", max(t_prefill, 1e-3)), device)
 
     tokens = jnp.concatenate(out, axis=1)
     return {

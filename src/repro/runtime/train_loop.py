@@ -91,13 +91,8 @@ def train(cfg, shape, env, tc: TrainConfig = TrainConfig(), *,
 
         if governor is not None and regions is not None:
             # region-boundary frequency planning for the *next* step
-            f_cur = getattr(governor, "_f_cur", max(governor.freqs))
             for r in regions:
-                tgt, _ = governor.pick_target(r, f_cur)
-                if tgt != f_cur and device is not None:
-                    device.set_frequency(tgt)
-                f_cur = tgt
-            governor._f_cur = f_cur
+                governor.plan(r, device)
 
         if ckpt and tc.checkpoint_every and (step + 1) % tc.checkpoint_every == 0:
             ckpt.save_async(step, {"params": params, "opt": opt_state})

@@ -1,0 +1,62 @@
+"""Backend registry: round-trips, protocol conformance, availability
+gating, and the vmapped batch fast path."""
+import numpy as np
+import pytest
+
+from repro.backends import (AcceleratorBackend, BackendUnavailableError,
+                            VmappedSimAccelerator, create_backend,
+                            get_backend, list_backends, register_backend)
+
+
+def test_builtin_backends_listed():
+    names = list_backends()
+    assert {"simulated", "vmapped-sim", "cuda-nvml"} <= set(names)
+
+
+@pytest.mark.parametrize("name", ["simulated", "vmapped-sim"])
+def test_create_and_protocol(name):
+    dev = create_backend(name, kind="a100", n_cores=4)
+    assert isinstance(dev, AcceleratorBackend)     # runtime-checkable
+    assert len(dev.frequencies) > 2
+    data = dev.run_kernel(16, 40e-6)
+    assert data.shape == (4, 16, 2)
+
+
+def test_unknown_backend_raises_with_known_names():
+    with pytest.raises(KeyError, match="simulated"):
+        get_backend("definitely-not-a-backend")
+
+
+def test_cuda_nvml_listed_but_unavailable():
+    entry = get_backend("cuda-nvml")
+    assert not entry.available           # no pynvml in this environment
+    with pytest.raises(BackendUnavailableError, match="pynvml"):
+        create_backend("cuda-nvml")
+
+
+def test_register_roundtrip():
+    @register_backend("test-dummy", description="round-trip fixture")
+    def make_dummy(**options):
+        return create_backend("simulated", **options)
+
+    assert "test-dummy" in list_backends()
+    dev = create_backend("test-dummy", kind="gh200", n_cores=2)
+    assert dev.cfg.n_cores == 2
+
+
+def test_vmapped_rejects_loop_impl():
+    with pytest.raises(ValueError, match="vectorized"):
+        create_backend("vmapped-sim", kind="a100", n_cores=2,
+                       wait_impl="loop")
+
+
+def test_vmapped_batch_shape_and_continuity():
+    dev = create_backend("vmapped-sim", kind="a100", n_cores=4, seed=0)
+    assert isinstance(dev, VmappedSimAccelerator)
+    dev.set_frequency(dev.frequencies[-1])
+    batch = dev.run_kernel_batch(3, 64, 40e-6)
+    assert batch.shape == (3, 4, 64, 2)
+    starts, ends = batch[..., 0], batch[..., 1]
+    assert (ends >= starts).all()
+    # kernels are gapless and ordered: kernel k+1 starts at kernel k's end
+    assert (batch[1:, :, 0, 0] >= batch[:-1, :, -1, 1] - 1e-9).all()

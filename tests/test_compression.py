@@ -3,6 +3,9 @@ with compressed grads tracks the uncompressed baseline."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests run when installed
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import adamw

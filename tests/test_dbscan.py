@@ -1,5 +1,8 @@
 """DBSCAN (Alg. 3) + silhouette: outlier recall, adaptive convergence."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests run when installed
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dbscan import NOISE, adaptive_dbscan, dbscan, split_clusters

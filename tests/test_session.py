@@ -1,0 +1,152 @@
+"""MeasurementSession: run_latest parity across backends, executor
+scheduling, and resume-from-disk of an interrupted sweep."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.evaluation import MeasureConfig
+from repro.core.latest import run_latest
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
+
+FAST = MeasureConfig(min_measurements=4, max_measurements=6,
+                     rse_check_every=4)
+FREQS = [210.0, 705.0, 1410.0]
+
+
+def _cfg(**kw):
+    return SessionConfig(latest=LatestConfig(measure=FAST), **kw)
+
+
+def _session(out_dir=None, seed=0, backend="simulated", **kw):
+    return MeasurementSession(
+        frequencies=FREQS, cfg=_cfg(out_dir=out_dir, **kw),
+        backend=backend,
+        backend_options={"kind": "a100", "seed": seed, "n_cores": 6})
+
+
+def test_latest_config_measure_not_shared():
+    a, b = LatestConfig(), LatestConfig()
+    assert a.measure is not b.measure          # default_factory, not one
+    assert a.measure == b.measure              # shared frozen instance
+
+
+@pytest.mark.parametrize("backend", ["simulated", "vmapped-sim"])
+def test_run_latest_through_session(backend):
+    table = run_latest(frequencies=FREQS, cfg=LatestConfig(measure=FAST),
+                       backend=backend,
+                       backend_options={"kind": "a100", "seed": 1,
+                                        "n_cores": 6})
+    assert len(table.pairs) == 6               # all permutations valid
+    assert all(p.status == "ok" for p in table.pairs.values())
+    assert all(p.clean.size >= 4 for p in table.pairs.values())
+
+
+def test_interrupted_sweep_resumes_from_disk(tmp_path):
+    out = str(tmp_path / "sweep")
+    subset = [(210.0, 1410.0), (1410.0, 210.0)]
+    s1 = _session(out_dir=out, seed=2)
+    partial = s1.run(pair_subset=subset)
+    assert set(partial.pairs) == set(subset)
+    assert os.path.exists(os.path.join(out, "session.json"))
+    assert len(os.listdir(os.path.join(out, "pairs"))) == 2
+
+    # "crash", then a fresh session over the same state dir
+    s2 = _session(out_dir=out, seed=2)
+    full = s2.run()
+    assert len(full.pairs) == 6
+    # persisted pairs were loaded, not re-measured: the new device never
+    # visited those transitions (calibration was reloaded too, so its
+    # history only contains the remaining pairs' activity)
+    measured = {(h["from"], h["to"]) for h in s2.device.history}
+    assert (210.0, 1410.0) not in measured
+    # and the loaded numbers match the first run bit-for-bit
+    for p in subset:
+        assert np.array_equal(full.pairs[p].latencies,
+                              partial.pairs[p].latencies)
+
+
+def test_resume_skips_recalibration(tmp_path):
+    out = str(tmp_path / "cal")
+    s1 = _session(out_dir=out, seed=3)
+    s1.calibrate()
+    n_transitions_cal = len(s1.device.history)
+    assert n_transitions_cal > 0
+
+    s2 = _session(out_dir=out, seed=3)
+    s2.calibrate()
+    assert len(s2.device.history) == 0         # loaded, not re-run
+    assert set(s2.cal.baselines) == set(s1.cal.baselines)
+    for f in FREQS:
+        assert s2.cal.baselines[f].mean == pytest.approx(
+            s1.cal.baselines[f].mean)
+    assert s2.spec == s1.spec
+
+
+def test_resume_rejects_frequency_mismatch(tmp_path):
+    out = str(tmp_path / "mismatch")
+    _session(out_dir=out, seed=4).calibrate()
+    other = MeasurementSession(
+        frequencies=[210.0, 1410.0], cfg=_cfg(out_dir=out),
+        backend="simulated",
+        backend_options={"kind": "a100", "seed": 4, "n_cores": 6})
+    with pytest.raises(ValueError, match="frequencies"):
+        other.calibrate()
+
+
+def test_resume_rejects_config_mismatch(tmp_path):
+    out = str(tmp_path / "cfgmm")
+    _session(out_dir=out, seed=6).calibrate()
+    other = MeasurementSession(
+        frequencies=FREQS,
+        cfg=SessionConfig(latest=LatestConfig(
+            measure=MeasureConfig(min_measurements=9)), out_dir=out),
+        backend="simulated",
+        backend_options={"kind": "a100", "seed": 6, "n_cores": 6})
+    with pytest.raises(ValueError, match="config"):
+        other.calibrate()
+
+
+def test_resume_retries_failed_pairs(tmp_path):
+    """A persisted power_throttled/undetectable pair is not 'done': the
+    failure may have been transient, so a resume re-measures it."""
+    from repro.core.evaluation import PairMeasurement
+    out = str(tmp_path / "retry")
+    s = _session(out_dir=out, seed=7)
+    s.calibrate()
+    s._save_pair(PairMeasurement(210.0, 1410.0, np.empty(0),
+                                 "power_throttled", 0, float("inf")))
+    table = s.run(pair_subset=[(210.0, 1410.0)])
+    assert table.pairs[(210.0, 1410.0)].status == "ok"
+    assert table.pairs[(210.0, 1410.0)].clean.size >= 4
+
+
+def test_thread_executor_independent_devices():
+    s = _session(executor="threads", max_workers=3, backend="vmapped-sim")
+    table = s.run()
+    assert len(table.pairs) == 6
+    assert all(p.status == "ok" for p in table.pairs.values())
+    assert len(s._devices) == 3                # one device per worker
+    assert len({id(d) for d in s._devices}) == 3
+
+
+def test_explicit_device_without_factory_rejects_threads():
+    from repro.backends import create_backend
+    dev = create_backend("simulated", kind="a100", n_cores=4)
+    s = MeasurementSession(dev, FREQS, _cfg(executor="threads",
+                                            max_workers=2))
+    with pytest.raises(ValueError, match="independent devices"):
+        s.run()
+
+
+def test_pair_files_are_valid_json(tmp_path):
+    out = str(tmp_path / "json")
+    s = _session(out_dir=out, seed=5)
+    s.run(pair_subset=[(210.0, 1410.0)])
+    (name,) = os.listdir(os.path.join(out, "pairs"))
+    with open(os.path.join(out, "pairs", name)) as f:
+        doc = json.load(f)
+    assert doc["status"] == "ok"
+    assert len(doc["latencies"]) >= 4

@@ -2,6 +2,8 @@
 insight (§V-A) reproduced quantitatively."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests run when installed
 from hypothesis import given, settings, strategies as st
 
 from repro.core import stats

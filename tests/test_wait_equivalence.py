@@ -1,0 +1,74 @@
+"""The vectorized segment-cumsum wait() must produce IDENTICAL timestamps
+to the seed per-iteration loop: same seed -> same RNG draws -> bit-equal
+boundaries, across stable kernels, mid-kernel switches, wake-up ramps and
+multi-step trajectories (rtx6000 passes through intermediate frequencies).
+"""
+import numpy as np
+import pytest
+
+from repro.dvfs import make_device
+from repro.dvfs.device_model import SimulatedAccelerator
+
+
+def _exercise(impl: str, kind: str, seed: int, sigma: float | None):
+    kw = {"wait_impl": impl}
+    if sigma is not None:
+        kw["iter_noise_sigma"] = sigma
+    dev = make_device(kind, seed=seed, n_cores=8, **kw)
+    fs = dev.cfg.frequencies
+    out = []
+    dev.set_frequency(fs[0])
+    out.append(dev.run_kernel(200, 40e-6))            # stable kernel
+    h = dev.launch_kernel(1000, 40e-6)                # mid-kernel switch
+    dev.usleep(0.004)
+    dev.set_frequency(fs[-1])
+    out.append(dev.wait(h))
+    dev.usleep(0.1)                                   # idle -> wake-up ramp
+    out.append(dev.run_kernel(500, 40e-6))
+    h = dev.launch_kernel(300, 40e-6)                 # switch near the end
+    dev.usleep(0.001)
+    dev.set_frequency(fs[len(fs) // 2])
+    out.append(dev.wait(h))
+    return out
+
+
+@pytest.mark.parametrize("kind", ["a100", "gh200", "rtx6000"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_vectorized_matches_loop(kind, seed):
+    ref = _exercise("loop", kind, seed, None)
+    vec = _exercise("vectorized", kind, seed, None)
+    for a, b in zip(ref, vec):
+        assert np.array_equal(a, b)
+
+
+def test_vectorized_matches_loop_high_noise():
+    """sigma=0.2 stresses the window-clamp undershoot path."""
+    ref = _exercise("loop", "a100", 3, 0.2)
+    vec = _exercise("vectorized", "a100", 3, 0.2)
+    for a, b in zip(ref, vec):
+        assert np.array_equal(a, b)
+
+
+def test_eval_functions_bit_equal_on_dense_timeline():
+    """Direct comparison on a timeline with many short segments (worst case
+    for the segment walker)."""
+    n, it = 6, 400
+    rng = np.random.default_rng(5)
+    t0 = np.full(n, 1.0) + rng.uniform(0, 2e-6, n)
+    noise = rng.lognormal(0.0, 0.05, (n, it))
+    ev_t = np.concatenate([[-np.inf], 1.0 + np.cumsum(
+        rng.uniform(2e-4, 1e-3, 12))])
+    ev_f = np.concatenate([[210.0], rng.choice(
+        [210.0, 705.0, 1410.0], 12)])
+    a = SimulatedAccelerator._eval_timestamps_loop(
+        40e-6, t0, noise, ev_t, ev_f, 1410.0)
+    b = SimulatedAccelerator._eval_timestamps_vectorized(
+        40e-6, t0, noise, ev_t, ev_f, 1410.0)
+    assert np.array_equal(a, b)
+
+
+def test_wait_loop_impl_selectable():
+    dev = make_device("a100", n_cores=2, wait_impl="loop")
+    assert dev.cfg.wait_impl == "loop"
+    data = dev.run_kernel(32, 40e-6)
+    assert data.shape == (2, 32, 2)
