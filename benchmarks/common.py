@@ -1,24 +1,36 @@
-"""Shared benchmark harness: one entry per paper table/figure.
+"""Shared benchmark harness, backed by the campaign artifact store.
 
-Each bench function returns rows of (name, us_per_call, derived) where
-``us_per_call`` is the wall time of the benchmark's core computation and
-``derived`` a short result string tied to the paper artifact it reproduces.
+The paper-table benchmarks used to re-measure every simulated device on
+every invocation.  They now declare ONE benchmark campaign (all the device
+x seed x frequency-subset variants the tables need) and read the artifact
+store: the first `benchmarks.run` invocation measures and persists, later
+invocations (and anything else — notebooks, CI, the governor) query the
+same content-addressed artifacts.  Delete
+``$REPRO_RESULTS_DIR/campaigns`` (default ``results/campaigns``) to force
+remeasurement; change a spec parameter and the campaign id changes with it.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core.evaluation import MeasureConfig
-from repro.core.session import (LatestConfig, MeasurementSession,
-                                SessionConfig)
+from repro.campaign import (ArtifactStore, Campaign, CampaignSpec,
+                            DeviceSpec, MeasureSpec, run_campaign)
 
 # fast-but-meaningful defaults for the simulated measurement campaign
-FAST = MeasureConfig(min_measurements=5, max_measurements=8,
-                     rse_check_every=5)
+FAST_MEASURE = MeasureSpec(key="fast", min_measurements=5,
+                           max_measurements=8, rse_check_every=5)
 N_CORES = 6
 BACKEND = "vmapped-sim"          # the batched always-vectorized simulator
+
+KINDS = ("rtx6000", "a100", "gh200")
+
+# every (kind, n_freqs, seed, unit_seed) variant the paper-table benches
+# consume; one campaign unit each
+BENCH_VARIANTS = (
+    [(kind, 4, s, 0) for kind in KINDS for s in (0, 1, 2, 3)]   # tbl2/figs3-6
+    + [("a100", 3, 10 + u, u) for u in range(4)]                # figs 7-9
+    + [(kind, 4, 21, 0) for kind in ("a100", "gh200")]          # governor
+)
 
 
 def timed(fn, *args, **kw):
@@ -27,25 +39,61 @@ def timed(fn, *args, **kw):
     return out, (time.perf_counter() - t0) * 1e6
 
 
-def freq_subset(dev, n=5):
-    fs = dev.frequencies
-    idx = np.linspace(0, len(fs) - 1, n).astype(int)
-    return [float(fs[i]) for i in idx]
+def unit_key(kind: str, n_freqs: int = 4, seed: int = 0,
+             unit_seed: int = 0) -> str:
+    return f"{kind}-f{n_freqs}s{seed}u{unit_seed}@{FAST_MEASURE.key}"
 
 
-def measure_session(kind: str, n_freqs: int = 4, seed: int = 0,
-                    unit_seed: int = 0) -> MeasurementSession:
-    from repro.backends import create_backend
-    dev = create_backend(BACKEND, kind=kind, seed=seed, unit_seed=unit_seed,
-                         n_cores=N_CORES)
-    return MeasurementSession(
-        dev, freq_subset(dev, n_freqs),
-        SessionConfig(latest=LatestConfig(measure=FAST)),
-        device_name=kind, device_index=unit_seed)
+def _device(kind: str, n_freqs: int, seed: int, unit_seed: int) -> DeviceSpec:
+    return DeviceSpec.make(
+        f"{kind}-f{n_freqs}s{seed}u{unit_seed}", BACKEND,
+        {"kind": kind, "seed": seed, "unit_seed": unit_seed,
+         "n_cores": N_CORES},
+        n_freqs=n_freqs)
 
 
-def measure_table(kind: str, n_freqs: int = 4, seed: int = 0,
-                  unit_seed: int = 0):
-    session = measure_session(kind, n_freqs, seed, unit_seed)
-    table = session.run()
-    return session.device, table
+def bench_spec() -> CampaignSpec:
+    return CampaignSpec(
+        name="paper-tables",
+        devices=tuple(_device(*v) for v in BENCH_VARIANTS),
+        measures=(FAST_MEASURE,), retries=1)
+
+
+_CAMPAIGN: Campaign | None = None
+
+
+def bench_campaign() -> Campaign:
+    """Run-or-load the benchmark campaign (cached per process; persisted
+    across processes in the artifact store)."""
+    global _CAMPAIGN
+    if _CAMPAIGN is None:
+        result = run_campaign(bench_spec(), ArtifactStore(),
+                              executor="threads", max_workers=4)
+        bad = result.failed()
+        if bad:
+            raise RuntimeError(
+                f"benchmark campaign units failed: "
+                f"{[(o.key, o.error) for o in bad]}")
+        _CAMPAIGN = result.campaign
+    return _CAMPAIGN
+
+
+def table_for(kind: str, n_freqs: int = 4, seed: int = 0,
+              unit_seed: int = 0):
+    return bench_campaign().load_table(unit_key(kind, n_freqs, seed,
+                                                unit_seed))
+
+
+def ground_truth_for(kind: str, n_freqs: int = 4, seed: int = 0,
+                     unit_seed: int = 0) -> dict:
+    return bench_campaign().ground_truth(unit_key(kind, n_freqs, seed,
+                                                  unit_seed))
+
+
+def wall_us_for(kind: str, n_freqs: int = 4, seed: int = 0,
+                unit_seed: int = 0) -> float:
+    """Measurement wall time of the unit (us) as recorded in the manifest —
+    stable across cached re-reads, so benchmark CSVs stay comparable."""
+    st = bench_campaign().unit_states()[unit_key(kind, n_freqs, seed,
+                                                 unit_seed)]
+    return float(st.get("wall_s", 0.0)) * 1e6

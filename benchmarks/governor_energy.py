@@ -7,14 +7,16 @@ import json
 
 import numpy as np
 
-from benchmarks.common import measure_table, timed
+from benchmarks.common import bench_campaign, unit_key, wall_us_for
+from repro.core.paths import results_dir
 from repro.dvfs.governor import (Governor, oblivious_governor_sim, static_sim)
 from repro.dvfs.planner import Region, regions_from_cell
 from repro.dvfs.power_model import PowerModel
 
 
 def _regions():
-    cells = sorted(glob.glob("results/dryrun/*__train_4k__single.json"))
+    cells = sorted(glob.glob(
+        results_dir("dryrun", "*__train_4k__single.json")))
     for c in cells:
         cell = json.load(open(c))
         if cell["status"] == "ok":
@@ -26,12 +28,14 @@ def _regions():
 def bench_governor_energy():
     regions, src = _regions()
     rows = []
+    campaign = bench_campaign()
     for kind in ("a100", "gh200"):
-        (dev, table), us = timed(measure_table, kind, 4, 21)
-        freqs = sorted({f for f, _ in table.pairs} | {f for _, f in table.pairs})
-        power = PowerModel(f_max_mhz=max(freqs))
+        us = wall_us_for(kind, 4, 21)
+        # fleet path: governor built straight from stored artifacts
+        gov = Governor.from_campaign(campaign, unit_key(kind, 4, 21))
+        table, freqs, power = gov.table, gov.freqs, gov.power
         stream = regions * 100
-        aware = Governor(table, power, freqs).simulate(stream)
+        aware = gov.simulate(stream)
         obliv = oblivious_governor_sim(table, power, freqs, stream)
         stat = static_sim(power, freqs, stream)
         save_vs_static = 1 - aware.energy_j / stat.energy_j

@@ -1,38 +1,46 @@
 """Benchmarks reproducing each paper table/figure against the three
-simulated architectures (Table II, Figs. 3-9) + ground-truth recovery."""
+simulated architectures (Table II, Figs. 3-9) + ground-truth recovery.
+
+All measurement data comes from the shared benchmark campaign in the
+artifact store (benchmarks.common.bench_campaign): the first run measures
+and persists, subsequent runs query.  Reported times are the per-unit
+measurement wall times recorded in the campaign manifest.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import FAST, N_CORES, freq_subset, measure_table, timed
+from benchmarks.common import (KINDS, bench_campaign, ground_truth_for,
+                               table_for, timed, unit_key, wall_us_for)
+from repro.campaign.aggregate import comparison_rows
 from repro.core.dbscan import adaptive_dbscan
 from repro.core.silhouette import silhouette_score
 from repro.core import stats as statsmod
 
-KINDS = ("rtx6000", "a100", "gh200")
-
 
 def bench_table2_summary():
-    """Table II: min/mean/max of worst- and best-case latencies per GPU."""
+    """Table II: min/mean/max of worst- and best-case latencies per GPU —
+    pulled through the campaign aggregation layer."""
+    campaign = bench_campaign()
     rows = []
+    by_unit = {r["unit"]: r for r in comparison_rows(campaign)}
     for kind in KINDS:
-        (dev, table), us = timed(measure_table, kind)
-        s = table.summary()
-        w, b = s["worst_case"], s["best_case"]
-        rows.append((f"table2/{kind}", us,
-                     f"worst[min/mean/max]={w['min_ms']:.1f}/{w['mean_ms']:.1f}/"
-                     f"{w['max_ms']:.1f}ms best[min/mean/max]={b['min_ms']:.1f}/"
-                     f"{b['mean_ms']:.1f}/{b['max_ms']:.1f}ms "
-                     f"pairs={s['n_pairs']}"))
-        # ground-truth recovery (the validation the paper can't do)
-        gt = {}
-        for h in dev.history:
-            gt.setdefault((h["from"], h["to"]), []).append(h["true_latency"])
+        r = by_unit[unit_key(kind)]
+        rows.append((f"table2/{kind}", wall_us_for(kind),
+                     f"worst[min/mean/max]={r['worst_min_ms']:.1f}/"
+                     f"{r['worst_mean_ms']:.1f}/{r['worst_max_ms']:.1f}ms "
+                     f"best[min/mean/max]={r['best_min_ms']:.1f}/"
+                     f"{r['best_mean_ms']:.1f}/{r['best_max_ms']:.1f}ms "
+                     f"pairs={r['n_pairs']}"))
+        # ground-truth recovery (the validation the paper can't do) — the
+        # store persists the simulator's true latencies next to the CSVs
+        gt = ground_truth_for(kind)
+        table = table_for(kind)
         errs = []
         for (fi, ft), pr in table.pairs.items():
             if pr.status != "ok" or not pr.clean.size or (fi, ft) not in gt:
                 continue
-            t = max(gt[(fi, ft)])
+            t = gt[(fi, ft)]
             errs.append(abs(pr.worst_case - t) / t)
         rows.append((f"table2/{kind}/ground_truth", 0.0,
                      f"median_rel_err={np.median(errs):.2%} n={len(errs)}"))
@@ -43,11 +51,11 @@ def bench_fig3_heatmaps():
     """Fig. 3: worst-case heatmaps; target-frequency row pattern on GH200."""
     rows = []
     for kind in KINDS:
-        (dev, table), us = timed(measure_table, kind, 4, 1)
+        table = table_for(kind, 4, 1)
         m, inits, targets = table.heatmap("worst")
         col_std = np.nanstd(np.nanmean(m, axis=0))   # across targets
         row_std = np.nanstd(np.nanmean(m, axis=1))   # across inits
-        rows.append((f"fig3/{kind}", us,
+        rows.append((f"fig3/{kind}", wall_us_for(kind, 4, 1),
                      f"max={np.nanmax(m)*1e3:.1f}ms target_effect/init_effect="
                      f"{col_std/max(row_std,1e-12):.2f}"))
     return rows
@@ -57,10 +65,10 @@ def bench_fig4_asymmetry():
     """Fig. 4: up vs down switching-latency distributions (A100 asymmetry)."""
     rows = []
     for kind in KINDS:
-        (dev, table), us = timed(measure_table, kind, 4, 2)
+        table = table_for(kind, 4, 2)
         a = table.asymmetry()
         up, dn = a["increase"], a["decrease"]
-        rows.append((f"fig4/{kind}", us,
+        rows.append((f"fig4/{kind}", wall_us_for(kind, 4, 2),
                      f"up_mean={up['mean_ms']:.1f}ms down_mean="
                      f"{dn['mean_ms']:.1f}ms ratio="
                      f"{up['mean_ms']/max(dn['mean_ms'],1e-9):.2f}"))
@@ -71,12 +79,12 @@ def bench_fig56_clusters():
     """Figs. 5/6 + §VII-B: multi-cluster pairs and silhouette scores."""
     rows = []
     for kind in KINDS:
-        (dev, table), us = timed(measure_table, kind, 4, 3)
+        table = table_for(kind, 4, 3)
         ok = [p for p in table.pairs.values() if p.status == "ok"]
         one = np.mean([p.n_clusters == 1 for p in ok]) if ok else 0
         multi = [p for p in ok if p.n_clusters >= 2 and np.isfinite(p.silhouette)]
         sil = np.mean([p.silhouette for p in multi]) if multi else float("nan")
-        rows.append((f"fig56/{kind}", us,
+        rows.append((f"fig56/{kind}", wall_us_for(kind, 4, 3),
                      f"one_cluster={one:.0%} max_clusters="
                      f"{max((p.n_clusters for p in ok), default=0)} "
                      f"mean_silhouette={sil:.2f}"))
@@ -88,9 +96,8 @@ def bench_fig789_variability():
     tables = []
     us_tot = 0.0
     for unit in range(4):
-        (dev, table), us = timed(measure_table, "a100", 3, 10 + unit, unit)
-        us_tot += us
-        tables.append(table)
+        tables.append(table_for("a100", 3, 10 + unit, unit))
+        us_tot += wall_us_for("a100", 3, 10 + unit, unit)
     pairs = set.intersection(*[set(t.pairs) for t in tables])
     spreads_min, spreads_max = [], []
     worst_unit = np.zeros(4)

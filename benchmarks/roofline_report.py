@@ -6,9 +6,11 @@ import json
 import os
 
 from repro.configs import ARCH_IDS, SHAPES
+from repro.core.paths import results_dir
 
 
-def load_cells(out_dir="results/dryrun", mesh="single", suffix=""):
+def load_cells(out_dir=None, mesh="single", suffix=""):
+    out_dir = out_dir if out_dir is not None else results_dir("dryrun")
     cells = {}
     for arch in ARCH_IDS:
         for shape in SHAPES:

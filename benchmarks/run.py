@@ -1,19 +1,48 @@
 """Benchmark driver — one function per paper table/figure plus the roofline
-report.  Prints ``name,us_per_call,derived`` CSV.
+report.  Prints ``name,us_per_call,derived`` CSV and, unless ``--no-json``,
+writes one machine-readable ``BENCH_<name>.json`` per bench under
+``$REPRO_RESULTS_DIR/bench`` so the perf trajectory is diffable across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--only substring]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import re
 import sys
+import time
 import traceback
+
+_SPEEDUP_RE = re.compile(r"speedup[=:]\s*([0-9.]+)")
+
+
+def _emit_json(out_dir: str, bench_name: str, rows: list, wall_s: float
+               ) -> None:
+    """BENCH_<name>.json: per-op wall time + any speedup-vs-baseline the
+    derived string reports."""
+    doc = {"bench": bench_name, "wall_s": wall_s,
+           "rows": [{"op": name, "us_per_call": us, "derived": derived,
+                     **({"speedup": float(m.group(1))}
+                        if (m := _SPEEDUP_RE.search(derived)) else {})}
+                    for name, us, derived in rows]}
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench_name}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip BENCH_<name>.json emission")
     args = ap.parse_args()
+
+    from repro.core.paths import results_dir
 
     from benchmarks.governor_energy import bench_governor_energy
     from benchmarks.kernel_bench import (bench_flash_attention_kernel,
@@ -48,17 +77,30 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     failures = 0
+    json_dir = results_dir("bench")
     for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue
+        bench_name = bench.__name__.removeprefix("bench_")
+        t0 = time.perf_counter()
         try:
-            for name, us, derived in bench():
+            rows = list(bench())
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
+            if not args.no_json:
+                _emit_json(json_dir, bench_name, rows,
+                           time.perf_counter() - t0)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{bench.__name__},nan,ERROR {type(e).__name__}: {e}",
                   file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
+            if not args.no_json:
+                # overwrite any stale success record: perf-trajectory
+                # tooling must see the failure, not last run's numbers
+                _emit_json(json_dir, bench_name,
+                           [("ERROR", None, f"{type(e).__name__}: {e}")],
+                           time.perf_counter() - t0)
     if failures:
         raise SystemExit(1)
 

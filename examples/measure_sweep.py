@@ -14,6 +14,7 @@ import argparse
 
 from repro.backends import create_backend, list_backends
 from repro.core.evaluation import MeasureConfig
+from repro.core.paths import results_dir
 from repro.core.session import (LatestConfig, MeasurementSession,
                                 SessionConfig)
 
@@ -33,7 +34,8 @@ ap.add_argument("--parallel", type=int, default=0,
 ap.add_argument("--state", default=None,
                 help="session dir: partial results persist here and a "
                      "re-run resumes instead of restarting")
-ap.add_argument("--out", default="results/latest_csv")
+ap.add_argument("--out", default=None,
+                help="CSV dir (default: $REPRO_RESULTS_DIR/latest_csv)")
 args = ap.parse_args()
 
 dev = create_backend(args.backend, kind=args.device, seed=args.device_index,
@@ -59,6 +61,7 @@ session = MeasurementSession(
     device_name=args.device, device_index=args.device_index)
 
 table = session.run(verbose=True)
-paths = table.save_csv(args.out)
+out = args.out if args.out is not None else results_dir("latest_csv")
+paths = table.save_csv(out)
 print(f"\nsummary: {table.summary()}")
-print(f"{len(paths)} CSVs -> {args.out}")
+print(f"{len(paths)} CSVs -> {out}")

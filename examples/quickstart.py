@@ -6,6 +6,8 @@ backend registry + MeasurementSession API.
 """
 import numpy as np
 
+from repro.core.paths import results_dir
+
 from repro.core.evaluation import MeasureConfig
 from repro.core.session import (LatestConfig, MeasurementSession,
                                 SessionConfig)
@@ -39,5 +41,6 @@ for (fi, ft), pr in sorted(table.pairs.items()):
     print(f"  {fi:6.0f}->{ft:6.0f} MHz  measured={pr.worst_case*1e3:7.2f} ms"
           f"  true_max={t*1e3:7.2f} ms")
 print(f"\nmedian relative error: {np.median(errs):.1%}")
-table.save_csv("results/quickstart_csv")
-print("CSVs written to results/quickstart_csv/ (LATEST naming convention)")
+csv_dir = results_dir("quickstart_csv")
+table.save_csv(csv_dir)
+print(f"CSVs written to {csv_dir}/ (LATEST naming convention)")

@@ -10,6 +10,7 @@ from repro.backends import create_backend
 from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
 from repro.core.evaluation import MeasureConfig
+from repro.core.paths import results_dir
 from repro.core.session import (LatestConfig, MeasurementSession,
                                 SessionConfig)
 from repro.dvfs import PowerModel
@@ -50,7 +51,7 @@ env = make_env(cfg, None)
 metrics = train(cfg, shape, env,
                 TrainConfig(steps=args.steps, lr=1e-3, warmup=20,
                             log_every=25,
-                            checkpoint_dir="results/ckpt_energy_aware",
+                            checkpoint_dir=results_dir("ckpt_energy_aware"),
                             checkpoint_every=100),
                 governor=governor, device=device, regions=regions)
 

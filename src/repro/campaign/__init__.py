@@ -1,0 +1,22 @@
+# Fleet-scale measurement orchestration on top of MeasurementSession:
+# declarative specs -> scheduled sessions -> content-addressed artifacts ->
+# cross-device aggregation -> drift detection between campaigns.
+from repro.campaign.spec import (CampaignSpec, DeviceSpec, MeasureSpec,
+                                 UnitSpec)
+from repro.campaign.store import ArtifactStore, Campaign
+from repro.campaign.scheduler import (CampaignResult, CampaignRunner,
+                                      UnitOutcome, run_campaign)
+from repro.campaign.aggregate import (comparison_markdown, comparison_rows,
+                                      report_markdown, unit_summaries)
+from repro.campaign.regression import (CampaignDiff, DiffConfig, PairDrift,
+                                       diff_campaigns, diff_markdown)
+
+__all__ = [
+    "CampaignSpec", "DeviceSpec", "MeasureSpec", "UnitSpec",
+    "ArtifactStore", "Campaign",
+    "CampaignResult", "CampaignRunner", "UnitOutcome", "run_campaign",
+    "comparison_markdown", "comparison_rows", "report_markdown",
+    "unit_summaries",
+    "CampaignDiff", "DiffConfig", "PairDrift", "diff_campaigns",
+    "diff_markdown",
+]

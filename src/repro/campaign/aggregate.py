@@ -1,0 +1,118 @@
+"""Cross-device aggregation: merge a campaign's per-unit latency tables
+into the paper's comparison artifacts.
+
+The headline result (Table II) is exactly this shape — one row per GPU,
+min/mean/max of the per-pair worst- and best-case switching latencies —
+except the paper built it by hand from three separate tool runs.  Here it
+falls out of any campaign: every ``done`` unit contributes a row, and the
+markdown renderer produces the cross-device table for reports/CI artifacts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.campaign.store import Campaign
+
+
+def unit_summaries(campaign: Campaign) -> dict[str, dict]:
+    """`LatencyTable.summary()` (Table II analogue) per finished unit."""
+    return {key: table.summary()
+            for key, table in sorted(campaign.tables().items())}
+
+
+def comparison_rows(campaign: Campaign) -> list[dict]:
+    """Flat cross-device rows ready for tabulation or JSON export."""
+    rows = []
+    for key, s in unit_summaries(campaign).items():
+        if not s:
+            rows.append({"unit": key, "n_pairs": 0})
+            continue
+        w, b = s["worst_case"], s["best_case"]
+        rows.append({
+            "unit": key, "n_pairs": s["n_pairs"],
+            "worst_min_ms": w["min_ms"], "worst_mean_ms": w["mean_ms"],
+            "worst_max_ms": w["max_ms"],
+            "best_min_ms": b["min_ms"], "best_mean_ms": b["mean_ms"],
+            "best_max_ms": b["max_ms"],
+            "one_cluster_fraction": s["one_cluster_fraction"],
+            "max_clusters": s["max_clusters"],
+        })
+    return rows
+
+
+def comparison_markdown(campaign: Campaign) -> str:
+    """Table II across the campaign's devices, as markdown."""
+    rows = comparison_rows(campaign)
+    lines = [
+        "| device unit | pairs | worst min/mean/max (ms) | "
+        "best min/mean/max (ms) | 1-cluster | max clusters |",
+        "|---|---:|---|---|---:|---:|",
+    ]
+    for r in rows:
+        if r.get("n_pairs", 0) == 0:
+            lines.append(f"| {r['unit']} | 0 | – | – | – | – |")
+            continue
+        lines.append(
+            f"| {r['unit']} | {r['n_pairs']} "
+            f"| {r['worst_min_ms']:.1f} / {r['worst_mean_ms']:.1f} / "
+            f"{r['worst_max_ms']:.1f} "
+            f"| {r['best_min_ms']:.1f} / {r['best_mean_ms']:.1f} / "
+            f"{r['best_max_ms']:.1f} "
+            f"| {r['one_cluster_fraction']:.0%} | {r['max_clusters']} |")
+    return "\n".join(lines)
+
+
+def asymmetry_markdown(campaign: Campaign) -> str:
+    """Fig. 4 analogue per unit: increase- vs decrease-transition means."""
+    lines = ["| device unit | up mean (ms) | down mean (ms) | up/down |",
+             "|---|---:|---:|---:|"]
+    for key, table in sorted(campaign.tables().items()):
+        a = table.asymmetry()
+        up, dn = a.get("increase", {}), a.get("decrease", {})
+        if not up or not dn:
+            lines.append(f"| {key} | – | – | – |")
+            continue
+        ratio = up["mean_ms"] / max(dn["mean_ms"], 1e-9)
+        lines.append(f"| {key} | {up['mean_ms']:.1f} | {dn['mean_ms']:.1f} "
+                     f"| {ratio:.2f} |")
+    return "\n".join(lines)
+
+
+def merged_pair_distribution(campaign: Campaign, unit_key: str,
+                             f_init: float, f_target: float) -> np.ndarray:
+    """DBSCAN-cleaned samples for one (unit, pair) — the regression layer's
+    input distribution."""
+    table = campaign.load_table(unit_key)
+    pr = table.lookup(f_init, f_target)
+    if pr is None:
+        return np.empty(0)
+    return pr.clean
+
+
+def report_markdown(campaign: Campaign) -> str:
+    """Full campaign report: status, cross-device Table II, asymmetry."""
+    states = campaign.unit_states()
+    n_done = sum(1 for st in states.values() if st.get("status") == "done")
+    lines = [
+        f"# Campaign `{campaign.campaign_id}` — {campaign.spec.name}",
+        "",
+        f"{n_done}/{len(states)} units done.",
+        "",
+        "## Unit status",
+        "",
+        "| unit | status | attempts | pairs | wall (s) |",
+        "|---|---|---:|---:|---:|",
+    ]
+    for key, st in sorted(states.items()):
+        wall = st.get("wall_s")
+        lines.append(
+            f"| {key} | {st.get('status', '?')} | {st.get('attempts', 0)} "
+            f"| {st.get('n_pairs', '–')} "
+            f"| {f'{wall:.1f}' if wall is not None else '–'} |")
+        if st.get("error"):
+            lines.append(f"| | `{st['error']}` | | | |")
+    lines += ["", "## Cross-device switching latency (Table II analogue)",
+              "", comparison_markdown(campaign),
+              "", "## Transition asymmetry (Fig. 4 analogue)",
+              "", asymmetry_markdown(campaign), ""]
+    return "\n".join(lines)

@@ -1,0 +1,124 @@
+"""`python -m repro.campaign` — the fleet-measurement command surface.
+
+    run    SPEC.json   expand + measure (resumes: same spec -> same id)
+    ls                 list campaigns in the store
+    report CID         cross-device markdown report (Table II analogue)
+    diff   CID_A CID_B flag pairs whose clean latency distribution drifted
+                       (exit code 1 when any pair is flagged -> CI gate)
+
+The store root defaults to ``$REPRO_RESULTS_DIR/campaigns`` (or
+``results/campaigns``); every command takes ``--store`` to override.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.campaign.aggregate import report_markdown
+from repro.campaign.regression import DiffConfig, diff_campaigns, diff_markdown
+from repro.campaign.scheduler import CampaignRunner
+from repro.campaign.spec import CampaignSpec
+from repro.campaign.store import ArtifactStore
+
+
+def _store(args) -> ArtifactStore:
+    return ArtifactStore(args.store)
+
+
+def _emit(text: str, out: str | None) -> None:
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {out}")
+    else:
+        print(text)
+
+
+def cmd_run(args) -> int:
+    spec = CampaignSpec.load(args.spec)
+    runner = CampaignRunner(spec, _store(args), executor=args.executor,
+                            max_workers=args.workers)
+    print(f"campaign {spec.campaign_id()} ({spec.name}): "
+          f"{len(spec.units())} unit(s)")
+    result = runner.run(verbose=not args.quiet)
+    for o in result.failed():
+        print(f"  FAILED {o.key} after {o.attempts} attempt(s): {o.error}",
+              file=sys.stderr)
+    print(f"{'ok' if result.ok else 'INCOMPLETE'}: "
+          f"artifacts in {result.campaign.dir}")
+    return 0 if result.ok else 1
+
+
+def cmd_ls(args) -> int:
+    rows = _store(args).list_campaigns()
+    if not rows:
+        print(f"no campaigns under {_store(args).root}")
+        return 0
+    for r in rows:
+        print(f"{r['campaign_id']}  {r['units_done']}/{r['units_total']} "
+              f"units  {r['name']}")
+    return 0
+
+
+def cmd_report(args) -> int:
+    campaign = _store(args).load(args.campaign)
+    _emit(report_markdown(campaign), args.out)
+    return 0
+
+
+def cmd_diff(args) -> int:
+    store = _store(args)
+    diff = diff_campaigns(
+        store.load(args.reference), store.load(args.candidate),
+        DiffConfig(worst_delta_threshold=args.threshold, alpha=args.alpha))
+    _emit(diff_markdown(diff), args.out)
+    return 0 if diff.clean else 1
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaign",
+        description="Fleet-scale switching-latency measurement campaigns")
+    ap.add_argument("--store", default=None,
+                    help="artifact store root (default: "
+                         "$REPRO_RESULTS_DIR/campaigns)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("run", help="run (or resume) a campaign spec")
+    p.add_argument("spec", help="path to a CampaignSpec JSON file")
+    p.add_argument("--executor", choices=("serial", "threads"),
+                   default="serial")
+    p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("ls", help="list campaigns in the store")
+    p.set_defaults(fn=cmd_ls)
+
+    p = sub.add_parser("report", help="cross-device markdown report")
+    p.add_argument("campaign", help="campaign id (or unique prefix)")
+    p.add_argument("--out", default=None, help="write to file")
+    p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("diff",
+                       help="flag drifted pairs between two campaigns "
+                            "(exit 1 on drift)")
+    p.add_argument("reference")
+    p.add_argument("candidate")
+    p.add_argument("--threshold", type=float,
+                   default=DiffConfig.worst_delta_threshold,
+                   help="relative worst-case delta to flag")
+    p.add_argument("--alpha", type=float, default=DiffConfig.alpha,
+                   help="Mann-Whitney significance level")
+    p.add_argument("--out", default=None, help="write to file")
+    p.set_defaults(fn=cmd_diff)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

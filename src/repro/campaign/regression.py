@@ -1,0 +1,134 @@
+"""Regression detection between two campaigns of the same fleet.
+
+Cross-architecture DVFS studies show switching latencies must be
+re-measured per device generation — and once campaigns run continuously,
+the question becomes "did any pair's latency *drift* since the table the
+governor is using was measured?".  The detector diffs two campaigns
+pair-by-pair on their DBSCAN-cleaned sample distributions and flags a pair
+when BOTH hold:
+
+* the worst-case (max clean) latency moved by more than
+  ``worst_delta_threshold`` relative — the quantity the governor's
+  hysteresis rule actually consumes; and
+* a nonparametric two-sample test (Mann-Whitney U,
+  :func:`repro.core.stats.mann_whitney_u`) rejects "same distribution" at
+  ``alpha`` — so a single outlier pass that survived DBSCAN cannot flag a
+  pair on its own.  With fewer than ``min_samples`` clean samples on
+  either side the test is underpowered and the delta rule decides alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.campaign.store import Campaign
+from repro.core.stats import mann_whitney_u
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffConfig:
+    worst_delta_threshold: float = 0.2     # |relative worst-case change|
+    alpha: float = 0.05                    # Mann-Whitney significance
+    min_samples: int = 4                   # below this, delta decides alone
+
+
+@dataclasses.dataclass
+class PairDrift:
+    unit_key: str
+    f_init: float
+    f_target: float
+    worst_a: float
+    worst_b: float
+    rel_delta: float                       # (worst_b - worst_a) / worst_a
+    p_value: float                         # nan when underpowered
+    flagged: bool
+
+
+@dataclasses.dataclass
+class CampaignDiff:
+    campaign_a: str
+    campaign_b: str
+    drifts: list[PairDrift]
+    only_in_a: list[tuple[str, float, float]]
+    only_in_b: list[tuple[str, float, float]]
+
+    def flagged(self) -> list[PairDrift]:
+        return [d for d in self.drifts if d.flagged]
+
+    @property
+    def clean(self) -> bool:
+        return not self.flagged()
+
+
+def _comparable_pairs(table) -> dict:
+    return {(fi, ft): pr for (fi, ft), pr in table.pairs.items()
+            if pr.status == "ok" and pr.clean.size}
+
+
+def diff_campaigns(a: Campaign, b: Campaign,
+                   cfg: DiffConfig = DiffConfig()) -> CampaignDiff:
+    """Diff ``b`` (candidate) against ``a`` (reference)."""
+    drifts: list[PairDrift] = []
+    only_a: list[tuple[str, float, float]] = []
+    only_b: list[tuple[str, float, float]] = []
+    tables_a = a.tables()
+    tables_b = b.tables()
+    for key in sorted(set(tables_a) | set(tables_b)):
+        if key not in tables_b:
+            only_a.extend((key, fi, ft)
+                          for fi, ft in _comparable_pairs(tables_a[key]))
+            continue
+        if key not in tables_a:
+            only_b.extend((key, fi, ft)
+                          for fi, ft in _comparable_pairs(tables_b[key]))
+            continue
+        pa = _comparable_pairs(tables_a[key])
+        pb = _comparable_pairs(tables_b[key])
+        only_a.extend((key, fi, ft) for fi, ft in sorted(set(pa) - set(pb)))
+        only_b.extend((key, fi, ft) for fi, ft in sorted(set(pb) - set(pa)))
+        for (fi, ft) in sorted(set(pa) & set(pb)):
+            ra, rb = pa[(fi, ft)], pb[(fi, ft)]
+            if ra.worst_case > 0:
+                rel = (rb.worst_case - ra.worst_case) / ra.worst_case
+            else:                 # sub-timer-resolution reference samples
+                rel = float("inf") if rb.worst_case > 0 else 0.0
+            underpowered = (ra.clean.size < cfg.min_samples
+                            or rb.clean.size < cfg.min_samples)
+            if underpowered:
+                p = float("nan")
+                shifted = True
+            else:
+                _, p = mann_whitney_u(ra.clean, rb.clean)
+                shifted = p < cfg.alpha
+            flagged = abs(rel) > cfg.worst_delta_threshold and shifted
+            drifts.append(PairDrift(key, fi, ft, ra.worst_case,
+                                    rb.worst_case, rel, p, flagged))
+    return CampaignDiff(a.campaign_id, b.campaign_id, drifts, only_a, only_b)
+
+
+def diff_markdown(diff: CampaignDiff) -> str:
+    flagged = diff.flagged()
+    lines = [
+        f"# Campaign diff: `{diff.campaign_a}` (reference) vs "
+        f"`{diff.campaign_b}` (candidate)",
+        "",
+        f"{len(diff.drifts)} comparable pairs, "
+        f"**{len(flagged)} flagged** as drifted.",
+        "",
+    ]
+    if diff.only_in_a or diff.only_in_b:
+        lines += [f"Coverage changed: {len(diff.only_in_a)} pair(s) only in "
+                  f"reference, {len(diff.only_in_b)} only in candidate.", ""]
+    lines += ["| unit | pair (MHz) | worst A (ms) | worst B (ms) | Δ | "
+              "MW p | drift |",
+              "|---|---|---:|---:|---:|---:|---|"]
+    # flagged rows first, then the largest absolute movements for context
+    shown = flagged + sorted((d for d in diff.drifts if not d.flagged),
+                             key=lambda d: -abs(d.rel_delta))[:10]
+    for d in shown:
+        p = "–" if d.p_value != d.p_value else f"{d.p_value:.3g}"
+        lines.append(
+            f"| {d.unit_key} | {d.f_init:.0f}→{d.f_target:.0f} "
+            f"| {d.worst_a * 1e3:.2f} | {d.worst_b * 1e3:.2f} "
+            f"| {d.rel_delta:+.1%} | {p} "
+            f"| {'**DRIFT**' if d.flagged else ''} |")
+    return "\n".join(lines)

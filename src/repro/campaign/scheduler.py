@@ -1,0 +1,153 @@
+"""Expand a CampaignSpec into sessions and run them to completion.
+
+The runner is the glue between three resume layers:
+
+* **campaign level** — units already ``done`` in the manifest are loaded
+  from the store, never re-measured;
+* **unit level** — each unit's :class:`MeasurementSession` persists into
+  the campaign's ``units/<key>/session`` directory, so a unit interrupted
+  mid-sweep resumes at *pair* granularity;
+* **per-unit retry** — a unit that raises gets up to ``spec.retries``
+  TOTAL attempts before being marked ``failed`` (the failure may be
+  transient: a flaky board, a throttling burst); failed units never
+  poison the rest of the campaign.
+
+Units are scheduled through :mod:`repro.core.executors` — the same
+serial/thread pool the session uses for pairs — because a campaign is an
+embarrassingly parallel bag of units, each owning its own device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import traceback
+
+from repro.campaign.spec import CampaignSpec, UnitSpec
+from repro.campaign.store import (UNIT_DONE, UNIT_FAILED, UNIT_RUNNING,
+                                  ArtifactStore, Campaign)
+from repro.core.executors import get_executor
+from repro.core.latency_table import LatencyTable
+
+
+@dataclasses.dataclass
+class UnitOutcome:
+    key: str
+    status: str                        # done | failed | loaded
+    attempts: int = 0
+    wall_s: float = 0.0
+    error: str | None = None
+    table: LatencyTable | None = None
+    session: object | None = None      # live session (fresh runs only)
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    campaign: Campaign
+    outcomes: dict[str, UnitOutcome]
+
+    @property
+    def ok(self) -> bool:
+        return all(o.status in ("done", "loaded")
+                   for o in self.outcomes.values())
+
+    def failed(self) -> list[UnitOutcome]:
+        return [o for o in self.outcomes.values() if o.status == "failed"]
+
+    def tables(self) -> dict[str, LatencyTable]:
+        return {k: o.table for k, o in sorted(self.outcomes.items())
+                if o.table is not None}
+
+
+def _ground_truth(session) -> dict[tuple[float, float], float]:
+    """Max true transition latency per pair from the simulator's event log
+    (empty when the backend keeps no history, e.g. real hardware)."""
+    gt: dict[tuple[float, float], float] = {}
+    for dev in getattr(session, "devices", []):
+        for h in getattr(dev, "history", []):
+            key = (float(h["from"]), float(h["to"]))
+            gt[key] = max(gt.get(key, 0.0), float(h["true_latency"]))
+    return gt
+
+
+class CampaignRunner:
+    def __init__(self, spec: CampaignSpec, store: ArtifactStore | None = None,
+                 *, executor: str = "serial", max_workers: int = 4):
+        self.spec = spec
+        self.store = store if store is not None else ArtifactStore()
+        self.executor = executor
+        self.max_workers = max_workers
+
+    def run(self, verbose: bool = False) -> CampaignResult:
+        campaign = self.store.open(self.spec)
+        states = campaign.unit_states()
+        outcomes: dict[str, UnitOutcome] = {}
+        todo: list[UnitSpec] = []
+        for unit in self.spec.units():
+            st = states.get(unit.key, {})
+            if (st.get("status") == UNIT_DONE
+                    and campaign.has_unit_result(unit.key)):
+                outcomes[unit.key] = UnitOutcome(
+                    unit.key, "loaded", attempts=st.get("attempts", 0),
+                    wall_s=st.get("wall_s", 0.0),
+                    table=campaign.load_table(unit.key))
+            else:
+                todo.append(unit)
+        if verbose and outcomes:
+            print(f"campaign {campaign.campaign_id}: "
+                  f"{len(outcomes)} unit(s) loaded from store, "
+                  f"{len(todo)} to run")
+
+        def one(unit: UnitSpec, worker: int) -> UnitOutcome:
+            return self._run_unit(campaign, unit, verbose)
+
+        pool = get_executor(self.executor, self.max_workers)
+        for outcome in pool.map_pairs(one, todo):
+            outcomes[outcome.key] = outcome
+        return CampaignResult(campaign, outcomes)
+
+    # -------------------------------------------------------------- #
+    def _run_unit(self, campaign: Campaign, unit: UnitSpec,
+                  verbose: bool) -> UnitOutcome:
+        error = None
+        attempts = 0
+        # ground truth accumulated across attempts: a failed attempt may
+        # have measured (and persisted) pairs the retry's session will
+        # load instead of re-visiting, so its oracle must not be dropped
+        gt_acc: dict[tuple[float, float], float] = {}
+        for attempt in range(1, max(1, self.spec.retries) + 1):
+            attempts = attempt
+            campaign.mark_unit(unit.key, status=UNIT_RUNNING,
+                               attempts=attempt)
+            t0 = time.perf_counter()
+            session = None
+            try:
+                session = unit.build_session(
+                    out_dir=campaign.session_dir(unit.key))
+                table = session.run(verbose=False)
+                wall = time.perf_counter() - t0
+                gt_acc.update(_ground_truth(session))
+                campaign.save_unit_result(unit.key, table, gt_acc)
+                campaign.mark_unit(unit.key, status=UNIT_DONE,
+                                   wall_s=wall, n_pairs=len(table.pairs),
+                                   error=None)
+                if verbose:
+                    print(f"  [{unit.key}] done: {len(table.pairs)} pairs "
+                          f"in {wall:.1f}s (attempt {attempt})")
+                return UnitOutcome(unit.key, "done", attempt, wall,
+                                   table=table, session=session)
+            except Exception as exc:  # noqa: BLE001 — unit isolation
+                if session is not None:
+                    gt_acc.update(_ground_truth(session))
+                error = f"{type(exc).__name__}: {exc}"
+                if verbose:
+                    print(f"  [{unit.key}] attempt {attempt} failed: {error}")
+                    traceback.print_exc()
+        campaign.mark_unit(unit.key, status=UNIT_FAILED, error=error)
+        return UnitOutcome(unit.key, "failed", attempts, error=error)
+
+
+def run_campaign(spec: CampaignSpec, store: ArtifactStore | None = None,
+                 **kw) -> CampaignResult:
+    """One-call convenience: expand, schedule, persist, return."""
+    verbose = kw.pop("verbose", False)
+    return CampaignRunner(spec, store, **kw).run(verbose=verbose)

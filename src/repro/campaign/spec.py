@@ -1,0 +1,218 @@
+"""Declarative campaign specifications (ReFrame-style parameterization).
+
+A :class:`CampaignSpec` declares a *matrix* of measurement work — device
+axes (backend + construction options + frequency subset) crossed with
+measurement-config axes — instead of imperatively scripting sweeps.  The
+scheduler expands the matrix into :class:`UnitSpec` units, each of which is
+exactly one :class:`repro.core.session.MeasurementSession`; the artifact
+store keys everything off :meth:`CampaignSpec.campaign_id`, a content hash
+of the canonical spec, so the same spec always lands in (and resumes from)
+the same artifacts.
+
+Specs are plain JSON on disk::
+
+    {
+      "name": "three-gpus",
+      "devices": [
+        {"key": "a100",  "backend": "vmapped-sim",
+         "options": {"kind": "a100", "n_cores": 6}, "n_freqs": 3},
+        {"key": "gh200", "backend": "vmapped-sim",
+         "options": {"kind": "gh200", "n_cores": 6}, "n_freqs": 3}
+      ],
+      "measures": [{"key": "fast", "min_measurements": 5,
+                    "max_measurements": 8, "rse_check_every": 5}]
+    }
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+
+from repro.core.evaluation import MeasureConfig
+from repro.core.session import LatestConfig, MeasurementSession, SessionConfig
+
+_KEY_RE = re.compile(r"[A-Za-z0-9._-]+")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """One device axis value: how to build the measurement target."""
+
+    key: str                                  # unique label within the campaign
+    backend: str = "simulated"
+    options: tuple = ()                       # sorted (name, value) pairs
+    frequencies: tuple | None = None          # explicit MHz list, or None
+    n_freqs: int = 3                          # evenly-spaced subset when None
+
+    @staticmethod
+    def make(key: str, backend: str = "simulated", options: dict | None = None,
+             frequencies=None, n_freqs: int = 3) -> "DeviceSpec":
+        opts = tuple(sorted((options or {}).items()))
+        if frequencies is not None:
+            freqs = tuple(float(f) for f in frequencies)
+            if not freqs:
+                raise ValueError(
+                    f"device {key!r}: frequencies must be non-empty when "
+                    "provided (omit the field for an n_freqs subset)")
+        else:
+            freqs = None
+        return DeviceSpec(key, backend, opts, freqs, int(n_freqs))
+
+    @property
+    def options_dict(self) -> dict:
+        return dict(self.options)
+
+    def create_device(self):
+        from repro.backends import create_backend
+        return create_backend(self.backend, **self.options_dict)
+
+    def resolve_frequencies(self, device) -> list[float]:
+        if self.frequencies is not None:
+            return [float(f) for f in self.frequencies]
+        fs = list(device.frequencies)
+        n = max(2, min(self.n_freqs, len(fs)))
+        idx = [round(i * (len(fs) - 1) / (n - 1)) for i in range(n)]
+        return [float(fs[i]) for i in sorted(set(idx))]
+
+    def to_dict(self) -> dict:
+        return {"key": self.key, "backend": self.backend,
+                "options": self.options_dict,
+                "frequencies": list(self.frequencies) if self.frequencies else None,
+                "n_freqs": self.n_freqs}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeviceSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown device fields {sorted(extra)}; "
+                             f"expected a subset of {sorted(known)}")
+        return cls.make(d["key"], d.get("backend", "simulated"),
+                        d.get("options"), d.get("frequencies"),
+                        d.get("n_freqs", 3))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureSpec:
+    """One measurement-config axis value (phase 2/3 repetition policy)."""
+
+    key: str = "default"
+    rse_target: float = 0.05
+    min_measurements: int = 8
+    max_measurements: int = 24
+    rse_check_every: int = 8
+    base_iter_s: float = 40e-6
+    delay_iters: int = 300
+    confirm_iters: int = 400
+    probe_pairs: int = 3
+
+    def to_latest_config(self) -> LatestConfig:
+        return LatestConfig(
+            base_iter_s=self.base_iter_s, delay_iters=self.delay_iters,
+            confirm_iters=self.confirm_iters, probe_pairs=self.probe_pairs,
+            measure=MeasureConfig(
+                rse_target=self.rse_target,
+                min_measurements=self.min_measurements,
+                max_measurements=self.max_measurements,
+                rse_check_every=self.rse_check_every))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MeasureSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown measure fields {sorted(extra)}; "
+                             f"expected a subset of {sorted(known)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitSpec:
+    """One expanded cell of the matrix: device x measurement config."""
+
+    device: DeviceSpec
+    measure: MeasureSpec
+
+    @property
+    def key(self) -> str:
+        return f"{self.device.key}@{self.measure.key}"
+
+    def build_session(self, out_dir: str | None = None,
+                      executor: str = "serial") -> MeasurementSession:
+        device = self.device.create_device()
+        return MeasurementSession(
+            device, self.device.resolve_frequencies(device),
+            SessionConfig(latest=self.measure.to_latest_config(),
+                          executor=executor, out_dir=out_dir),
+            backend=self.device.backend,
+            backend_options=self.device.options_dict,
+            device_name=self.device.key)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    name: str
+    devices: tuple[DeviceSpec, ...]
+    measures: tuple[MeasureSpec, ...] = (MeasureSpec(),)
+    retries: int = 2                          # TOTAL attempts per unit
+
+    def __post_init__(self):
+        if not self.devices:
+            raise ValueError("a campaign needs at least one device")
+        for group, keys in (("device", [d.key for d in self.devices]),
+                            ("measure", [m.key for m in self.measures])):
+            dupes = {k for k in keys if keys.count(k) > 1}
+            if dupes:
+                raise ValueError(f"duplicate {group} keys {sorted(dupes)}")
+            # keys become store directory names and the two halves of the
+            # "<device>@<measure>" unit key — keep them path- and
+            # separator-safe
+            for k in keys:
+                if not k or k in (".", "..") or not _KEY_RE.fullmatch(k):
+                    raise ValueError(
+                        f"invalid {group} key {k!r}: use only letters, "
+                        "digits, '.', '_' and '-'")
+
+    def units(self) -> list[UnitSpec]:
+        return [UnitSpec(d, m) for d in self.devices for m in self.measures]
+
+    # -------------------------------------------------------------- #
+    # canonical form + content addressing
+    # -------------------------------------------------------------- #
+    def to_dict(self) -> dict:
+        return {"name": self.name,
+                "devices": [d.to_dict() for d in self.devices],
+                "measures": [m.to_dict() for m in self.measures],
+                "retries": self.retries}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CampaignSpec":
+        measures = tuple(MeasureSpec.from_dict(m)
+                         for m in d.get("measures") or [{}])
+        return cls(name=d["name"],
+                   devices=tuple(DeviceSpec.from_dict(x) for x in d["devices"]),
+                   measures=measures, retries=int(d.get("retries", 2)))
+
+    def canonical_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def campaign_id(self) -> str:
+        """Content address: two campaigns share artifacts iff their specs
+        are byte-identical in canonical form."""
+        digest = hashlib.sha256(self.canonical_json().encode()).hexdigest()
+        return f"c{digest[:12]}"
+
+    @classmethod
+    def load(cls, path: str) -> "CampaignSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)

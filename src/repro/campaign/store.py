@@ -1,0 +1,248 @@
+"""Content-addressed on-disk artifact store for measurement campaigns.
+
+Layout (everything human-readable, everything atomic-replace written)::
+
+    <root>/<campaign_id>/
+        spec.json                  # canonical CampaignSpec
+        manifest.json              # per-unit status / attempts / wall time
+        units/<unit_key>/
+            session/               # MeasurementSession state (resumable:
+                                   #   session.json + pairs/*.json)
+            table/                 # per-pair CSVs, LATEST naming convention
+            result.json            # pair index + simulator ground truth
+
+The campaign id is the hash of the spec (:meth:`CampaignSpec.campaign_id`),
+so re-running an identical spec lands in the same directory and *resumes*:
+finished units are skipped via the manifest, half-finished units resume at
+pair granularity via the embedded session state.  Raw samples live in the
+``table/`` CSVs (``latency_s,is_outlier`` — :class:`LatencyTable`'s format),
+which is what the aggregation and regression layers read back.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.campaign.spec import CampaignSpec
+from repro.core.latency_table import LatencyTable, PairResult
+from repro.core.paths import campaigns_dir
+
+_SPEC = "spec.json"
+_MANIFEST = "manifest.json"
+_RESULT = "result.json"
+_UNITS = "units"
+
+UNIT_PENDING = "pending"
+UNIT_RUNNING = "running"
+UNIT_DONE = "done"
+UNIT_FAILED = "failed"
+
+
+def _atomic_write_json(path: str, doc: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+class Campaign:
+    """Handle to one campaign's artifacts (spec + manifest + unit dirs)."""
+
+    def __init__(self, root: str, spec: CampaignSpec,
+                 campaign_id: str | None = None):
+        self.spec = spec
+        self.campaign_id = campaign_id or spec.campaign_id()
+        self.dir = os.path.join(root, self.campaign_id)
+        self._lock = threading.Lock()
+        # unit results are write-once (save invalidates), so reloading the
+        # CSVs for every report section / benchmark row would be pure waste
+        self._table_cache: dict[str, LatencyTable] = {}
+
+    # -------------------------------------------------------------- #
+    # paths
+    # -------------------------------------------------------------- #
+    def unit_dir(self, unit_key: str) -> str:
+        return os.path.join(self.dir, _UNITS, unit_key)
+
+    def session_dir(self, unit_key: str) -> str:
+        return os.path.join(self.unit_dir(unit_key), "session")
+
+    def table_dir(self, unit_key: str) -> str:
+        return os.path.join(self.unit_dir(unit_key), "table")
+
+    def _result_path(self, unit_key: str) -> str:
+        return os.path.join(self.unit_dir(unit_key), _RESULT)
+
+    # -------------------------------------------------------------- #
+    # manifest
+    # -------------------------------------------------------------- #
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, _MANIFEST)
+
+    def init(self) -> None:
+        """Create the on-disk skeleton (idempotent; resumes keep state)."""
+        os.makedirs(os.path.join(self.dir, _UNITS), exist_ok=True)
+        spec_path = os.path.join(self.dir, _SPEC)
+        if not os.path.exists(spec_path):
+            _atomic_write_json(spec_path, self.spec.to_dict())
+        if not os.path.exists(self._manifest_path()):
+            _atomic_write_json(self._manifest_path(), {
+                "campaign_id": self.campaign_id,
+                "name": self.spec.name,
+                "created_at": time.time(),
+                "units": {u.key: {"status": UNIT_PENDING, "attempts": 0}
+                          for u in self.spec.units()},
+            })
+
+    def manifest(self) -> dict:
+        with open(self._manifest_path()) as f:
+            return json.load(f)
+
+    def unit_states(self) -> dict[str, dict]:
+        return self.manifest()["units"]
+
+    def mark_unit(self, unit_key: str, **fields) -> None:
+        """Merge ``fields`` into one unit's manifest entry (thread-safe
+        within this process; writes are atomic against crashes)."""
+        with self._lock:
+            doc = self.manifest()
+            doc["units"].setdefault(unit_key, {"attempts": 0}).update(fields)
+            _atomic_write_json(self._manifest_path(), doc)
+
+    def done_units(self) -> list[str]:
+        return sorted(k for k, st in self.unit_states().items()
+                      if st.get("status") == UNIT_DONE)
+
+    # -------------------------------------------------------------- #
+    # unit results
+    # -------------------------------------------------------------- #
+    def save_unit_result(self, unit_key: str, table: LatencyTable,
+                         ground_truth: dict | None = None) -> None:
+        """Persist one finished unit: per-pair CSVs + the metadata the CSVs
+        cannot carry (status, cluster structure, simulator ground truth).
+
+        Ground truth is MERGED with any previously stored values: a
+        re-measured unit's new session never re-visits already-persisted
+        pairs, so its device history covers only the remainder — truths
+        stored by an earlier save must survive.  (A unit interrupted
+        before its FIRST save has no stored truths to merge; the oracle
+        for its pre-crash pairs lived only in the dead process, so gt
+        consumers must treat missing pairs as unknown, not zero.)"""
+        if os.path.exists(self._result_path(unit_key)):
+            ground_truth = {**self.ground_truth(unit_key),
+                            **(ground_truth or {})}
+        self._table_cache.pop(unit_key, None)
+        tdir = self.table_dir(unit_key)
+        os.makedirs(tdir, exist_ok=True)
+        table.save_csv(tdir)
+        doc = {
+            "unit_key": unit_key,
+            "device_name": table.device_name,
+            "device_index": table.device_index,
+            "hostname": table.hostname,
+            "pairs": [
+                {"f_init": fi, "f_target": ft, "status": pr.status,
+                 "n_clusters": pr.n_clusters,
+                 "silhouette": (None if not np.isfinite(pr.silhouette)
+                                else float(pr.silhouette)),
+                 "csv": table.csv_name(fi, ft)}
+                for (fi, ft), pr in sorted(table.pairs.items())],
+            "ground_truth": [[fi, ft, float(v)] for (fi, ft), v in
+                             sorted((ground_truth or {}).items())],
+        }
+        _atomic_write_json(self._result_path(unit_key), doc)
+
+    def has_unit_result(self, unit_key: str) -> bool:
+        return os.path.exists(self._result_path(unit_key))
+
+    def load_table(self, unit_key: str) -> LatencyTable:
+        """Rebuild the unit's :class:`LatencyTable` from CSVs + result.json
+        (same clean/outlier split the analysis originally produced)."""
+        cached = self._table_cache.get(unit_key)
+        if cached is not None:
+            return cached
+        with open(self._result_path(unit_key)) as f:
+            doc = json.load(f)
+        table = LatencyTable(doc["device_name"], doc["device_index"],
+                             doc["hostname"])
+        for entry in doc["pairs"]:
+            lat, is_out = LatencyTable.load_csv(
+                os.path.join(self.table_dir(unit_key), entry["csv"]))
+            clean = lat[~is_out]
+            if clean.size == 0:            # analyse_pair's fallback
+                clean = lat
+            sil = entry.get("silhouette")
+            table.add(PairResult(
+                float(entry["f_init"]), float(entry["f_target"]),
+                lat, clean, lat[is_out], int(entry["n_clusters"]),
+                float("nan") if sil is None else float(sil),
+                entry["status"]))
+        self._table_cache[unit_key] = table
+        return table
+
+    def ground_truth(self, unit_key: str) -> dict[tuple[float, float], float]:
+        """Per-pair max true latency the simulator logged (empty for real
+        hardware backends, which have no oracle)."""
+        with open(self._result_path(unit_key)) as f:
+            doc = json.load(f)
+        return {(float(fi), float(ft)): float(v)
+                for fi, ft, v in doc.get("ground_truth", [])}
+
+    def tables(self) -> dict[str, LatencyTable]:
+        return {k: self.load_table(k) for k in self.done_units()
+                if self.has_unit_result(k)}
+
+
+class ArtifactStore:
+    """Root directory holding many campaigns, addressed by content hash."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root if root is not None else campaigns_dir()
+
+    def open(self, spec: CampaignSpec) -> Campaign:
+        """Create-or-attach the campaign for ``spec`` (content-addressed:
+        the same spec always opens the same directory)."""
+        c = Campaign(self.root, spec)
+        c.init()
+        return c
+
+    def load(self, campaign_id: str) -> Campaign:
+        """Load by id or unique id prefix."""
+        cid = self._resolve(campaign_id)
+        with open(os.path.join(self.root, cid, _SPEC)) as f:
+            spec = CampaignSpec.from_dict(json.load(f))
+        return Campaign(self.root, spec, campaign_id=cid)
+
+    def _resolve(self, prefix: str) -> str:
+        if os.path.isdir(os.path.join(self.root, prefix)):
+            return prefix
+        matches = [c for c in self.list_ids() if c.startswith(prefix)]
+        if len(matches) == 1:
+            return matches[0]
+        if not matches:
+            raise KeyError(f"no campaign matching {prefix!r} in {self.root} "
+                           f"(have: {self.list_ids()})")
+        raise KeyError(f"ambiguous campaign prefix {prefix!r}: {matches}")
+
+    def list_ids(self) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(d for d in os.listdir(self.root)
+                      if os.path.exists(os.path.join(self.root, d, _SPEC)))
+
+    def list_campaigns(self) -> list[dict]:
+        """Summaries for `campaign ls`: id, name, unit progress."""
+        out = []
+        for cid in self.list_ids():
+            c = self.load(cid)
+            states = c.unit_states()
+            n_done = sum(1 for st in states.values()
+                         if st.get("status") == UNIT_DONE)
+            out.append({"campaign_id": cid, "name": c.spec.name,
+                        "units_done": n_done, "units_total": len(states),
+                        "created_at": c.manifest().get("created_at")})
+        return out

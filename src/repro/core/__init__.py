@@ -16,6 +16,7 @@ from repro.core.executors import SerialExecutor, ThreadExecutor, get_executor
 from repro.core.session import (LatestConfig, MeasurementSession,
                                 SessionConfig, probe_latency)
 from repro.core.latest import run_latest
+from repro.core.paths import campaigns_dir, results_dir, results_root
 
 __all__ = [
     "FreqStats", "mean_std", "diff_confidence_interval", "rse",
@@ -26,4 +27,5 @@ __all__ = [
     "LatencyTable", "PairResult", "SerialExecutor", "ThreadExecutor",
     "get_executor", "LatestConfig", "MeasurementSession", "SessionConfig",
     "probe_latency", "run_latest",
+    "campaigns_dir", "results_dir", "results_root",
 ]

@@ -86,7 +86,11 @@ class LatencyTable:
 
     @staticmethod
     def load_csv(path: str) -> tuple[np.ndarray, np.ndarray]:
-        rows = np.loadtxt(path, delimiter=",", skiprows=1).reshape(-1, 2)
+        with open(path) as f:
+            body = f.readlines()[1:]       # header-only = failed pair
+        if not body:
+            return np.empty(0), np.empty(0, dtype=bool)
+        rows = np.loadtxt(body, delimiter=",").reshape(-1, 2)
         return rows[:, 0], rows[:, 1].astype(bool)
 
     # ------------------------------------------------------------------ #

@@ -1,0 +1,36 @@
+"""One switchboard for every default output location.
+
+Examples, benchmarks and the campaign store all used to hard-code
+``results/...`` relative to the current directory, so test runs and verify
+drives littered the working tree with untracked state dirs.  Everything now
+routes through :func:`results_dir`, which honors ``REPRO_RESULTS_DIR`` —
+point it at a scratch directory (CI does, tests use ``tmp_path``) and the
+tree stays clean; leave it unset and you get the familiar ``results/``.
+"""
+from __future__ import annotations
+
+import os
+
+_ENV = "REPRO_RESULTS_DIR"
+
+
+def results_root() -> str:
+    """The base results directory (``$REPRO_RESULTS_DIR`` or ``results``).
+
+    Read at call time, not import time, so tests can monkeypatch the
+    environment without re-importing consumers.
+    """
+    return os.environ.get(_ENV, "results")
+
+
+def results_dir(*parts: str, create: bool = False) -> str:
+    """Join ``parts`` under the results root; ``create=True`` mkdir -p's it."""
+    path = os.path.join(results_root(), *parts)
+    if create:
+        os.makedirs(path, exist_ok=True)
+    return path
+
+
+def campaigns_dir() -> str:
+    """Default root of the campaign artifact store."""
+    return results_dir("campaigns")

@@ -116,6 +116,11 @@ class MeasurementSession:
         """The primary device (worker 0)."""
         return self._devices[0]
 
+    @property
+    def devices(self) -> list:
+        """All devices the session has instantiated (one per worker)."""
+        return list(self._devices)
+
     # ------------------------------------------------------------------ #
     # phase 1: calibration + workload sizing (persisted, reloadable)
     # ------------------------------------------------------------------ #

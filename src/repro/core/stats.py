@@ -84,3 +84,49 @@ def null_hypothesis_holds(a: FreqStats, b: FreqStats, *, z: float = 1.96,
     if lo <= 0.0 <= hi:
         return True
     return abs(a.mean - b.mean) < tol
+
+
+# ---------------------------------------------------------------------- #
+# two-sample machinery for campaign regression detection
+# ---------------------------------------------------------------------- #
+def rankdata(x: np.ndarray) -> np.ndarray:
+    """Average ranks (1-based) with ties sharing their mean rank."""
+    x = np.asarray(x, dtype=np.float64).ravel()
+    order = np.argsort(x, kind="mergesort")
+    ranks = np.empty(x.size, dtype=np.float64)
+    sx = x[order]
+    # boundaries of runs of equal values in the sorted array
+    edge = np.flatnonzero(np.r_[True, sx[1:] != sx[:-1], True])
+    for lo, hi in zip(edge[:-1], edge[1:]):
+        ranks[order[lo:hi]] = 0.5 * (lo + hi - 1) + 1.0
+    return ranks
+
+
+def mann_whitney_u(x, y) -> tuple[float, float]:
+    """Two-sided Mann-Whitney U test (normal approximation with tie
+    correction and continuity correction).
+
+    Latency distributions are multi-modal and heavy-tailed (Figs. 5-6), so
+    campaign drift detection needs a *nonparametric* two-sample test — a
+    t-test on cluster mixtures answers the wrong question.  Returns
+    ``(U, p)`` where U is the statistic of the first sample; ``p = nan``
+    when either sample is empty.
+    """
+    x = np.asarray(x, dtype=np.float64).ravel()
+    y = np.asarray(y, dtype=np.float64).ravel()
+    n1, n2 = x.size, y.size
+    if n1 == 0 or n2 == 0:
+        return float("nan"), float("nan")
+    ranks = rankdata(np.concatenate([x, y]))
+    u1 = float(ranks[:n1].sum()) - n1 * (n1 + 1) / 2.0
+    n = n1 + n2
+    mu = n1 * n2 / 2.0
+    # tie correction to the variance
+    _, counts = np.unique(np.concatenate([x, y]), return_counts=True)
+    tie_term = float(((counts ** 3 - counts).sum())) / (n * (n - 1)) if n > 1 else 0.0
+    var = n1 * n2 / 12.0 * ((n + 1) - tie_term)
+    if var <= 0:                      # all values identical
+        return u1, 1.0
+    z = (abs(u1 - mu) - 0.5) / math.sqrt(var)
+    p = 2.0 * 0.5 * math.erfc(max(0.0, z) / math.sqrt(2.0))
+    return u1, float(min(1.0, p))

@@ -75,6 +75,42 @@ class Governor:
         return tgt
 
     @classmethod
+    def from_campaign(cls, campaign, device_key: str,
+                      power: PowerModel | None = None,
+                      cfg: GovernorConfig = GovernorConfig()) -> "Governor":
+        """Build a governor from a *stored* campaign's measured table — the
+        fleet deployment path: measurement ran elsewhere (or earlier), the
+        runtime only reads artifacts.
+
+        ``campaign`` is a :class:`repro.campaign.store.Campaign` handle or
+        a campaign id resolved through the default store; ``device_key``
+        is a unit key (``"a100@fast"``) or a device key (``"a100"``, which
+        must match exactly one finished unit).
+        """
+        if isinstance(campaign, str):
+            from repro.campaign.store import ArtifactStore
+            campaign = ArtifactStore().load(campaign)
+        done = campaign.done_units()
+        if device_key in done:
+            unit_key = device_key
+        else:
+            matches = [k for k in done if k.split("@", 1)[0] == device_key]
+            if len(matches) != 1:
+                raise KeyError(
+                    f"device_key {device_key!r} matches {matches or 'no'} "
+                    f"finished unit(s) of campaign {campaign.campaign_id} "
+                    f"(have: {done}); pass a full unit key")
+            unit_key = matches[0]
+        table = campaign.load_table(unit_key)
+        freqs = sorted({f for pair in table.pairs for f in pair})
+        if not freqs:
+            raise ValueError(f"unit {unit_key!r} of campaign "
+                             f"{campaign.campaign_id} has no measured pairs")
+        if power is None:
+            power = PowerModel(f_max_mhz=max(freqs))
+        return cls(table, power, freqs, cfg)
+
+    @classmethod
     def from_session(cls, session, power: PowerModel | None = None,
                      cfg: GovernorConfig = GovernorConfig(),
                      **run_kwargs) -> "Governor":

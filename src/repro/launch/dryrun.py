@@ -19,6 +19,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
+from repro.core.paths import results_dir
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_case
 from repro.parallel.collectives import parse_collective_bytes
@@ -117,7 +118,8 @@ def main():
     ap.add_argument("--mesh", choices=("single", "multi", "both"),
                     default="single")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--out", default=None,
+                    help="output dir (default: $REPRO_RESULTS_DIR/dryrun)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--dp-only", action="store_true")
@@ -125,6 +127,8 @@ def main():
                     default=None)
     args = ap.parse_args()
 
+    if args.out is None:
+        args.out = results_dir("dryrun")
     os.makedirs(args.out, exist_ok=True)
     arches = ARCH_IDS if args.all or not args.arch else (args.arch,)
     shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)

@@ -7,5 +7,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _results_under_tmp(tmp_path_factory):
+    """Tests must never litter the working tree with results/ state: every
+    default output path goes through repro.core.paths.results_dir, which
+    honors REPRO_RESULTS_DIR — point it at a session tmp dir unless the
+    caller already pinned it."""
+    if "REPRO_RESULTS_DIR" not in os.environ:
+        os.environ["REPRO_RESULTS_DIR"] = str(
+            tmp_path_factory.mktemp("results"))
+    yield

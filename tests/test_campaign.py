@@ -1,0 +1,300 @@
+"""Campaign subsystem: spec expansion + content addressing, scheduler
+resume layers, artifact-store round trips, aggregation, and the governor's
+fleet-deployment path."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import (ArtifactStore, CampaignRunner, CampaignSpec,
+                            DeviceSpec, MeasureSpec, comparison_markdown,
+                            report_markdown, run_campaign)
+from repro.campaign.cli import main as cli_main
+
+FAST = MeasureSpec(key="fast", min_measurements=4, max_measurements=5,
+                   rse_check_every=4)
+
+
+def _spec(name="t", seed=0, kinds=("a100", "rtx6000"), retries=2):
+    freqs = {"a100": (210.0, 705.0, 1410.0),
+             "rtx6000": (300.0, 1200.0, 2100.0),
+             "gh200": (345.0, 1155.0, 1980.0)}
+    return CampaignSpec(
+        name=name,
+        devices=tuple(
+            DeviceSpec.make(k, "simulated",
+                            {"kind": k, "n_cores": 6, "seed": seed},
+                            frequencies=freqs[k])
+            for k in kinds),
+        measures=(FAST,), retries=retries)
+
+
+# ------------------------------------------------------------------ #
+# spec: matrix expansion + content addressing
+# ------------------------------------------------------------------ #
+def test_spec_expands_matrix():
+    spec = CampaignSpec(
+        name="m",
+        devices=(DeviceSpec.make("d1", options={"kind": "a100"}),
+                 DeviceSpec.make("d2", options={"kind": "gh200"})),
+        measures=(MeasureSpec(key="fast"), MeasureSpec(key="slow",
+                                                       max_measurements=50)))
+    keys = [u.key for u in spec.units()]
+    assert keys == ["d1@fast", "d1@slow", "d2@fast", "d2@slow"]
+
+
+def test_spec_rejects_duplicate_keys():
+    with pytest.raises(ValueError, match="duplicate device"):
+        CampaignSpec("d", devices=(DeviceSpec.make("x"),
+                                   DeviceSpec.make("x")))
+
+
+def test_spec_json_roundtrip_preserves_id(tmp_path):
+    spec = _spec()
+    path = str(tmp_path / "spec.json")
+    spec.save(path)
+    reloaded = CampaignSpec.load(path)
+    assert reloaded == spec
+    assert reloaded.campaign_id() == spec.campaign_id()
+
+
+def test_campaign_id_is_content_addressed():
+    assert _spec(seed=0).campaign_id() == _spec(seed=0).campaign_id()
+    assert _spec(seed=0).campaign_id() != _spec(seed=1).campaign_id()
+    # option ORDER must not matter (canonicalized)
+    a = DeviceSpec.make("d", options={"kind": "a100", "n_cores": 6})
+    b = DeviceSpec.make("d", options={"n_cores": 6, "kind": "a100"})
+    assert (CampaignSpec("x", (a,)).campaign_id()
+            == CampaignSpec("x", (b,)).campaign_id())
+
+
+def test_measure_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown measure fields"):
+        MeasureSpec.from_dict({"key": "f", "min_measurments": 3})  # typo
+
+
+def test_device_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown device fields"):
+        DeviceSpec.from_dict({"key": "d", "frequncies": [210.0]})  # typo
+
+
+@pytest.mark.parametrize("bad", ["../escape", "a/b", "a@b", "", "..", "a b"])
+def test_spec_rejects_path_unsafe_keys(bad):
+    with pytest.raises(ValueError, match="invalid device key"):
+        CampaignSpec("k", devices=(DeviceSpec.make(bad),))
+
+
+def test_device_spec_rejects_empty_frequency_list():
+    with pytest.raises(ValueError, match="non-empty"):
+        DeviceSpec.make("d", frequencies=[])
+
+
+# ------------------------------------------------------------------ #
+# scheduler + store: run, resume at campaign and unit granularity
+# ------------------------------------------------------------------ #
+def test_run_and_store_roundtrip(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    result = run_campaign(_spec(), store)
+    assert result.ok
+    assert set(result.outcomes) == {"a100@fast", "rtx6000@fast"}
+    campaign = result.campaign
+
+    # reload every table from CSV artifacts and compare bit-for-bit
+    for key, table in result.tables().items():
+        loaded = campaign.load_table(key)
+        assert set(loaded.pairs) == set(table.pairs)
+        for p, pr in table.pairs.items():
+            lp = loaded.pairs[p]
+            np.testing.assert_allclose(lp.latencies, pr.latencies,
+                                       rtol=0, atol=1e-9)
+            assert lp.clean.size == pr.clean.size
+            assert lp.status == pr.status
+            assert lp.n_clusters == pr.n_clusters
+
+
+def test_campaign_level_resume_skips_done_units(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    first = run_campaign(_spec(), store)
+    assert all(o.status == "done" for o in first.outcomes.values())
+
+    again = run_campaign(_spec(), store)
+    assert again.ok
+    # nothing re-measured: every unit came back from the store
+    assert all(o.status == "loaded" for o in again.outcomes.values())
+    assert all(o.session is None for o in again.outcomes.values())
+
+
+def test_unit_level_resume_after_interrupt(tmp_path):
+    """A campaign killed mid-unit resumes at PAIR granularity: the unit's
+    embedded session state already holds the finished pairs."""
+    store = ArtifactStore(str(tmp_path))
+    spec = _spec(kinds=("a100",))
+    campaign = store.open(spec)
+    (unit,) = spec.units()
+
+    # simulate the interrupted run: two pairs measured, then a crash
+    # (manifest still says pending, no result.json)
+    pre = unit.build_session(out_dir=campaign.session_dir(unit.key))
+    pre.run(pair_subset=[(210.0, 705.0), (705.0, 210.0)])
+
+    result = run_campaign(spec, store)
+    assert result.ok
+    outcome = result.outcomes[unit.key]
+    assert outcome.status == "done"
+    # the resumed session never re-measured the two persisted pairs
+    measured = {(h["from"], h["to"]) for h in outcome.session.device.history}
+    assert (210.0, 705.0) not in measured
+    assert len(outcome.table.pairs) == 6
+
+
+def test_failed_unit_is_retried_then_isolated(tmp_path, monkeypatch):
+    store = ArtifactStore(str(tmp_path))
+    spec = _spec(kinds=("a100", "rtx6000"), retries=2)
+    calls = {"n": 0}
+    import repro.campaign.scheduler as sched
+    orig = sched.UnitSpec.build_session
+
+    def flaky(self, out_dir=None, executor="serial"):
+        if self.device.key == "rtx6000":
+            calls["n"] += 1
+            raise RuntimeError("board on fire")
+        return orig(self, out_dir=out_dir, executor=executor)
+
+    monkeypatch.setattr(sched.UnitSpec, "build_session", flaky)
+    result = CampaignRunner(spec, store).run()
+    assert calls["n"] == 2                      # retried per spec.retries
+    assert not result.ok
+    bad = result.outcomes["rtx6000@fast"]
+    assert bad.status == "failed" and "board on fire" in bad.error
+    # the healthy unit still completed and persisted
+    assert result.outcomes["a100@fast"].status == "done"
+    st = result.campaign.unit_states()
+    assert st["rtx6000@fast"]["status"] == "failed"
+    assert st["a100@fast"]["status"] == "done"
+
+
+def test_ground_truth_merges_across_saves(tmp_path):
+    """Re-saving a unit (retry after a failed save, partial re-measure)
+    must keep earlier pairs' stored truths, not clobber them."""
+    from repro.core.latency_table import LatencyTable, analyse_pair
+    store = ArtifactStore(str(tmp_path))
+    c = store.open(_spec(kinds=("a100",)))
+    t1 = LatencyTable("a100")
+    t1.add(analyse_pair(210.0, 705.0, np.full(6, 5e-3)))
+    c.save_unit_result("a100@fast", t1, {(210.0, 705.0): 5e-3})
+    t2 = LatencyTable("a100")
+    t2.add(analyse_pair(705.0, 210.0, np.full(6, 6e-3)))
+    c.save_unit_result("a100@fast", t2, {(705.0, 210.0): 6e-3})
+    assert c.ground_truth("a100@fast") == {(210.0, 705.0): 5e-3,
+                                           (705.0, 210.0): 6e-3}
+
+
+def test_ground_truth_persisted_for_simulated_devices(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    result = run_campaign(_spec(kinds=("a100",)), store)
+    gt = result.campaign.ground_truth("a100@fast")
+    table = result.campaign.load_table("a100@fast")
+    assert gt                                   # simulator logged the truth
+    ok = [(p, pr) for p, pr in table.pairs.items()
+          if pr.status == "ok" and p in gt]
+    errs = [abs(pr.worst_case - gt[p]) / gt[p] for p, pr in ok]
+    assert np.median(errs) < 0.15               # pipeline recovers the model
+
+
+# ------------------------------------------------------------------ #
+# aggregation + governor integration
+# ------------------------------------------------------------------ #
+def test_report_covers_all_units(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    result = run_campaign(_spec(), store)
+    md = comparison_markdown(result.campaign)
+    assert "a100@fast" in md and "rtx6000@fast" in md
+    report = report_markdown(result.campaign)
+    assert "Table II" in report and "Campaign" in report
+
+
+def test_governor_from_campaign(tmp_path):
+    from repro.dvfs.governor import Governor
+    store = ArtifactStore(str(tmp_path))
+    result = run_campaign(_spec(), store)
+    # by bare device key (unique) and by full unit key
+    g = Governor.from_campaign(result.campaign, "a100")
+    assert g.freqs == [210.0, 705.0, 1410.0]
+    g2 = Governor.from_campaign(result.campaign, "a100@fast")
+    assert g2.freqs == g.freqs
+    assert g.latency(210.0, 1410.0) == g2.latency(210.0, 1410.0)
+    with pytest.raises(KeyError, match="no finished"):
+        Governor.from_campaign(result.campaign, "h100")
+
+
+# ------------------------------------------------------------------ #
+# CLI round trip
+# ------------------------------------------------------------------ #
+def test_cli_run_ls_report_diff_roundtrip(tmp_path, capsys):
+    spec = _spec(kinds=("a100",))
+    spec_path = str(tmp_path / "spec.json")
+    spec.save(spec_path)
+    store = ["--store", str(tmp_path / "store")]
+
+    assert cli_main(store + ["run", spec_path, "--quiet"]) == 0
+    cid = spec.campaign_id()
+    assert cli_main(store + ["ls"]) == 0
+    out = capsys.readouterr().out
+    assert cid in out and "1/1" in out
+
+    report_path = str(tmp_path / "report.md")
+    assert cli_main(store + ["report", cid[:6], "--out", report_path]) == 0
+    assert "Table II" in open(report_path).read()
+
+    # self-diff is clean (exit 0)
+    assert cli_main(store + ["diff", cid, cid]) == 0
+
+
+def test_cli_run_resumes(tmp_path, capsys):
+    spec = _spec(kinds=("a100",))
+    spec_path = str(tmp_path / "spec.json")
+    spec.save(spec_path)
+    store = ["--store", str(tmp_path / "store")]
+    assert cli_main(store + ["run", spec_path, "--quiet"]) == 0
+    capsys.readouterr()
+    assert cli_main(store + ["run", spec_path]) == 0
+    assert "1 unit(s) loaded from store, 0 to run" in capsys.readouterr().out
+
+
+# ------------------------------------------------------------------ #
+# paths helper (satellite)
+# ------------------------------------------------------------------ #
+def test_results_dir_honors_env(tmp_path, monkeypatch):
+    from repro.core.paths import campaigns_dir, results_dir
+    monkeypatch.setenv("REPRO_RESULTS_DIR", str(tmp_path / "rd"))
+    assert results_dir("x") == os.path.join(str(tmp_path / "rd"), "x")
+    assert campaigns_dir().startswith(str(tmp_path / "rd"))
+    p = results_dir("made", create=True)
+    assert os.path.isdir(p)
+    monkeypatch.delenv("REPRO_RESULTS_DIR")
+    assert results_dir("x") == os.path.join("results", "x")
+
+
+def test_default_store_under_results_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RESULTS_DIR", str(tmp_path))
+    store = ArtifactStore()
+    assert store.root == str(tmp_path / "campaigns")
+    assert store.list_ids() == []
+
+
+def test_store_load_by_prefix_and_errors(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    c = store.open(_spec(kinds=("a100",)))
+    assert store.load(c.campaign_id[:5]).campaign_id == c.campaign_id
+    with pytest.raises(KeyError, match="no campaign"):
+        store.load("zzz")
+
+
+def test_manifest_is_valid_json_after_marks(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    c = store.open(_spec(kinds=("a100",)))
+    c.mark_unit("a100@fast", status="running", attempts=1)
+    with open(os.path.join(c.dir, "manifest.json")) as f:
+        doc = json.load(f)
+    assert doc["units"]["a100@fast"]["status"] == "running"

@@ -1,0 +1,154 @@
+"""Regression layer: Mann-Whitney two-sample test + campaign drift diffs
+(self-diff clean; injected +30% worst-case drift flags exactly that pair)."""
+import glob
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.campaign import (ArtifactStore, CampaignSpec, DeviceSpec,
+                            DiffConfig, MeasureSpec, diff_campaigns,
+                            diff_markdown, run_campaign)
+from repro.core.stats import mann_whitney_u, rankdata
+
+FAST = MeasureSpec(key="fast", min_measurements=5, max_measurements=6,
+                   rse_check_every=5)
+
+
+def _spec():
+    return CampaignSpec(
+        name="reg",
+        devices=(
+            DeviceSpec.make("a100", "simulated",
+                            {"kind": "a100", "n_cores": 6},
+                            frequencies=(210.0, 705.0, 1410.0)),
+            DeviceSpec.make("gh200", "simulated",
+                            {"kind": "gh200", "n_cores": 6},
+                            frequencies=(345.0, 1155.0, 1980.0))),
+        measures=(FAST,))
+
+
+# ------------------------------------------------------------------ #
+# mann-whitney building block
+# ------------------------------------------------------------------ #
+def test_rankdata_ties_share_mean_rank():
+    np.testing.assert_allclose(rankdata([10.0, 20.0, 20.0, 30.0]),
+                               [1.0, 2.5, 2.5, 4.0])
+
+
+def test_mann_whitney_same_distribution_high_p():
+    rng = np.random.default_rng(0)
+    x, y = rng.normal(5e-3, 1e-4, 40), rng.normal(5e-3, 1e-4, 40)
+    _, p = mann_whitney_u(x, y)
+    assert p > 0.05
+
+
+def test_mann_whitney_shifted_distribution_low_p():
+    rng = np.random.default_rng(1)
+    x = rng.normal(5e-3, 1e-4, 20)
+    _, p = mann_whitney_u(x, x * 1.3)
+    assert p < 0.01
+
+
+def test_mann_whitney_degenerate_inputs():
+    u, p = mann_whitney_u([], [1.0])
+    assert np.isnan(p)
+    _, p = mann_whitney_u([2.0, 2.0, 2.0], [2.0, 2.0])   # zero variance
+    assert p == 1.0
+
+
+def test_mann_whitney_matches_scipy_when_available():
+    scipy_stats = pytest.importorskip("scipy.stats")
+    rng = np.random.default_rng(7)
+    x, y = rng.lognormal(0, 0.3, 25), rng.lognormal(0.2, 0.3, 30)
+    u, p = mann_whitney_u(x, y)
+    ref = scipy_stats.mannwhitneyu(x, y, alternative="two-sided",
+                                   method="asymptotic")
+    assert u == pytest.approx(ref.statistic)
+    assert p == pytest.approx(ref.pvalue, rel=0.05)
+
+
+# ------------------------------------------------------------------ #
+# campaign diffs
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def measured(tmp_path_factory):
+    store = ArtifactStore(str(tmp_path_factory.mktemp("store")))
+    result = run_campaign(_spec(), store)
+    assert result.ok
+    return store, result.campaign
+
+
+def _clone_with_drift(store, campaign, clone_id, scale=1.3,
+                      unit="a100@fast", pair=(705.0, 1410.0)):
+    """Copy the campaign's artifacts under a new id, scaling one pair's
+    samples — the 'silicon drifted since last campaign' scenario."""
+    bdir = os.path.join(store.root, clone_id)
+    if os.path.isdir(bdir):
+        shutil.rmtree(bdir)
+    shutil.copytree(campaign.dir, bdir)
+    fi, ft = pair
+    (csv,) = glob.glob(os.path.join(bdir, "units", unit, "table",
+                                    f"{int(fi)}_{int(ft)}_*.csv"))
+    lat, out = np.loadtxt(csv, delimiter=",", skiprows=1).reshape(-1, 2).T
+    with open(csv, "w") as f:
+        f.write("latency_s,is_outlier\n")
+        for v, o in zip(lat * scale, out):
+            f.write(f"{v:.9f},{int(o)}\n")
+    return store.load(clone_id)
+
+
+def test_self_diff_is_clean(measured):
+    _, campaign = measured
+    diff = diff_campaigns(campaign, campaign)
+    assert diff.clean
+    assert len(diff.drifts) == 12              # 6 pairs x 2 devices
+    assert not diff.only_in_a and not diff.only_in_b
+    assert "0 flagged" in diff_markdown(diff)
+
+
+def test_injected_drift_flags_exactly_that_pair(measured):
+    store, campaign = measured
+    drifted = _clone_with_drift(store, campaign, "cdrift30", scale=1.3)
+    diff = diff_campaigns(campaign, drifted)
+    flagged = diff.flagged()
+    assert [(d.unit_key, d.f_init, d.f_target) for d in flagged] == [
+        ("a100@fast", 705.0, 1410.0)]
+    (d,) = flagged
+    assert d.rel_delta == pytest.approx(0.3, abs=0.02)
+    assert d.p_value < 0.05
+    assert "**DRIFT**" in diff_markdown(diff)
+
+
+def test_small_drift_below_threshold_not_flagged(measured):
+    store, campaign = measured
+    nudged = _clone_with_drift(store, campaign, "cdrift05", scale=1.05)
+    assert diff_campaigns(campaign, nudged).clean
+    # even with a hair-trigger delta threshold, the Mann-Whitney gate keeps
+    # a within-noise 5% wiggle from being flagged: the distributions
+    # overlap too much for the shift to be significant at these sample
+    # counts — exactly the single-outlier protection the AND rule buys
+    tight = diff_campaigns(campaign, nudged,
+                           DiffConfig(worst_delta_threshold=0.02))
+    moved = [d for d in tight.drifts if abs(d.rel_delta) > 0.02]
+    assert [(d.f_init, d.f_target) for d in moved] == [(705.0, 1410.0)]
+    assert not tight.flagged()
+    assert moved[0].p_value > DiffConfig().alpha
+
+
+def test_coverage_change_is_reported_not_flagged(measured):
+    store, campaign = measured
+    clone = _clone_with_drift(store, campaign, "ccover", scale=1.0)
+    # drop one unit's result entirely from the clone
+    shutil.rmtree(os.path.join(store.root, "ccover", "units", "gh200@fast"))
+    manifest = os.path.join(store.root, "ccover", "manifest.json")
+    import json
+    doc = json.load(open(manifest))
+    doc["units"]["gh200@fast"]["status"] = "failed"
+    with open(manifest, "w") as f:
+        json.dump(doc, f)
+    diff = diff_campaigns(campaign, clone)
+    assert diff.clean                           # no latencies moved
+    assert len(diff.only_in_a) == 6             # but coverage shrank
+    assert "Coverage changed" in diff_markdown(diff)

@@ -1,0 +1,106 @@
+"""Edge cases of PowerModel.best_frequency and planner.regions_from_cell
+(+ the governor's behavior when every region is too short to amortize)."""
+import numpy as np
+import pytest
+
+from repro.core.latency_table import LatencyTable, analyse_pair
+from repro.dvfs.governor import Governor, GovernorConfig
+from repro.dvfs.planner import Region, regions_from_cell
+from repro.dvfs.power_model import PowerModel
+
+PM = PowerModel(f_max_mhz=1410.0)
+
+
+# ------------------------------------------------------------------ #
+# PowerModel.best_frequency
+# ------------------------------------------------------------------ #
+def test_best_frequency_empty_frequency_list_falls_back_to_fmax():
+    assert PM.best_frequency(1.0, 0.5, []) == 1410.0
+
+
+def test_best_frequency_sensitivity_zero_picks_lowest():
+    """Fully memory-bound: runtime is flat in f, so the energy-minimal
+    choice is the lowest clock regardless of the slowdown budget."""
+    freqs = [210.0, 705.0, 1410.0]
+    assert PM.best_frequency(1.0, 0.0, freqs, max_slowdown=1.0) == 210.0
+
+
+def test_best_frequency_sensitivity_one_strict_budget_stays_fmax():
+    """Perfectly compute-bound with zero slowdown allowance: any downclock
+    extends runtime, so f_max is the only admissible choice."""
+    freqs = [210.0, 705.0, 1410.0]
+    assert PM.best_frequency(1.0, 1.0, freqs, max_slowdown=1.0) == 1410.0
+
+
+def test_best_frequency_sensitivity_one_budget_buys_one_step():
+    """Compute-bound with a 10% budget: eligible clocks are f >= f_max/1.1,
+    and cubic dynamic power makes the slowest eligible one optimal."""
+    freqs = [float(f) for f in np.arange(210.0, 1411.0, 15.0)]
+    best = PM.best_frequency(1.0, 1.0, freqs, max_slowdown=1.1)
+    assert best == min(f for f in freqs if 1410.0 / f <= 1.1)
+
+
+def test_best_frequency_never_picks_inadmissible_slowdown():
+    freqs = [210.0, 1410.0]
+    best = PM.best_frequency(2.0, 1.0, freqs, max_slowdown=1.05)
+    assert best == 1410.0                     # 210 MHz would be 6.7x slower
+
+
+# ------------------------------------------------------------------ #
+# planner.regions_from_cell
+# ------------------------------------------------------------------ #
+def _cell(comp, mem, coll):
+    return {"roofline": {"compute_s": comp, "memory_s": mem,
+                         "collective_s": coll}}
+
+
+def test_regions_memory_fully_overlapped_is_dropped():
+    regions = regions_from_cell(_cell(1.0, 0.5, 0.0))
+    assert [r.kind for r in regions] == ["compute", "host"]
+
+
+def test_regions_exposed_memory_is_excess_over_compute():
+    regions = regions_from_cell(_cell(1.0, 1.4, 0.2))
+    kinds = {r.kind: r.duration_s for r in regions}
+    assert kinds["memory"] == pytest.approx(0.4)
+    assert kinds["collective"] == pytest.approx(0.2)
+    assert kinds["host"] == pytest.approx(0.03 * 1.6)
+
+
+def test_regions_zero_cell_yields_zero_durations():
+    regions = regions_from_cell(_cell(0.0, 0.0, 0.0))
+    assert [r.kind for r in regions] == ["compute", "host"]
+    assert all(r.duration_s == 0.0 for r in regions)
+
+
+def test_region_sensitivity_extremes():
+    assert Region("compute", 1.0).sensitivity == 1.0
+    assert Region("host", 1.0).sensitivity == 0.0
+
+
+# ------------------------------------------------------------------ #
+# governor: all regions shorter than the switching latency
+# ------------------------------------------------------------------ #
+def _table_with_uniform_latency(latency_s, freqs):
+    rng = np.random.default_rng(0)
+    table = LatencyTable()
+    for fi in freqs:
+        for ft in freqs:
+            if fi == ft:
+                continue
+            samples = latency_s * rng.lognormal(0.0, 0.01, 12)
+            table.add(analyse_pair(fi, ft, samples))
+    return table
+
+
+def test_governor_suppresses_all_switches_when_regions_too_short():
+    freqs = [210.0, 705.0, 1410.0]
+    table = _table_with_uniform_latency(50e-3, freqs)
+    g = Governor(table, PM, freqs, GovernorConfig(hysteresis=3.0))
+    # memory-bound regions (downclock is attractive) but each lasts less
+    # than hysteresis x latency -> every change is suppressed
+    regions = [Region("memory", 0.1)] * 20
+    st = g.simulate(regions)
+    assert st.switches == 0
+    assert st.suppressed_short == 20
+    assert st.switch_overhead_s == 0.0

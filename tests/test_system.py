@@ -64,7 +64,8 @@ def test_paper_pipeline_feeds_governor():
         measure=MeasureConfig(min_measurements=4, max_measurements=4)))
     assert len(table.pairs) >= 6
 
-    cells = glob.glob("results/dryrun/*train_4k__single.json")
+    from repro.core.paths import results_dir
+    cells = glob.glob(results_dir("dryrun", "*train_4k__single.json"))
     regions = None
     if cells:                                    # use the real roofline cell
         cell = json.load(open(cells[0]))
