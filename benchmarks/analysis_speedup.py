@@ -1,0 +1,114 @@
+"""Analysis-engine benchmark: sorted-window DBSCAN + prefix-sum silhouette
+vs the O(n²) matrix reference on one measured pair's latency samples.
+
+Phase-3 filtering (Alg. 3 adaptive DBSCAN + §VII-B silhouette) runs on
+every sweep, every campaign aggregation and every ``diff_campaigns`` gate,
+so its cost scales with the fleet.  The sorted engine is O(n log n) / O(n)
+memory and must agree with the reference exactly: cluster labels
+bit-identical, silhouette within 1e-12 (prefix sums reorder additions, so
+bit-identity is not expected there).  Both properties are ASSERTED here on
+every run — the benchmark doubles as the fast-vs-reference smoke check CI
+executes on a small input.
+
+Acceptance bar (5k-sample pair): combined speedup >= 30x.
+
+  PYTHONPATH=src python -m benchmarks.analysis_speedup [--n 5000]
+
+writes ``BENCH_analysis.json`` under ``$REPRO_RESULTS_DIR/bench`` (also
+emitted by ``python -m benchmarks.run``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dbscan import adaptive_dbscan
+from repro.core.silhouette import silhouette_score
+
+N_SAMPLES = 5000
+FAST_REPS = 5
+
+
+def _pair_samples(n: int, seed: int = 0) -> np.ndarray:
+    """A realistic measured pair at fleet scale: two latency clusters
+    (Figs. 5-6's multi-modal shape) plus a few percent of far outliers."""
+    rng = np.random.default_rng(seed)
+    n_out = max(1, n // 50)
+    n_hi = n // 4
+    n_lo = n - n_hi - n_out
+    return rng.permutation(np.concatenate([
+        rng.normal(12e-3, 0.4e-3, n_lo),
+        rng.normal(27e-3, 0.6e-3, n_hi),
+        rng.uniform(80e-3, 400e-3, n_out),
+    ]))
+
+
+def _timed(fn, reps: int):
+    fn()                                       # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    return out, (time.perf_counter() - t0) / reps
+
+
+def bench_analysis(n: int = N_SAMPLES):
+    x = _pair_samples(n)
+
+    ref, ref_db_s = _timed(lambda: adaptive_dbscan(x, impl="matrix"), 1)
+    ref_sil, ref_sil_s = _timed(
+        lambda: silhouette_score(x, ref.labels, impl="matrix"), 1)
+    fast, fast_db_s = _timed(lambda: adaptive_dbscan(x), FAST_REPS)
+    fast_sil, fast_sil_s = _timed(
+        lambda: silhouette_score(x, fast.labels), FAST_REPS)
+
+    if not np.array_equal(fast.labels, ref.labels):
+        raise AssertionError(
+            f"sorted DBSCAN labels diverge from matrix reference on "
+            f"n={n}: {int((fast.labels != ref.labels).sum())} mismatches")
+    if (fast.min_pts, fast.eps) != (ref.min_pts, ref.eps):
+        raise AssertionError("adaptive sweep picked different parameters")
+    sil_err = (0.0 if np.isnan(fast_sil) and np.isnan(ref_sil)
+               else abs(fast_sil - ref_sil))
+    if not sil_err <= 1e-12:
+        raise AssertionError(
+            f"silhouette mismatch: fast={fast_sil!r} ref={ref_sil!r}")
+
+    total = (ref_db_s + ref_sil_s) / (fast_db_s + fast_sil_s)
+    return [
+        ("analysis/adaptive_dbscan", fast_db_s * 1e6,
+         f"speedup={ref_db_s / fast_db_s:.1f}x n={n} "
+         f"identical_labels=True"),
+        ("analysis/silhouette", fast_sil_s * 1e6,
+         f"speedup={ref_sil_s / fast_sil_s:.1f}x n={n} "
+         f"max_err={sil_err:.1e}"),
+        ("analysis/engine", (fast_db_s + fast_sil_s) * 1e6,
+         f"speedup={total:.1f}x n={n} "
+         f"ref_ms={(ref_db_s + ref_sil_s) * 1e3:.0f}"),
+    ]
+
+
+def main() -> None:
+    import argparse
+
+    from repro.core.paths import results_dir
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=N_SAMPLES,
+                    help="samples in the synthetic pair (default 5000)")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    rows = bench_analysis(args.n)              # raises on any disagreement
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    from benchmarks.run import _emit_json
+    _emit_json(results_dir("bench"), "analysis", rows,
+               time.perf_counter() - t0)
+    print(f"wrote BENCH_analysis.json ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,12 +15,20 @@ when BOTH hold:
   ``alpha`` — so a single outlier pass that survived DBSCAN cannot flag a
   pair on its own.  With fewer than ``min_samples`` clean samples on
   either side the test is underpowered and the delta rule decides alone.
+
+With ``reanalyse=True`` the detector ignores the clean/outlier split
+stored at measurement time and re-runs the sorted-window analysis engine
+(:func:`repro.core.latency_table.analyse_pair`) on each pair's raw
+samples — useful when the outlier-filter parameters changed since the
+reference campaign was measured, and cheap enough to do on every diff now
+that the engine is O(n log n).
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.campaign.store import Campaign
+from repro.core.latency_table import analyse_pair
 from repro.core.stats import mann_whitney_u
 
 
@@ -29,6 +37,7 @@ class DiffConfig:
     worst_delta_threshold: float = 0.2     # |relative worst-case change|
     alpha: float = 0.05                    # Mann-Whitney significance
     min_samples: int = 4                   # below this, delta decides alone
+    reanalyse: bool = False                # re-cluster raw samples on diff
 
 
 @dataclasses.dataclass
@@ -59,20 +68,34 @@ class CampaignDiff:
         return not self.flagged()
 
 
-def _comparable_pairs(table) -> dict:
-    return {(fi, ft): pr for (fi, ft), pr in table.pairs.items()
-            if pr.status == "ok" and pr.clean.size}
+def _comparable_pairs(table, reanalyse: bool = False) -> dict:
+    # reanalysis can't change the key set: analyse_pair falls back to
+    # clean = latencies when DBSCAN marks everything noise, so any pair
+    # that passed the stored clean.size check stays comparable
+    pairs = {}
+    for (fi, ft), pr in table.pairs.items():
+        if pr.status != "ok" or not pr.clean.size:
+            continue
+        if reanalyse:
+            pr = analyse_pair(fi, ft, pr.latencies, pr.status,
+                              with_silhouette=False)   # diff never reads it
+        pairs[(fi, ft)] = pr
+    return pairs
 
 
 def diff_campaigns(a: Campaign, b: Campaign,
-                   cfg: DiffConfig = DiffConfig()) -> CampaignDiff:
+                   cfg: DiffConfig | None = None) -> CampaignDiff:
     """Diff ``b`` (candidate) against ``a`` (reference)."""
+    if cfg is None:
+        cfg = DiffConfig()
     drifts: list[PairDrift] = []
     only_a: list[tuple[str, float, float]] = []
     only_b: list[tuple[str, float, float]] = []
     tables_a = a.tables()
     tables_b = b.tables()
     for key in sorted(set(tables_a) | set(tables_b)):
+        # key-only enumeration: reanalysis can't change which pairs are
+        # comparable, so skip the re-clustering for one-sided units
         if key not in tables_b:
             only_a.extend((key, fi, ft)
                           for fi, ft in _comparable_pairs(tables_a[key]))
@@ -81,8 +104,8 @@ def diff_campaigns(a: Campaign, b: Campaign,
             only_b.extend((key, fi, ft)
                           for fi, ft in _comparable_pairs(tables_b[key]))
             continue
-        pa = _comparable_pairs(tables_a[key])
-        pb = _comparable_pairs(tables_b[key])
+        pa = _comparable_pairs(tables_a[key], cfg.reanalyse)
+        pb = _comparable_pairs(tables_b[key], cfg.reanalyse)
         only_a.extend((key, fi, ft) for fi, ft in sorted(set(pa) - set(pb)))
         only_b.extend((key, fi, ft) for fi, ft in sorted(set(pb) - set(pa)))
         for (fi, ft) in sorted(set(pa) & set(pb)):

@@ -180,7 +180,10 @@ class Campaign:
                 float(entry["f_init"]), float(entry["f_target"]),
                 lat, clean, lat[is_out], int(entry["n_clusters"]),
                 float("nan") if sil is None else float(sil),
-                entry["status"]))
+                entry["status"],
+                # cluster ids don't survive the CSV, but the per-sample
+                # outlier split (what save_csv re-emits) does
+                labels=np.where(is_out, -1, 0)))
         self._table_cache[unit_key] = table
         return table
 

@@ -6,6 +6,24 @@ within eps; clusters grow from core points; everything else is noise.
 Adaptive selection sweeps minPts from ceil(4% n) down to floor(2% n) in
 steps of 2, eps = m * quantile_range(0.05, 0.95) (paper: m = 0.15 from the
 k-NN-distance analysis), halting once the noise ratio drops below 10%.
+
+Two implementations, selectable via ``impl=``:
+
+``"sorted"`` (default)
+    Latency samples are 1-D, so every eps-neighborhood is a contiguous
+    window of the sorted array: neighbor counts come from two
+    ``searchsorted`` calls, core points are windowed counts, and cluster
+    expansion reduces to merging gap-connected runs of core points —
+    O(n log n) time, O(n) memory.  Labels are bit-identical to the matrix
+    path: window boundaries are fixed up against the reference distance
+    predicate, clusters are numbered by the smallest original index of
+    each core component (the matrix BFS's discovery order), and border
+    points reachable from two clusters go to the lower-numbered one (the
+    cluster that expands first in the reference).
+
+``"matrix"``
+    The original O(n²) full-pairwise-distance formulation, kept as the
+    executable reference (and the only path for d > 1 inputs).
 """
 from __future__ import annotations
 
@@ -17,14 +35,110 @@ import numpy as np
 NOISE = -1
 
 
-def dbscan(x: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
-    """Labels for 1-D (or (n,d)) data: cluster ids 0.. or NOISE (-1)."""
-    x = np.asarray(x, dtype=np.float64)
-    if x.ndim == 1:
-        x = x[:, None]
-    n = len(x)
+def _ref_dist(a, b):
+    """The matrix reference's exact distance arithmetic for 1-D points:
+    sqrt((a-b)^2).  Window fix-ups must use THIS predicate, not |a-b|,
+    so the sorted path agrees with the reference bit-for-bit."""
+    return np.sqrt((a - b) ** 2)
+
+
+def _sorted_windows(sx: np.ndarray, eps: float) -> tuple[np.ndarray, np.ndarray]:
+    """Per sorted position i, the eps-neighborhood [lo[i], hi[i]) as
+    indices into the sorted array ``sx``.
+
+    ``searchsorted(sx, sx ± eps)`` evaluates the rounded bound
+    ``fl(x ± eps)`` while the reference compares ``fl(|x - y|) <= eps``;
+    the two can disagree for pairs within an ulp of the eps boundary, so
+    the rare boundary indices are nudged until they satisfy the reference
+    predicate exactly."""
+    n = sx.size
+    lo = np.searchsorted(sx, sx - eps, side="left")
+    hi = np.searchsorted(sx, sx + eps, side="right")
     if n == 0:
-        return np.empty(0, dtype=int)
+        return lo, hi
+    # Left boundary: extend while the element just outside is in range...
+    cand = np.flatnonzero(lo > 0)
+    cand = cand[_ref_dist(sx[cand], sx[lo[cand] - 1]) <= eps]
+    for i in cand:
+        j = lo[i] - 1
+        while j >= 0 and _ref_dist(sx[i], sx[j]) <= eps:
+            j -= 1
+        lo[i] = j + 1
+    # ...and shrink while the first element inside is out of range.
+    # (lo[i] <= i always, since fl(x - eps) <= x for eps >= 0, so sx[lo[i]]
+    # is a valid index and the walk terminates at j == i at the latest.)
+    cand = np.flatnonzero(_ref_dist(sx, sx[lo]) > eps)
+    for i in cand:
+        j = lo[i]
+        while _ref_dist(sx[i], sx[j]) > eps:
+            j += 1
+        lo[i] = j
+    # Right boundary, symmetric (hi[i] >= i + 1 always).
+    cand = np.flatnonzero(hi < n)
+    cand = cand[_ref_dist(sx[cand], sx[hi[cand]]) <= eps]
+    for i in cand:
+        j = hi[i]
+        while j < n and _ref_dist(sx[i], sx[j]) <= eps:
+            j += 1
+        hi[i] = j
+    cand = np.flatnonzero(_ref_dist(sx, sx[hi - 1]) > eps)
+    for i in cand:
+        j = hi[i] - 1
+        while _ref_dist(sx[i], sx[j]) > eps:
+            j -= 1
+        hi[i] = j + 1
+    return lo, hi
+
+
+def _labels_from_windows(order: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                         min_pts: int) -> np.ndarray:
+    """Cluster labels (original order) from precomputed sorted windows.
+
+    Core points whose sorted positions chain within eps form one cluster
+    each; in sorted order a component breaks exactly where consecutive
+    core points are more than eps apart — i.e. where the right core's
+    window no longer reaches the left core, so no distance is ever
+    re-evaluated here.  Re-thresholding ``min_pts`` against the same
+    windows is how :func:`adaptive_dbscan` sweeps minPts in O(n) per step.
+    """
+    n = order.size
+    labels_sorted = np.full(n, NOISE, dtype=int)
+    core_pos = np.flatnonzero(hi - lo >= min_pts)
+    if core_pos.size:
+        # component breaks where the gap between consecutive cores > eps
+        new_comp = lo[core_pos[1:]] > core_pos[:-1]
+        comp = np.concatenate([[0], np.cumsum(new_comp)])
+        comp_starts = np.flatnonzero(np.r_[True, new_comp])
+        # reference cluster ids follow BFS discovery order: the component
+        # holding the smallest not-yet-labeled original index goes first
+        min_orig = np.minimum.reduceat(order[core_pos], comp_starts)
+        cid_of_comp = np.empty(min_orig.size, dtype=int)
+        cid_of_comp[np.argsort(min_orig, kind="mergesort")] = \
+            np.arange(min_orig.size)
+        labels_sorted[core_pos] = cid_of_comp[comp]
+        # border points: non-core with >= 1 core in their window; the
+        # reference's first-expanding (lowest-cid) cluster claims the point
+        border = np.flatnonzero(hi - lo < min_pts)
+        cl = np.searchsorted(core_pos, lo[border], side="left")
+        cr = np.searchsorted(core_pos, hi[border], side="left")
+        reach = cr > cl
+        b = border[reach]
+        comp_l = comp[cl[reach]]
+        comp_r = comp[cr[reach] - 1]
+        best = np.minimum(cid_of_comp[comp_l], cid_of_comp[comp_r])
+        # a 2*eps window straddles > 2 components only when eps sits within
+        # a few ulps of the data spacing; take the exact range-min then
+        for t in np.flatnonzero(comp_r - comp_l > 1):
+            best[t] = cid_of_comp[comp_l[t]:comp_r[t] + 1].min()
+        labels_sorted[b] = best
+    labels = np.empty(n, dtype=int)
+    labels[order] = labels_sorted
+    return labels
+
+
+def _dbscan_matrix(x: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
+    """Reference O(n²) path (full distance matrix + BFS expansion)."""
+    n = len(x)
     d = np.sqrt(((x[:, None, :] - x[None, :, :]) ** 2).sum(-1))
     neighbors = [np.nonzero(d[i] <= eps)[0] for i in range(n)]
     core = np.array([len(nb) >= min_pts for nb in neighbors])
@@ -44,6 +158,25 @@ def dbscan(x: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
                     stack.extend(neighbors[j])
         cid += 1
     return labels
+
+
+def dbscan(x: np.ndarray, eps: float, min_pts: int, *,
+           impl: str = "sorted") -> np.ndarray:
+    """Labels for 1-D (or (n,d)) data: cluster ids 0.. or NOISE (-1)."""
+    if impl not in ("sorted", "matrix"):
+        raise ValueError(f"unknown dbscan impl {impl!r}")
+    x = np.asarray(x, dtype=np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    n = len(x)
+    if n == 0:
+        return np.empty(0, dtype=int)
+    if impl == "sorted" and x.shape[1] == 1:
+        flat = x[:, 0]
+        order = np.argsort(flat, kind="mergesort")
+        lo, hi = _sorted_windows(flat[order], eps)
+        return _labels_from_windows(order, lo, hi, min_pts)
+    return _dbscan_matrix(x, eps, min_pts)
 
 
 def knn_distance(x: np.ndarray, k: int) -> np.ndarray:
@@ -70,19 +203,35 @@ class DBSCANResult:
 
 def adaptive_dbscan(latencies: np.ndarray, *, mult: float = 0.15,
                     start_frac: float = 0.04, end_frac: float = 0.02,
-                    step: int = 2, max_noise: float = 0.10) -> DBSCANResult:
+                    step: int = 2, max_noise: float = 0.10,
+                    impl: str = "sorted") -> DBSCANResult:
     """Alg. 3: sweep minPts from ceil(4% n) down to floor(2% n) (step -2)
-    with eps = mult * quantile_range(0.05, 0.95); stop when noise < 10%."""
+    with eps = mult * quantile_range(0.05, 0.95); stop when noise < 10%.
+
+    On the sorted path the eps-windows (and hence every point's neighbor
+    count) are computed ONCE and re-thresholded per minPts step, so the
+    whole sweep costs one sort plus O(n) per step instead of one full
+    clustering per step."""
+    if impl not in ("sorted", "matrix"):
+        raise ValueError(f"unknown dbscan impl {impl!r}")
     x = np.asarray(latencies, dtype=np.float64).ravel()
     n = len(x)
     q05, q95 = np.quantile(x, [0.05, 0.95])
     eps = max(mult * (q95 - q05), 1e-12)
+    if impl == "sorted":
+        order = np.argsort(x, kind="mergesort")
+        lo, hi = _sorted_windows(x[order], eps)
+        def labels_for(min_pts: int) -> np.ndarray:
+            return _labels_from_windows(order, lo, hi, min_pts)
+    else:
+        def labels_for(min_pts: int) -> np.ndarray:
+            return dbscan(x, eps, min_pts, impl="matrix")
     start = max(2, math.ceil(start_frac * n))
     end = max(2, math.floor(end_frac * n))
     best = None
     i = start
     while i >= end:
-        labels = dbscan(x, eps, i)
+        labels = labels_for(i)
         noise = float((labels == NOISE).mean())
         ncl = int(labels.max() + 1) if (labels >= 0).any() else 0
         best = DBSCANResult(labels, eps, i, noise, ncl, noise <= max_noise)

@@ -50,13 +50,16 @@ class PairMeasurement:
 
 
 def measure_pair(device, f_init: float, f_target: float, cal,
-                 spec: WorkloadSpec, mc: MeasureConfig = MeasureConfig()
+                 spec: WorkloadSpec, mc: MeasureConfig | None = None
                  ) -> PairMeasurement:
+    if mc is None:
+        mc = MeasureConfig()
     lat: list[float] = []
+    # O(1) RSE checks: running sums track the growing list (and un-track
+    # thermal rollbacks) instead of rescanning it every rse_check_every
+    running = statsmod.RunningStats()
     retries = 0
-    passes = 0
     while len(lat) < mc.max_measurements:
-        passes += 1
         res = measure_switch_once(device, f_init, f_target, cal, spec,
                                   k_sigma=mc.k_sigma)
         if res is None:
@@ -66,6 +69,7 @@ def measure_pair(device, f_init: float, f_target: float, cal,
                                        "undetectable", retries, float("inf"))
             continue
         lat.append(res.latency)
+        running.add(res.latency)
 
         if len(lat) % mc.throttle_check_every == 0:
             flags = device.throttle_reasons()
@@ -74,14 +78,15 @@ def measure_pair(device, f_init: float, f_target: float, cal,
                                        "power_throttled", retries,
                                        float("inf"))
             if "thermal" in flags:
+                for v in lat[-mc.throttle_check_every:]:
+                    running.remove(v)
                 del lat[-mc.throttle_check_every:]          # drop newest 5
                 device.usleep(mc.cooldown_s)
                 continue
 
         if (len(lat) >= mc.min_measurements
                 and len(lat) % mc.rse_check_every == 0
-                and statsmod.rse(np.asarray(lat)) < mc.rse_target):
+                and running.rse() < mc.rse_target):
             break
-    arr = np.asarray(lat)
-    return PairMeasurement(f_init, f_target, arr, "ok", retries,
-                           statsmod.rse(arr) if arr.size else float("inf"))
+    return PairMeasurement(f_init, f_target, np.asarray(lat), "ok", retries,
+                           running.rse())

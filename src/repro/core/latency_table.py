@@ -8,7 +8,7 @@ import os
 
 import numpy as np
 
-from repro.core.dbscan import adaptive_dbscan, split_clusters
+from repro.core.dbscan import NOISE, adaptive_dbscan, split_clusters
 from repro.core.silhouette import silhouette_score
 
 
@@ -22,6 +22,7 @@ class PairResult:
     n_clusters: int
     silhouette: float
     status: str = "ok"
+    labels: np.ndarray | None = None   # per-sample DBSCAN labels (-1 = noise)
 
     @property
     def worst_case(self) -> float:     # max switching latency (clean)
@@ -35,19 +36,37 @@ class PairResult:
     def mean(self) -> float:
         return float(self.clean.mean()) if self.clean.size else float("nan")
 
+    @property
+    def outlier_mask(self) -> np.ndarray:
+        """Per-sample outlier flags, aligned with ``latencies``.  Prefers
+        the persisted DBSCAN labels; the value-membership fallback for
+        label-less legacy results mislabels values duplicated across the
+        clean and outlier sets, which is exactly why labels are stored."""
+        if self.labels is not None:
+            return np.asarray(self.labels) == NOISE
+        return np.isin(np.round(self.latencies, 12),
+                       np.round(self.outliers, 12))
 
-def analyse_pair(f_init, f_target, latencies, status="ok") -> PairResult:
+
+def analyse_pair(f_init, f_target, latencies, status="ok", *,
+                 impl: str = "sorted",
+                 with_silhouette: bool = True) -> PairResult:
+    """Cluster one pair's samples; ``with_silhouette=False`` skips the
+    §VII-B validation score for consumers that only need the
+    clean/outlier split (e.g. regression re-analysis)."""
     lat = np.asarray(latencies, dtype=np.float64).ravel()
     if lat.size < 5:
         return PairResult(f_init, f_target, lat, lat, np.empty(0), 1,
-                          float("nan"), status)
-    res = adaptive_dbscan(lat)
+                          float("nan"), status,
+                          labels=np.zeros(lat.size, dtype=int))
+    res = adaptive_dbscan(lat, impl=impl)
     clean, outliers, clusters = split_clusters(lat, res)
-    sil = silhouette_score(lat, res.labels) if res.n_clusters >= 2 else float("nan")
+    sil = (silhouette_score(lat, res.labels, impl=impl)
+           if with_silhouette and res.n_clusters >= 2 else float("nan"))
     if clean.size == 0:
         clean = lat
     return PairResult(f_init, f_target, lat, clean, outliers,
-                      max(1, res.n_clusters), sil, status)
+                      max(1, res.n_clusters), sil, status, labels=res.labels)
 
 
 class LatencyTable:
@@ -76,11 +95,10 @@ class LatencyTable:
         paths = []
         for (fi, ft), pr in self.pairs.items():
             p = os.path.join(out_dir, self.csv_name(fi, ft))
-            with open(p, "w") as f:
-                f.write("latency_s,is_outlier\n")
-                out = set(np.round(pr.outliers, 12))
-                for v in pr.latencies:
-                    f.write(f"{v:.9f},{int(round(v, 12) in out)}\n")
+            rows = np.column_stack([pr.latencies,
+                                    pr.outlier_mask.astype(np.float64)])
+            np.savetxt(p, rows, fmt=("%.9f", "%d"), delimiter=",",
+                       header="latency_s,is_outlier", comments="")
             paths.append(p)
         return paths
 

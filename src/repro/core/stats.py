@@ -86,20 +86,81 @@ def null_hypothesis_holds(a: FreqStats, b: FreqStats, *, z: float = 1.96,
     return abs(a.mean - b.mean) < tol
 
 
+class RunningStats:
+    """O(1) streaming mean/std/RSE with element removal (the evaluation
+    loop's thermal-throttle rollback drops the newest samples).
+
+    Sums are kept shifted by the first accepted sample, so the
+    sum-of-squares variance never cancels catastrophically on the tightly
+    clustered latencies this accumulates (values ~mean >> spread)."""
+
+    __slots__ = ("n", "_s1", "_s2", "_shift")
+
+    def __init__(self) -> None:
+        self.n = 0
+        self._s1 = 0.0
+        self._s2 = 0.0
+        self._shift = 0.0
+
+    def add(self, v: float) -> None:
+        if self.n == 0:
+            self._shift = float(v)
+        d = float(v) - self._shift
+        self.n += 1
+        self._s1 += d
+        self._s2 += d * d
+
+    def remove(self, v: float) -> None:
+        """Remove a previously added value (order-independent)."""
+        d = float(v) - self._shift
+        self.n -= 1
+        self._s1 -= d
+        self._s2 -= d * d
+        if self.n == 0:
+            self._s1 = self._s2 = self._shift = 0.0
+
+    @property
+    def mean(self) -> float:
+        return self._shift + self._s1 / self.n if self.n else float("nan")
+
+    @property
+    def std(self) -> float:                    # sample std (ddof=1)
+        if self.n < 2:
+            return 0.0
+        var = (self._s2 - self._s1 * self._s1 / self.n) / (self.n - 1)
+        return math.sqrt(max(0.0, var))
+
+    def rse(self) -> float:
+        """Same semantics as :func:`rse`, without rescanning the samples."""
+        if self.n < 2 or self.mean == 0:
+            return float("inf")
+        return self.std / math.sqrt(self.n) / abs(self.mean)
+
+
 # ---------------------------------------------------------------------- #
 # two-sample machinery for campaign regression detection
 # ---------------------------------------------------------------------- #
-def rankdata(x: np.ndarray) -> np.ndarray:
-    """Average ranks (1-based) with ties sharing their mean rank."""
-    x = np.asarray(x, dtype=np.float64).ravel()
+def _ranks_and_tie_counts(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One sort gives both the average ranks and the tie-run counts (the
+    Mann-Whitney variance correction needs the latter; computing them here
+    saves the extra full sort ``np.unique`` would spend)."""
     order = np.argsort(x, kind="mergesort")
-    ranks = np.empty(x.size, dtype=np.float64)
     sx = x[order]
-    # boundaries of runs of equal values in the sorted array
-    edge = np.flatnonzero(np.r_[True, sx[1:] != sx[:-1], True])
-    for lo, hi in zip(edge[:-1], edge[1:]):
-        ranks[order[lo:hi]] = 0.5 * (lo + hi - 1) + 1.0
-    return ranks
+    run_start = np.r_[True, sx[1:] != sx[:-1]]
+    edges = np.flatnonzero(run_start)
+    counts = np.diff(np.r_[edges, x.size])
+    # average 1-based rank of run r spanning [edges[r], edges[r]+counts[r])
+    avg = edges + 0.5 * (counts - 1) + 1.0
+    ranks = np.empty(x.size, dtype=np.float64)
+    ranks[order] = avg[np.cumsum(run_start) - 1]
+    return ranks, counts
+
+
+def rankdata(x: np.ndarray) -> np.ndarray:
+    """Average ranks (1-based) with ties sharing their mean rank,
+    fully vectorized over the tie runs."""
+    x = np.asarray(x, dtype=np.float64).ravel()
+    return _ranks_and_tie_counts(x)[0]
 
 
 def mann_whitney_u(x, y) -> tuple[float, float]:
@@ -117,12 +178,11 @@ def mann_whitney_u(x, y) -> tuple[float, float]:
     n1, n2 = x.size, y.size
     if n1 == 0 or n2 == 0:
         return float("nan"), float("nan")
-    ranks = rankdata(np.concatenate([x, y]))
+    ranks, counts = _ranks_and_tie_counts(np.concatenate([x, y]))
     u1 = float(ranks[:n1].sum()) - n1 * (n1 + 1) / 2.0
     n = n1 + n2
     mu = n1 * n2 / 2.0
-    # tie correction to the variance
-    _, counts = np.unique(np.concatenate([x, y]), return_counts=True)
+    # tie correction to the variance (counts = tie-run sizes, same sort)
     tie_term = float(((counts ** 3 - counts).sum())) / (n * (n - 1)) if n > 1 else 0.0
     var = n1 * n2 / 12.0 * ((n + 1) - tie_term)
     if var <= 0:                      # all values identical

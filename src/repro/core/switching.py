@@ -35,10 +35,73 @@ class SwitchPass:
     transition_index: int          # iteration index of detection (max core)
 
 
+def _confirm_loop(durs, ends, t_s, target, first_hit, has_hit,
+                  min_confirm, z, tol):
+    """Reference per-core confirm loop (one mean_std per candidate core);
+    kept for the equivalence test of the vectorized path."""
+    n_cores, n_iters = durs.shape
+    core_lat = np.full(n_cores, np.nan)
+    trans_idx = np.full(n_cores, -1, dtype=int)
+    for c in np.nonzero(has_hit)[0]:
+        i = int(first_hit[c])
+        rest = durs[c, i:]
+        if rest.size < min_confirm:
+            continue
+        rest_stats = stats.mean_std(rest)
+        if stats.null_hypothesis_holds(rest_stats, target, z=z, tol=tol):
+            core_lat[c] = ends[c, i] - t_s                   # t_e - t_s
+            trans_idx[c] = i
+    return core_lat, trans_idx
+
+
+def _confirm_vectorized(durs, ends, t_s, target, first_hit, has_hit,
+                        min_confirm, z, tol):
+    """Suffix statistics for every candidate core at once: reverse cumsums
+    give mean/std of the remaining iterations without a Python-level loop.
+    Rows are centered on their full-row mean first so the sum-of-squares
+    variance keeps precision on tightly clustered iteration times."""
+    n_cores, n_iters = durs.shape
+    core_lat = np.full(n_cores, np.nan)
+    trans_idx = np.full(n_cores, -1, dtype=int)
+    cand = has_hit & (n_iters - first_hit >= min_confirm)
+    cores = np.flatnonzero(cand)
+    if not cores.size:
+        return core_lat, trans_idx
+    d = durs[cores]
+    center = d.mean(axis=1, keepdims=True)
+    cd = d - center
+    s1 = np.cumsum(cd[:, ::-1], axis=1)[:, ::-1]     # s1[:, i] = sum cd[:, i:]
+    s2 = np.cumsum((cd * cd)[:, ::-1], axis=1)[:, ::-1]
+    rows = np.arange(cores.size)
+    i = first_hit[cores]
+    n = (n_iters - i).astype(np.float64)
+    m = s1[rows, i] / n                              # centered suffix mean
+    mean = center[:, 0] + m
+    # ddof=1; a single-sample suffix has std 0 (the loop's mean_std), not 0/0
+    var = np.where(n > 1, (s2[rows, i] - n * m * m) / np.maximum(n - 1, 1),
+                   0.0)
+    se = np.sqrt(np.maximum(var, 0.0) / n + target.se ** 2)
+    diff = mean - target.mean
+    # null_hypothesis_holds, vectorized: CI contains zero OR |diff| < tol
+    ok = ((diff - z * se <= 0.0) & (diff + z * se >= 0.0)) \
+        | (np.abs(diff) < tol)
+    sel = cores[ok]
+    core_lat[sel] = ends[sel, i[ok]] - t_s           # t_e - t_s
+    trans_idx[sel] = i[ok]
+    return core_lat, trans_idx
+
+
+_CONFIRM_IMPLS = {"loop": _confirm_loop, "vectorized": _confirm_vectorized}
+
+
 def measure_switch_once(device, f_init: float, f_target: float,
                         cal, spec: WorkloadSpec, *, k_sigma: float = 2.0,
                         z: float = 1.96, tol_frac: float = 0.02,
-                        min_confirm: int = 64) -> SwitchPass | None:
+                        min_confirm: int = 64,
+                        confirm_impl: str = "vectorized"
+                        ) -> SwitchPass | None:
+    if confirm_impl not in _CONFIRM_IMPLS:
+        raise ValueError(f"unknown confirm impl {confirm_impl!r}")
     target = cal.baselines[f_target]
     sync = synchronize_timers(device)
 
@@ -63,17 +126,8 @@ def measure_switch_once(device, f_init: float, f_target: float,
     has_hit = in_band.any(axis=1)
     first_hit = np.where(has_hit, in_band.argmax(axis=1), n_iters)
 
-    core_lat = np.full(n_cores, np.nan)
-    trans_idx = np.full(n_cores, -1, dtype=int)
-    for c in np.nonzero(has_hit)[0]:
-        i = int(first_hit[c])
-        rest = durs[c, i:]
-        if rest.size < min_confirm:
-            continue
-        rest_stats = stats.mean_std(rest)
-        if stats.null_hypothesis_holds(rest_stats, target, z=z, tol=tol):
-            core_lat[c] = ends[c, i] - t_s                   # t_e - t_s
-            trans_idx[c] = i
+    core_lat, trans_idx = _CONFIRM_IMPLS[confirm_impl](
+        durs, ends, t_s, target, first_hit, has_hit, min_confirm, z, tol)
 
     viable = ~np.isnan(core_lat)
     if not viable.any():

@@ -1,0 +1,279 @@
+"""O(n log n) analysis engine vs the O(n²) references: sorted-window
+DBSCAN must be bit-identical, prefix-sum silhouette within 1e-12, the
+vectorized switching confirm must reproduce the per-core loop, and the
+running-sum RSE must match a full rescan.  (Deterministic counterparts of
+the hypothesis properties in test_analysis_equivalence.py, so the
+equivalence guarantee is enforced even where hypothesis is absent.)"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import stats
+from repro.core.calibration import calibrate
+from repro.core.dbscan import NOISE, adaptive_dbscan, dbscan
+from repro.core.evaluation import MeasureConfig, measure_pair
+from repro.core.latency_table import LatencyTable, PairResult, analyse_pair
+from repro.core.silhouette import silhouette_score
+from repro.core.switching import (_confirm_loop, _confirm_vectorized,
+                                  measure_switch_once)
+from repro.core.workload import WorkloadSpec
+from repro.dvfs import make_device
+
+
+def _datasets():
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(0, 160))
+        yield np.concatenate([rng.normal(20e-3, .5e-3, n),
+                              rng.uniform(.08, .3, int(rng.integers(0, 6)))])
+        yield rng.integers(0, 9, n) / 7.0              # duplicate-heavy
+        yield np.full(n, 3.14)                         # all identical
+    yield np.array([])                                 # empty
+    yield np.array([1.0])                              # below any minPts
+    yield np.array([5.0, 5.0, 5.0])                    # n < minPts duplicates
+
+
+# ------------------------------------------------------------------ #
+# DBSCAN
+# ------------------------------------------------------------------ #
+def test_sorted_dbscan_bit_identical_to_matrix():
+    for x in _datasets():
+        for eps in (1e-12, 1e-4, 1e-3, 0.3):
+            for mp in (2, 3, 5, 40):
+                a = dbscan(x, eps, mp)
+                b = dbscan(x, eps, mp, impl="matrix")
+                np.testing.assert_array_equal(a, b)
+
+
+def test_sorted_dbscan_exact_on_eps_boundaries():
+    """Grid data puts many pairwise distances exactly at (or one ulp off)
+    eps — the searchsorted fix-up must keep the reference predicate."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 25, 90).astype(float) * 0.1
+    for eps in (0.1, np.nextafter(0.1, 0), np.nextafter(0.1, 1), 0.2):
+        for mp in (2, 3, 6):
+            np.testing.assert_array_equal(
+                dbscan(x, eps, mp), dbscan(x, eps, mp, impl="matrix"))
+
+
+def test_adaptive_dbscan_impls_agree_fully():
+    for x in _datasets():
+        if not x.size:
+            continue
+        fast = adaptive_dbscan(x)
+        ref = adaptive_dbscan(x, impl="matrix")
+        np.testing.assert_array_equal(fast.labels, ref.labels)
+        assert (fast.eps, fast.min_pts, fast.noise_ratio, fast.n_clusters,
+                fast.converged) == (ref.eps, ref.min_pts, ref.noise_ratio,
+                                    ref.n_clusters, ref.converged)
+
+
+def test_dbscan_rejects_unknown_impl():
+    with pytest.raises(ValueError):
+        dbscan(np.ones(4), 0.1, 2, impl="gpu")
+    with pytest.raises(ValueError):
+        adaptive_dbscan(np.ones(8), impl="gpu")
+
+
+def test_sorted_dbscan_multidim_falls_back_to_matrix():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (40, 2))
+    np.testing.assert_array_equal(dbscan(x, 0.5, 3),
+                                  dbscan(x, 0.5, 3, impl="matrix"))
+
+
+# ------------------------------------------------------------------ #
+# silhouette
+# ------------------------------------------------------------------ #
+def test_silhouette_impls_agree():
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(3, 220))
+        x = rng.integers(0, 12, n) / 7.0 if seed % 2 else rng.uniform(0, 1, n)
+        labels = rng.integers(-1, 4, n)
+        a = silhouette_score(x, labels)
+        b = silhouette_score(x, labels, impl="matrix")
+        assert (math.isnan(a) and math.isnan(b)) or abs(a - b) <= 1e-12
+
+
+def test_silhouette_constant_values_across_labels_exact():
+    """Identical values split over several labels: the matrix path gets
+    exact zeros for a and b, so the prefix-sum path must too — a rounding
+    residue here gets amplified to O(1) by (b-a)/max(a,b)."""
+    x = np.full(43, 0.31443998)
+    labels = np.random.default_rng(0).integers(-1, 5, 43)
+    a = silhouette_score(x, labels)
+    b = silhouette_score(x, labels, impl="matrix")
+    assert a == b == 0.0
+    # two constant clusters at different values: perfectly separated
+    x2 = np.array([0.1] * 10 + [0.3] * 10)
+    l2 = np.array([0] * 10 + [1] * 10)
+    assert silhouette_score(x2, l2) == 1.0
+    assert silhouette_score(x2, l2, impl="matrix") == 1.0
+
+
+def test_silhouette_rejects_unknown_impl():
+    with pytest.raises(ValueError):
+        silhouette_score(np.ones(6), np.zeros(6, dtype=int), impl="gpu")
+
+
+def test_switch_once_rejects_unknown_confirm_impl():
+    with pytest.raises(ValueError):
+        measure_switch_once(None, 0.0, 1.0, None, None, confirm_impl="gpu")
+
+
+# ------------------------------------------------------------------ #
+# vectorized switching confirm
+# ------------------------------------------------------------------ #
+def _confirm_inputs(seed, n_cores=12, n_iters=300):
+    rng = np.random.default_rng(seed)
+    durs = rng.lognormal(math.log(40e-6), 0.05, (n_cores, n_iters))
+    starts = np.cumsum(durs, axis=1) - durs
+    ends = starts + durs
+    target = stats.mean_std(rng.lognormal(math.log(40e-6), 0.05, 4000))
+    first_hit = rng.integers(0, n_iters, n_cores)
+    has_hit = rng.random(n_cores) < 0.8
+    return durs, ends, 1e-4, target, first_hit, has_hit
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_confirm_vectorized_matches_loop(seed):
+    durs, ends, t_s, target, first_hit, has_hit = _confirm_inputs(seed)
+    for min_confirm in (1, 2, 16, 64, 290):
+        ref_lat, ref_idx = _confirm_loop(durs, ends, t_s, target,
+                                         first_hit, has_hit, min_confirm,
+                                         1.96, 0.02 * target.mean)
+        lat, idx = _confirm_vectorized(durs, ends, t_s, target,
+                                       first_hit, has_hit, min_confirm,
+                                       1.96, 0.02 * target.mean)
+        np.testing.assert_array_equal(idx, ref_idx)
+        np.testing.assert_array_equal(np.isnan(lat), np.isnan(ref_lat))
+        np.testing.assert_allclose(lat[~np.isnan(lat)],
+                                   ref_lat[~np.isnan(ref_lat)], rtol=0,
+                                   atol=0)        # exact: same ends lookup
+
+
+def test_confirm_impls_agree_end_to_end():
+    """Two identical simulated devices, one pass per confirm impl: the
+    SwitchPass must be identical (same RNG stream, same decisions)."""
+    spec = WorkloadSpec(iters_per_kernel=1100, flops_per_iter=40e-6,
+                        delay_iters=300, confirm_iters=400)
+    results = []
+    for impl in ("loop", "vectorized"):
+        dev = make_device("a100", seed=11, n_cores=8)
+        cal = calibrate(dev, [210.0, 1410.0], spec)
+        res = measure_switch_once(dev, 210.0, 1410.0, cal, spec,
+                                  confirm_impl=impl)
+        results.append(res)
+    a, b = results
+    assert (a is None) == (b is None)
+    if a is not None:
+        assert a.latency == b.latency
+        assert a.transition_index == b.transition_index
+        assert a.n_viable == b.n_viable
+        np.testing.assert_array_equal(a.core_latencies, b.core_latencies)
+
+
+# ------------------------------------------------------------------ #
+# measure_pair: running-sum RSE + default-config cleanup
+# ------------------------------------------------------------------ #
+def test_measure_pair_none_default_and_rse_matches_rescan():
+    spec = WorkloadSpec(iters_per_kernel=1100, flops_per_iter=40e-6,
+                        delay_iters=300, confirm_iters=400)
+    dev = make_device("a100", seed=1, n_cores=8)
+    cal = calibrate(dev, [210.0, 1410.0], spec)
+    pm = measure_pair(dev, 210.0, 1410.0, cal, spec,
+                      MeasureConfig(min_measurements=5, max_measurements=8,
+                                    rse_check_every=5))
+    assert pm.status == "ok"
+    assert pm.rse == pytest.approx(stats.rse(pm.latencies), rel=1e-9)
+    # None default builds a fresh MeasureConfig per call (no shared
+    # default-instance argument)
+    import inspect
+    sig = inspect.signature(measure_pair)
+    assert sig.parameters["mc"].default is None
+
+
+def test_running_stats_add_remove_matches_numpy():
+    rng = np.random.default_rng(3)
+    vals = rng.lognormal(-4, 0.05, 60)
+    rs = stats.RunningStats()
+    for v in vals:
+        rs.add(v)
+    for v in vals[-5:]:
+        rs.remove(v)
+    kept = vals[:-5]
+    assert rs.n == kept.size
+    assert rs.mean == pytest.approx(kept.mean(), rel=1e-12)
+    assert rs.std == pytest.approx(kept.std(ddof=1), rel=1e-9)
+    assert rs.rse() == pytest.approx(stats.rse(kept), rel=1e-9)
+    for v in kept:
+        rs.remove(v)
+    assert rs.n == 0 and rs.rse() == float("inf")
+
+
+# ------------------------------------------------------------------ #
+# rankdata vectorization
+# ------------------------------------------------------------------ #
+def test_rankdata_bit_identical_to_tie_loop():
+    def rank_ref(x):                 # the pre-vectorization implementation
+        x = np.asarray(x, dtype=np.float64).ravel()
+        order = np.argsort(x, kind="mergesort")
+        ranks = np.empty(x.size, dtype=np.float64)
+        sx = x[order]
+        edge = np.flatnonzero(np.r_[True, sx[1:] != sx[:-1], True])
+        for lo, hi in zip(edge[:-1], edge[1:]):
+            ranks[order[lo:hi]] = 0.5 * (lo + hi - 1) + 1.0
+        return ranks
+
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(0, 300))
+        x = (rng.integers(0, max(1, n // 4 + 1), n) / 3.0 if seed % 2
+             else rng.normal(0, 1, n))
+        np.testing.assert_array_equal(stats.rankdata(x), rank_ref(x))
+
+
+# ------------------------------------------------------------------ #
+# per-sample outlier labels in CSV persistence
+# ------------------------------------------------------------------ #
+def test_save_csv_keeps_duplicate_value_in_clean_and_outlier_apart(tmp_path):
+    """A value present in BOTH the clean and outlier sets must be flagged
+    per-sample, not per-value: the old round(v,12)-membership hack marked
+    every duplicate as an outlier."""
+    lat = np.array([20e-3, 20e-3, 21e-3, 150e-3])
+    labels = np.array([0, NOISE, 0, NOISE])        # one 20 ms pass is noise
+    pr = PairResult(210.0, 1410.0, lat, lat[labels == 0],
+                    lat[labels == NOISE], 1, float("nan"), "ok",
+                    labels=labels)
+    t = LatencyTable(hostname="h", device_index=0)
+    t.add(pr)
+    (path,) = t.save_csv(str(tmp_path))
+    got_lat, got_out = LatencyTable.load_csv(path)
+    np.testing.assert_allclose(got_lat, lat, rtol=0, atol=1e-9)
+    np.testing.assert_array_equal(got_out, [False, True, False, True])
+
+
+def test_save_csv_empty_pair_header_only(tmp_path):
+    pr = analyse_pair(210.0, 1410.0, np.array([]), status="undetectable")
+    t = LatencyTable(hostname="h", device_index=0)
+    t.add(pr)
+    (path,) = t.save_csv(str(tmp_path))
+    lat, out = LatencyTable.load_csv(path)
+    assert lat.size == 0 and out.size == 0
+
+
+def test_analyse_pair_labels_align_with_split():
+    rng = np.random.default_rng(0)
+    lat = np.concatenate([rng.normal(20e-3, .5e-3, 60),
+                          rng.uniform(.1, .3, 4)])
+    pr = analyse_pair(210.0, 1410.0, lat)
+    assert pr.labels is not None and pr.labels.size == lat.size
+    np.testing.assert_array_equal(lat[pr.labels != NOISE], pr.clean)
+    np.testing.assert_array_equal(lat[pr.labels == NOISE], pr.outliers)
+    # matrix route produces the same PairResult
+    ref = analyse_pair(210.0, 1410.0, lat, impl="matrix")
+    np.testing.assert_array_equal(pr.labels, ref.labels)
+    assert (math.isnan(pr.silhouette) and math.isnan(ref.silhouette)) \
+        or abs(pr.silhouette - ref.silhouette) <= 1e-12

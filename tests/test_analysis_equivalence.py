@@ -1,0 +1,66 @@
+"""Property-based equivalence of the sorted-window analysis engine with
+the O(n²) matrix references: DBSCAN labels bit-identical, silhouette
+within 1e-12, on arbitrary 1-D inputs — including all-identical,
+duplicate-heavy, and smaller-than-minPts arrays."""
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests run when installed
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dbscan import adaptive_dbscan, dbscan
+from repro.core.silhouette import silhouette_score
+
+# continuous draws, heavy-duplicate draws (few distinct values), and
+# constant arrays — each a regime the sorted path handles differently
+_values = st.one_of(
+    st.lists(st.floats(0.0, 1.0, allow_nan=False), max_size=120),
+    st.lists(st.integers(0, 6).map(lambda k: k / 7.0), max_size=120),
+    st.tuples(st.integers(0, 60), st.floats(0.0, 1.0, allow_nan=False))
+      .map(lambda t: [t[1]] * t[0]),
+)
+
+
+@given(_values, st.floats(1e-9, 0.5), st.integers(2, 12))
+@settings(max_examples=120, deadline=None)
+def test_sorted_dbscan_labels_bit_identical(vals, eps, min_pts):
+    x = np.asarray(vals, dtype=np.float64)
+    np.testing.assert_array_equal(dbscan(x, eps, min_pts),
+                                  dbscan(x, eps, min_pts, impl="matrix"))
+
+
+@given(_values.filter(lambda v: len(v) >= 1))
+@settings(max_examples=60, deadline=None)
+def test_adaptive_dbscan_result_identical(vals):
+    x = np.asarray(vals, dtype=np.float64)
+    fast = adaptive_dbscan(x)
+    ref = adaptive_dbscan(x, impl="matrix")
+    np.testing.assert_array_equal(fast.labels, ref.labels)
+    assert (fast.eps, fast.min_pts, fast.noise_ratio, fast.n_clusters,
+            fast.converged) == (ref.eps, ref.min_pts, ref.noise_ratio,
+                                ref.n_clusters, ref.converged)
+
+
+@given(st.lists(st.tuples(st.floats(0.0, 1.0, allow_nan=False),
+                          st.integers(-1, 4)), max_size=120))
+@settings(max_examples=120, deadline=None)
+def test_prefix_sum_silhouette_matches_matrix(pairs):
+    x = np.asarray([p[0] for p in pairs], dtype=np.float64)
+    labels = np.asarray([p[1] for p in pairs], dtype=int)
+    a = silhouette_score(x, labels)
+    b = silhouette_score(x, labels, impl="matrix")
+    assert (math.isnan(a) and math.isnan(b)) or abs(a - b) <= 1e-12
+
+
+@given(_values, st.integers(2, 8))
+@settings(max_examples=60, deadline=None)
+def test_silhouette_on_dbscan_labels(vals, min_pts):
+    """The composed pipeline (cluster, then score the produced labels)
+    agrees across engines end to end."""
+    x = np.asarray(vals, dtype=np.float64)
+    labels = dbscan(x, 0.05, min_pts)
+    a = silhouette_score(x, labels)
+    b = silhouette_score(x, labels, impl="matrix")
+    assert (math.isnan(a) and math.isnan(b)) or abs(a - b) <= 1e-12

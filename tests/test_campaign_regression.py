@@ -137,6 +137,21 @@ def test_small_drift_below_threshold_not_flagged(measured):
     assert moved[0].p_value > DiffConfig().alpha
 
 
+def test_reanalyse_recovers_drift_and_keeps_self_diff_clean(measured):
+    """DiffConfig(reanalyse=True) re-clusters raw samples through the
+    sorted-window engine instead of trusting stored outlier flags; the
+    verdicts must match the stored-flag path on both a clean self-diff
+    and an injected drift."""
+    store, campaign = measured
+    diff = diff_campaigns(campaign, campaign, DiffConfig(reanalyse=True))
+    assert diff.clean and len(diff.drifts) == 12
+    drifted = _clone_with_drift(store, campaign, "cdrift30re", scale=1.3)
+    flagged = diff_campaigns(campaign, drifted,
+                             DiffConfig(reanalyse=True)).flagged()
+    assert [(d.unit_key, d.f_init, d.f_target) for d in flagged] == [
+        ("a100@fast", 705.0, 1410.0)]
+
+
 def test_coverage_change_is_reported_not_flagged(measured):
     store, campaign = measured
     clone = _clone_with_drift(store, campaign, "ccover", scale=1.0)
