@@ -58,11 +58,13 @@ def main() -> None:
                                          bench_phase1_two_sigma,
                                          bench_table2_summary)
     from benchmarks.roofline_report import bench_roofline_table
+    from benchmarks.trace_overhead import bench_trace
     from benchmarks.wait_speedup import bench_wait_vectorized
 
     benches = [
         bench_wait_vectorized,       # simulator hot path (session refactor)
         bench_analysis,              # sorted-window analysis engine
+        bench_trace,                 # telemetry recorder overhead (<5% bar)
         bench_phase1_two_sigma,      # §V-A
         bench_dbscan_adaptive,       # Alg. 3
         bench_table2_summary,        # Table II (+ ground-truth recovery)

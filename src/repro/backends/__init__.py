@@ -6,6 +6,7 @@ Importing this package populates the registry with the built-in backends:
   vmapped-sim   same model, mandatory vectorized evaluation + batched
                 multi-kernel passes
   cuda-nvml     real-hardware contract stub (needs pynvml + a GPU)
+  trace-replay  re-execute a recorded telemetry trace offline (repro.trace)
 """
 from repro.backends.base import AcceleratorBackend, BackendUnavailableError
 from repro.backends.registry import (BackendEntry, create_backend,
@@ -16,6 +17,7 @@ from repro.backends.registry import (BackendEntry, create_backend,
 from repro.backends import simulated as _simulated            # noqa: F401
 from repro.backends import vmapped_sim as _vmapped_sim        # noqa: F401
 from repro.backends import cuda_nvml as _cuda_nvml            # noqa: F401
+from repro.trace import replay as _trace_replay               # noqa: F401
 from repro.backends.vmapped_sim import VmappedSimAccelerator
 from repro.backends.cuda_nvml import CudaNvmlBackend
 

@@ -19,25 +19,17 @@ from repro.campaign.regression import DiffConfig, diff_campaigns, diff_markdown
 from repro.campaign.scheduler import CampaignRunner
 from repro.campaign.spec import CampaignSpec
 from repro.campaign.store import ArtifactStore
+from repro.cliutil import emit as _emit
 
 
 def _store(args) -> ArtifactStore:
     return ArtifactStore(args.store)
 
 
-def _emit(text: str, out: str | None) -> None:
-    if out:
-        with open(out, "w") as f:
-            f.write(text + "\n")
-        print(f"wrote {out}")
-    else:
-        print(text)
-
-
 def cmd_run(args) -> int:
     spec = CampaignSpec.load(args.spec)
     runner = CampaignRunner(spec, _store(args), executor=args.executor,
-                            max_workers=args.workers)
+                            max_workers=args.workers, trace=args.trace)
     print(f"campaign {spec.campaign_id()} ({spec.name}): "
           f"{len(spec.units())} unit(s)")
     result = runner.run(verbose=not args.quiet)
@@ -54,9 +46,13 @@ def cmd_ls(args) -> int:
     if not rows:
         print(f"no campaigns under {_store(args).root}")
         return 0
+    store = _store(args)
     for r in rows:
+        traces = store.load(r["campaign_id"]).list_traces()
+        n_traces = sum(len(v) for v in traces.values())
+        extra = f"  {n_traces} trace(s)" if n_traces else ""
         print(f"{r['campaign_id']}  {r['units_done']}/{r['units_total']} "
-              f"units  {r['name']}")
+              f"units  {r['name']}{extra}")
     return 0
 
 
@@ -89,6 +85,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--executor", choices=("serial", "threads"),
                    default="serial")
     p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--trace", action="store_true",
+                   help="record each unit's telemetry (repro.trace) and "
+                        "store it as a campaign artifact")
     p.add_argument("--quiet", action="store_true")
     p.set_defaults(fn=cmd_run)
 

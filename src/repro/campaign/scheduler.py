@@ -71,11 +71,17 @@ def _ground_truth(session) -> dict[tuple[float, float], float]:
 
 class CampaignRunner:
     def __init__(self, spec: CampaignSpec, store: ArtifactStore | None = None,
-                 *, executor: str = "serial", max_workers: int = 4):
+                 *, executor: str = "serial", max_workers: int = 4,
+                 trace: bool = False):
         self.spec = spec
         self.store = store if store is not None else ArtifactStore()
         self.executor = executor
         self.max_workers = max_workers
+        # record each unit's telemetry (repro.trace) and store it as a
+        # campaign artifact; the trace covers THIS run's interactions — a
+        # resumed unit's already-persisted pairs are loaded, not re-measured,
+        # so they do not reappear in the new trace
+        self.trace = trace
 
     def run(self, verbose: bool = False) -> CampaignResult:
         campaign = self.store.open(self.spec)
@@ -120,13 +126,24 @@ class CampaignRunner:
                                attempts=attempt)
             t0 = time.perf_counter()
             session = None
+            recorder = None
+            if self.trace:
+                from repro.trace.recorder import TraceRecorder
+                recorder = TraceRecorder(meta={
+                    "campaign_id": campaign.campaign_id,
+                    "unit_key": unit.key, "attempt": attempt})
+            # trace= only when enabled: build_session keeps its untraced
+            # call shape (and monkeypatched doubles) untouched otherwise
+            kw = {} if recorder is None else {"trace": recorder}
             try:
                 session = unit.build_session(
-                    out_dir=campaign.session_dir(unit.key))
+                    out_dir=campaign.session_dir(unit.key), **kw)
                 table = session.run(verbose=False)
                 wall = time.perf_counter() - t0
                 gt_acc.update(_ground_truth(session))
                 campaign.save_unit_result(unit.key, table, gt_acc)
+                if recorder is not None:
+                    campaign.save_trace(unit.key, recorder)
                 campaign.mark_unit(unit.key, status=UNIT_DONE,
                                    wall_s=wall, n_pairs=len(table.pairs),
                                    error=None)

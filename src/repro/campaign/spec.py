@@ -143,7 +143,8 @@ class UnitSpec:
         return f"{self.device.key}@{self.measure.key}"
 
     def build_session(self, out_dir: str | None = None,
-                      executor: str = "serial") -> MeasurementSession:
+                      executor: str = "serial",
+                      trace=None) -> MeasurementSession:
         device = self.device.create_device()
         return MeasurementSession(
             device, self.device.resolve_frequencies(device),
@@ -151,7 +152,7 @@ class UnitSpec:
                           executor=executor, out_dir=out_dir),
             backend=self.device.backend,
             backend_options=self.device.options_dict,
-            device_name=self.device.key)
+            device_name=self.device.key, trace=trace)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,6 +10,8 @@ Layout (everything human-readable, everything atomic-replace written)::
                                    #   session.json + pairs/*.json)
             table/                 # per-pair CSVs, LATEST naming convention
             result.json            # pair index + simulator ground truth
+            traces/<name>/         # telemetry traces (repro.trace:
+                                   #   header.jsonl + events.npz)
 
 The campaign id is the hash of the spec (:meth:`CampaignSpec.campaign_id`),
 so re-running an identical spec lands in the same directory and *resumes*:
@@ -198,6 +200,45 @@ class Campaign:
     def tables(self) -> dict[str, LatencyTable]:
         return {k: self.load_table(k) for k in self.done_units()
                 if self.has_unit_result(k)}
+
+    # -------------------------------------------------------------- #
+    # telemetry traces (repro.trace): measurement artifacts that outlive
+    # the run — replayable offline through the `trace-replay` backend
+    # -------------------------------------------------------------- #
+    def traces_dir(self, unit_key: str) -> str:
+        return os.path.join(self.unit_dir(unit_key), "traces")
+
+    def trace_path(self, unit_key: str, name: str = "session") -> str:
+        return os.path.join(self.traces_dir(unit_key), name)
+
+    def save_trace(self, unit_key: str, trace, name: str = "session") -> str:
+        """Persist one unit's telemetry trace (a loaded
+        :class:`repro.trace.recorder.Trace` or a live ``TraceRecorder``)."""
+        if hasattr(trace, "finish"):          # a recorder: freeze it first
+            trace = trace.finish()
+        return trace.save(self.trace_path(unit_key, name))
+
+    def list_traces(self, unit_key: str | None = None) -> dict[str, list[str]]:
+        """unit_key -> sorted trace names (all units when key is None)."""
+        from repro.trace.schema import HEADER_FILE
+        units = ([unit_key] if unit_key is not None else
+                 sorted(os.listdir(os.path.join(self.dir, _UNITS)))
+                 if os.path.isdir(os.path.join(self.dir, _UNITS)) else [])
+        out: dict[str, list[str]] = {}
+        for key in units:
+            tdir = self.traces_dir(key)
+            if not os.path.isdir(tdir):
+                continue
+            names = sorted(
+                n for n in os.listdir(tdir)
+                if os.path.exists(os.path.join(tdir, n, HEADER_FILE)))
+            if names:
+                out[key] = names
+        return out
+
+    def load_trace(self, unit_key: str, name: str = "session"):
+        from repro.trace.recorder import Trace
+        return Trace.load(self.trace_path(unit_key, name))
 
 
 class ArtifactStore:

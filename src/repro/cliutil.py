@@ -1,0 +1,13 @@
+"""Small helpers shared by the command-line entry points
+(`repro.campaign`, `repro.trace`)."""
+from __future__ import annotations
+
+
+def emit(text: str, out: str | None) -> None:
+    """Print ``text``, or write it to ``out`` and say so."""
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {out}")
+    else:
+        print(text)

@@ -8,6 +8,12 @@ estimated from n delay-request exchanges
 taking the exchange with the smallest round-trip delay (best-of-n filters
 link jitter, the standard PTP trick).  Host timestamps then map to the
 accelerator timeline as  t_acc = t_host + offset.
+
+:func:`sync_from_exchanges` performs the estimation on raw ``(t1,t2,t3,t4)``
+tuples without touching a device, so recorded telemetry traces
+(:mod:`repro.trace`) recompute the exact same mapping offline; the
+per-exchange offsets/RTTs ride along on :class:`ClockSync` for trace
+recording and diagnostics.
 """
 from __future__ import annotations
 
@@ -21,17 +27,38 @@ class ClockSync:
     offset: float          # t_acc - t_host at sync time
     rtt: float             # best round-trip delay observed
     n_exchanges: int
+    offsets: tuple[float, ...] = ()   # per-exchange offset estimates
+    rtts: tuple[float, ...] = ()      # per-exchange round-trip delays
 
     def host_to_acc(self, t_host: float) -> float:
         return t_host + self.offset
 
 
+def sync_from_exchanges(exchanges) -> ClockSync:
+    """Best-of-n offset from raw exchange tuples ``(t1, t2, t3, t4)``.
+
+    Picks the (first) exchange with the smallest round-trip delay — link
+    jitter only ever *adds* to the RTT, so the min-RTT exchange carries the
+    least-contaminated offset."""
+    exchanges = list(exchanges)
+    if not exchanges:
+        raise ValueError(
+            "clock sync needs at least one exchange (got 0); call "
+            "synchronize_timers with n_exchanges >= 1")
+    offsets, rtts = [], []
+    for t1, t2, t3, t4 in exchanges:
+        rtts.append((t4 - t1) - (t3 - t2))
+        offsets.append(((t2 - t1) + (t3 - t4)) / 2.0)
+    best = int(np.argmin(rtts))        # first minimum, like the seed loop
+    return ClockSync(offset=offsets[best], rtt=rtts[best],
+                     n_exchanges=len(exchanges),
+                     offsets=tuple(offsets), rtts=tuple(rtts))
+
+
 def synchronize_timers(device, n_exchanges: int = 16) -> ClockSync:
-    best = None
-    for _ in range(n_exchanges):
-        t1, t2, t3, t4 = device.sync_exchange()
-        rtt = (t4 - t1) - (t3 - t2)
-        offset = ((t2 - t1) + (t3 - t4)) / 2.0
-        if best is None or rtt < best[0]:
-            best = (rtt, offset)
-    return ClockSync(offset=best[1], rtt=best[0], n_exchanges=n_exchanges)
+    if n_exchanges < 1:
+        raise ValueError(
+            f"n_exchanges must be >= 1, got {n_exchanges}: an offset "
+            "cannot be estimated from zero exchanges")
+    return sync_from_exchanges(
+        device.sync_exchange() for _ in range(n_exchanges))

@@ -81,7 +81,8 @@ class MeasurementSession:
                  cfg: SessionConfig | None = None, *,
                  backend: str | None = None, backend_options: dict | None = None,
                  device_factory=None, device_name: str | None = None,
-                 device_index: int = 0, hostname: str = "node0"):
+                 device_index: int = 0, hostname: str = "node0",
+                 trace=None):
         if device is None and backend is None:
             backend = "simulated"
         self.cfg = cfg if cfg is not None else SessionConfig()
@@ -90,6 +91,10 @@ class MeasurementSession:
         if device is None:
             from repro.backends import create_backend
             device = create_backend(backend, **self._backend_options)
+        self._trace = trace
+        if trace is not None:
+            from repro.trace.recorder import TracedBackend
+            device = TracedBackend(device, trace)
         self._devices = [device]
         self._device_factory = device_factory
         if self._device_factory is None and backend is not None:
@@ -110,6 +115,17 @@ class MeasurementSession:
         self.hostname = hostname
         self.cal: Calibration | None = None
         self.spec: WorkloadSpec | None = None
+        self._cal_loaded = False
+        if trace is not None:
+            # everything a replay needs to rebuild this session offline
+            trace.update_meta(sweep={
+                "frequencies": self.frequencies,
+                "latest": dataclasses.asdict(self.cfg.latest),
+                "device_name": self.device_name,
+                "device_index": self.device_index,
+                "hostname": self.hostname,
+                "backend": self._backend,
+            })
 
     @property
     def device(self):
@@ -135,6 +151,7 @@ class MeasurementSession:
         if self.cal is not None and self.spec is not None and not force:
             return self.cal
         if not force and self._load_calibration():
+            self._cal_loaded = True
             return self.cal
         lc = self.cfg.latest
         spec0 = self._sizing_spec()
@@ -197,11 +214,28 @@ class MeasurementSession:
                 pr = analyse_pair(pm.f_init, pm.f_target, pm.latencies,
                                   pm.status)
             table.add(pr)
+        if self._trace is not None:
+            # The replay-determinism contract: a replayed sweep must land on
+            # this exact digest (repro.trace.analyze / `trace replay`).  A
+            # resumed run is NOT replayable from this trace alone — loaded
+            # pairs / reloaded calibration were measured by an earlier
+            # process the recorder never saw — so the digest is only
+            # stamped when the trace covers the whole run.
+            complete = not done and not self._cal_loaded
+            self._trace.update_meta(trace_complete=complete)
+            if complete:
+                from repro.trace.analyze import table_digest
+                self._trace.update_meta(live_table_digest=table_digest(table))
         return table
 
     def _ensure_workers(self, n: int) -> None:
         if n <= len(self._devices):
             return
+        if self._trace is not None:
+            raise ValueError(
+                "tracing records one device's interaction stream; "
+                "thread-parallel sweeps would interleave it — use the "
+                "serial executor when trace= is set")
         if self._device_factory is None:
             raise ValueError(
                 "thread-parallel sweeps need independent devices: construct "

@@ -100,13 +100,16 @@ def measure_switch_once(device, f_init: float, f_target: float,
                         min_confirm: int = 64,
                         confirm_impl: str = "vectorized"
                         ) -> SwitchPass | None:
-    if confirm_impl not in _CONFIRM_IMPLS:
+    if confirm_impl not in _CONFIRM_IMPLS:    # fail before touching the device
         raise ValueError(f"unknown confirm impl {confirm_impl!r}")
     target = cal.baselines[f_target]
     sync = synchronize_timers(device)
 
     device.set_frequency(f_init)
-    device.run_kernel(spec.iters_per_kernel // 2, spec.flops_per_iter)  # warm up
+    # warm up, run-for-effect: backends exposing warm_kernel (e.g. the
+    # telemetry recorder) may skip materializing timestamps nobody reads
+    warm = getattr(device, "warm_kernel", None) or device.run_kernel
+    warm(spec.iters_per_kernel // 2, spec.flops_per_iter)
 
     h = device.launch_kernel(spec.iters_per_kernel, spec.flops_per_iter)
     init_iter = cal.baselines[f_init].mean
@@ -115,6 +118,23 @@ def measure_switch_once(device, f_init: float, f_target: float,
     device.set_frequency(f_target)
     data = device.wait(h)                           # (cores, iters, 2)
 
+    return detect_switch(data, t_s, target, k_sigma=k_sigma, z=z,
+                         tol_frac=tol_frac, min_confirm=min_confirm,
+                         confirm_impl=confirm_impl)
+
+
+def detect_switch(data: np.ndarray, t_s: float, target, *,
+                  k_sigma: float = 2.0, z: float = 1.96,
+                  tol_frac: float = 0.02, min_confirm: int = 64,
+                  confirm_impl: str = "vectorized") -> SwitchPass | None:
+    """Pure Alg.2 lines 12-21 on one pass's timestamps: detect + confirm
+    the transition given the change-request time ``t_s`` (accelerator
+    timeline) and the ``target`` frequency baseline.  Factored out of
+    :func:`measure_switch_once` so recorded traces (and the streaming
+    estimator in :mod:`repro.trace.online`) run the identical batch
+    decision without a device."""
+    if confirm_impl not in _CONFIRM_IMPLS:
+        raise ValueError(f"unknown confirm impl {confirm_impl!r}")
     starts, ends = data[..., 0], data[..., 1]
     durs = ends - starts
     lo, hi = stats.two_sigma_band(target, k_sigma)

@@ -66,9 +66,18 @@ class Governor:
 
         The first call always issues a command: the device may boot at its
         idle frequency, which the governor cannot observe — planning from
-        max(freqs) without aligning the device would leave it idling."""
+        max(freqs) without aligning the device would leave it idling.
+
+        When ``device`` is a :class:`repro.trace.recorder.TracedBackend`
+        (anything exposing ``record_plan``) the decision — including the
+        *reason*, which a frequency timeline alone cannot show — is audited
+        into the telemetry trace before any command is issued."""
         f_cur = self._f_cur if self._f_cur is not None else max(self.freqs)
-        tgt, _ = self.pick_target(region, f_cur)
+        tgt, reason = self.pick_target(region, f_cur)
+        audit = getattr(device, "record_plan", None)
+        if audit is not None:
+            audit(f_from=f_cur, f_to=tgt, reason=reason,
+                  region_kind=region.kind, duration_s=region.duration_s)
         if device is not None and tgt != self._f_cur:
             device.set_frequency(tgt)
         self._f_cur = tgt

@@ -5,7 +5,10 @@ The governor hook mirrors train_loop: decode is memory-bound (roofline
 bursts — the paper's §III memory-bound downclocking opportunity.  Pass a
 ``governor`` (e.g. ``Governor.from_session(...)``, built on a MEASURED
 latency table) plus the backend ``device`` it plans for; the hook consults
-it at the prefill->decode region boundary and again after decode.
+it at the prefill->decode region boundary and again after decode.  Wrap
+``device`` in :class:`repro.trace.TracedBackend` and every plan decision
+(with its reason) plus the issued frequency commands land in a replayable
+telemetry trace.
 """
 from __future__ import annotations
 
@@ -25,9 +28,11 @@ class ServeConfig:
     seed: int = 0
 
 
-def serve(cfg, env, params, batch, sc: ServeConfig = ServeConfig(),
+def serve(cfg, env, params, batch, sc: ServeConfig | None = None,
           max_len: int | None = None, verbose=False,
           governor=None, device=None) -> dict:
+    if sc is None:
+        sc = ServeConfig()
     dec = decode_module(cfg)
     b, s = batch["tokens"].shape
     max_len = max_len or (s + sc.max_new_tokens)

@@ -38,9 +38,11 @@ class TrainConfig:
     resume: bool = True
 
 
-def train(cfg, shape, env, tc: TrainConfig = TrainConfig(), *,
+def train(cfg, shape, env, tc: TrainConfig | None = None, *,
           governor=None, device=None, regions=None, verbose=True) -> dict:
     """Returns metrics dict (losses, step times, governor stats)."""
+    if tc is None:
+        tc = TrainConfig()
     mod = model_module(cfg)
     key = jax.random.PRNGKey(tc.seed)
     params, axes = mod.init(key, cfg)

@@ -1,0 +1,21 @@
+"""Streaming telemetry: record every backend interaction, replay it
+offline bit for bit, estimate switching latency online as events arrive.
+
+    TraceRecorder / TracedBackend    record   (repro.trace.recorder)
+    Trace                            the columnar artifact
+    TraceReplayBackend               replay   (registered as `trace-replay`)
+    OnlineSwitchEstimator            online estimation (repro.trace.online)
+    analyze_trace / replay_table     offline analysis (repro.trace.analyze)
+
+CLI: ``python -m repro.trace {record,replay,analyze,export}``.
+"""
+from repro.trace.schema import SCHEMA_VERSION, TraceSchemaError
+from repro.trace.recorder import Trace, TracedBackend, TraceRecorder
+from repro.trace.replay import TraceReplayBackend, TraceReplayError
+from repro.trace.online import OnlineEstimate, OnlineSwitchEstimator, stream_pass
+
+__all__ = [
+    "SCHEMA_VERSION", "TraceSchemaError", "Trace", "TraceRecorder",
+    "TracedBackend", "TraceReplayBackend", "TraceReplayError",
+    "OnlineEstimate", "OnlineSwitchEstimator", "stream_pass",
+]

@@ -1,0 +1,259 @@
+"""Offline trace analysis: batch replay, pass reconstruction, and the
+online-vs-batch cross-validation report.
+
+Three consumers share this module:
+
+* ``python -m repro.trace replay`` — rebuild the recording session from the
+  trace header, drive it against the :class:`TraceReplayBackend`, and check
+  the resulting latency table against the live run's digest (bit-for-bit
+  determinism gate, also the CI ``trace-smoke`` job);
+* ``python -m repro.trace analyze`` — additionally reconstruct every
+  mid-kernel switch pass from the raw event stream, run the streaming
+  estimator over it, and compare against the batch ``detect_switch``
+  decision on identical inputs;
+* tests, which assert both properties pair by pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.clock_sync import sync_from_exchanges
+from repro.core.switching import detect_switch
+from repro.trace import schema
+from repro.trace.online import stream_pass
+from repro.trace.recorder import Trace
+from repro.trace.replay import TraceReplayBackend
+
+
+# ---------------------------------------------------------------------- #
+# table digest: canonical fingerprint of a LatencyTable's measured content
+# ---------------------------------------------------------------------- #
+def table_digest(table) -> str:
+    """sha256 over every pair's raw samples, labels and analysis outputs —
+    two tables share a digest iff the measurement AND the analysis are
+    bit-identical, which is exactly the replay-determinism contract."""
+    h = hashlib.sha256()
+    for (fi, ft) in sorted(table.pairs):
+        pr = table.pairs[(fi, ft)]
+        h.update(f"{fi!r}|{ft!r}|{pr.status}|{pr.n_clusters}|".encode())
+        h.update(np.asarray(pr.latencies, dtype=np.float64).tobytes())
+        labels = (pr.labels if pr.labels is not None
+                  else np.zeros(0, dtype=np.int64))
+        h.update(np.asarray(labels, dtype=np.int64).tobytes())
+        h.update(np.float64(pr.silhouette).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------- #
+# session reconstruction
+# ---------------------------------------------------------------------- #
+def latest_config_from_meta(meta: dict):
+    """Rebuild the recording session's LatestConfig from the trace header."""
+    from repro.core.evaluation import MeasureConfig
+    from repro.core.session import LatestConfig
+    sweep = meta.get("sweep")
+    if sweep is None:
+        raise ValueError(
+            "trace has no 'sweep' metadata: it was not recorded through "
+            "MeasurementSession(trace=...), so the session config is "
+            "unknown — replay it by driving the same code manually")
+    lc = dict(sweep["latest"])
+    lc["measure"] = MeasureConfig(**lc["measure"])
+    return LatestConfig(**lc)
+
+
+def replay_session(trace: Trace, strict: bool = True):
+    """A MeasurementSession wired to the replay backend, configured exactly
+    as the session that recorded ``trace``."""
+    from repro.core.session import MeasurementSession, SessionConfig
+    latest = latest_config_from_meta(trace.meta)   # raises if no sweep meta
+    if trace.meta.get("trace_complete") is False:
+        raise ValueError(
+            "trace records a RESUMED sweep: pairs measured by an earlier "
+            "process are not in this event stream, so the session cannot "
+            "be re-driven offline — record with a fresh out_dir (or none) "
+            "for a replayable trace")
+    sweep = trace.meta["sweep"]
+    dev = TraceReplayBackend(trace, strict=strict)
+    return MeasurementSession(
+        dev, [float(f) for f in sweep["frequencies"]],
+        SessionConfig(latest=latest),
+        device_name=sweep.get("device_name", "trace"),
+        device_index=int(sweep.get("device_index", 0)),
+        hostname=sweep.get("hostname", "node0"))
+
+
+def replay_table(trace: Trace, strict: bool = True):
+    """Re-run the recorded sweep offline; returns the LatencyTable."""
+    return replay_session(trace, strict=strict).run()
+
+
+# ---------------------------------------------------------------------- #
+# switch-pass reconstruction from the raw event stream
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SwitchPassTrace:
+    """One reconstructed mid-kernel frequency switch."""
+    f_init: float
+    f_target: float
+    t_s: float                  # change request mapped to the acc timeline
+    data: np.ndarray            # (n_cores, n_iters, 2) of the crossed kernel
+    wait_event: int             # index of the WAIT event in the trace
+
+
+def iter_switch_passes(trace: Trace):
+    """Yield every :class:`SwitchPassTrace` in stream order.
+
+    A switch pass is a ``set_frequency`` issued between a kernel's launch
+    and its wait, preceded by a ``host_now`` read (Alg. 2's t_s); the
+    accelerator-timeline mapping comes from the most recent run of
+    ``sync_exchange`` events, re-estimated with the identical best-of-n
+    rule the live run used."""
+    sync_group: list[tuple] = []
+    sync = None
+    cur_freq: float | None = None
+    last_host_now: float | None = None
+    open_seq: int | None = None          # most recent un-waited launch
+    armed: tuple[float, float, float, int] | None = None
+    for i in range(trace.n_events):
+        kind = int(trace.kinds[i])
+        if kind == schema.SYNC_EXCHANGE:
+            sync_group.append(tuple(float(v) for v in trace.cols[i]))
+            continue
+        if kind == schema.SYNC_BATCH:
+            n, _, _, off = trace.cols[i]
+            rows = trace.payload[int(off):int(off) + 2 * int(n)]
+            sync_group.extend(
+                tuple(float(v) for v in rows[2 * j:2 * j + 2].ravel())
+                for j in range(int(n)))
+            continue
+        if sync_group:
+            sync = sync_from_exchanges(sync_group)
+            sync_group = []
+        if kind == schema.HOST_NOW:
+            last_host_now = float(trace.cols[i, 0])
+        elif kind == schema.SET_FREQUENCY:
+            mhz = float(trace.cols[i, 0])
+            if (open_seq is not None and cur_freq is not None
+                    and last_host_now is not None and sync is not None):
+                armed = (cur_freq, mhz, sync.host_to_acc(last_host_now),
+                         open_seq)
+            cur_freq = mhz
+        elif kind == schema.LAUNCH:
+            open_seq = int(trace.cols[i, 2])
+            armed = None                 # a new launch invalidates any arm
+        elif kind == schema.WAIT:
+            seq = int(trace.cols[i, 0])
+            if armed is not None and armed[3] == seq:
+                f_init, f_target, t_s, _ = armed
+                yield SwitchPassTrace(f_init, f_target, t_s,
+                                      trace.wait_payload(i), i)
+            if open_seq == seq:
+                open_seq = None
+            armed = None
+
+
+# ---------------------------------------------------------------------- #
+# online vs batch cross-validation
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PassComparison:
+    f_init: float
+    f_target: float
+    batch_latency: float | None      # None: pass rejected (Alg.2 GOTO)
+    online_latency: float | None
+    n_provisional: int
+
+    @property
+    def delta(self) -> float:
+        if self.batch_latency is None and self.online_latency is None:
+            return 0.0
+        if self.batch_latency is None or self.online_latency is None:
+            return float("inf")
+        return abs(self.batch_latency - self.online_latency)
+
+
+@dataclasses.dataclass
+class TraceReport:
+    table: object                     # replayed LatencyTable
+    digest: str
+    live_digest: str | None           # from the trace header (None if absent)
+    passes: list[PassComparison]
+    timer_resolution_s: float
+
+    @property
+    def deterministic(self) -> bool:
+        return self.live_digest is None or self.digest == self.live_digest
+
+    @property
+    def max_delta(self) -> float:
+        return max((p.delta for p in self.passes), default=0.0)
+
+    @property
+    def online_agrees(self) -> bool:
+        return self.max_delta <= self.timer_resolution_s
+
+    @property
+    def ok(self) -> bool:
+        return self.deterministic and self.online_agrees
+
+
+def analyze_trace(trace: Trace, *, k_sigma: float | None = None
+                  ) -> TraceReport:
+    """Full offline analysis of one recorded sweep."""
+    session = replay_session(trace)
+    table = session.run()
+    cal = session.cal
+    if k_sigma is None:
+        k_sigma = float(session.cfg.latest.measure.k_sigma)
+    comparisons: list[PassComparison] = []
+    for sp in iter_switch_passes(trace):
+        target = cal.baselines.get(sp.f_target)
+        if target is None:
+            continue                     # switch outside the calibrated set
+        batch = detect_switch(sp.data, sp.t_s, target, k_sigma=k_sigma)
+        final, provisional = stream_pass(sp.data, sp.t_s, target,
+                                         k_sigma=k_sigma)
+        comparisons.append(PassComparison(
+            sp.f_init, sp.f_target,
+            None if batch is None else float(batch.latency),
+            None if final is None else float(final.latency),
+            len(provisional)))
+    timer = float(trace.meta.get("device", {}).get("timer_resolution_s", 0.0))
+    return TraceReport(table=table, digest=table_digest(table),
+                       live_digest=trace.meta.get("live_table_digest"),
+                       passes=comparisons, timer_resolution_s=timer)
+
+
+def report_markdown(report: TraceReport) -> str:
+    """Human-readable summary for `python -m repro.trace analyze`."""
+    lines = ["# Trace analysis", ""]
+    det = ("bit-for-bit MATCH" if report.live_digest and report.deterministic
+           else "no live digest recorded" if report.live_digest is None
+           else "MISMATCH")
+    lines += [f"- replay determinism: {det} (`{report.digest[:16]}…`)",
+              f"- switch passes reconstructed: {len(report.passes)}",
+              f"- online vs batch max |delta|: {report.max_delta:.3e} s "
+              f"(timer resolution {report.timer_resolution_s:.1e} s) — "
+              f"{'AGREE' if report.online_agrees else 'DISAGREE'}", ""]
+    lines += ["| pair (MHz) | batch (ms) | online (ms) | delta (s) "
+              "| provisional |",
+              "|---|---|---|---|---|"]
+
+    def fmt(v):
+        return "rejected" if v is None else f"{v * 1e3:.3f}"
+
+    for p in report.passes:
+        lines.append(f"| {p.f_init:.0f}→{p.f_target:.0f} "
+                     f"| {fmt(p.batch_latency)} | {fmt(p.online_latency)} "
+                     f"| {p.delta:.2e} | {p.n_provisional} |")
+    summary = report.table.summary()
+    if summary:
+        wc = summary["worst_case"]
+        lines += ["", f"Replayed table: {summary['n_pairs']} pairs, "
+                      f"worst-case {wc['min_ms']:.2f}–{wc['max_ms']:.2f} ms "
+                      f"(mean {wc['mean_ms']:.2f} ms)."]
+    return "\n".join(lines)

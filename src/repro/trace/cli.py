@@ -1,0 +1,145 @@
+"""`python -m repro.trace` — record / replay / analyze / export telemetry.
+
+    record   run a (simulated) sweep with recording on, save the trace
+    replay   re-execute a trace offline; exit 1 if the replayed latency
+             table is not bit-for-bit identical to the live run
+    analyze  replay + reconstruct switch passes + online-vs-batch report
+    export   dump the event stream as JSONL or CSV for external tools
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.cliutil import emit as _emit
+from repro.trace import schema
+from repro.trace.recorder import Trace, TraceRecorder
+
+
+def cmd_record(args) -> int:
+    from repro.core.evaluation import MeasureConfig
+    from repro.core.session import (LatestConfig, MeasurementSession,
+                                    SessionConfig)
+    recorder = TraceRecorder()
+    lc = LatestConfig(measure=MeasureConfig(
+        min_measurements=args.min_measurements,
+        max_measurements=args.max_measurements,
+        rse_check_every=args.min_measurements))
+    session = MeasurementSession(
+        cfg=SessionConfig(latest=lc),
+        backend=args.backend,
+        backend_options={"kind": args.kind, "n_cores": args.n_cores,
+                         "seed": args.seed},
+        frequencies=args.frequencies or None,
+        trace=recorder)
+    table = session.run(verbose=not args.quiet)
+    trace = recorder.save(args.out)
+    summary = table.summary()
+    print(f"recorded {trace.n_events} events "
+          f"({summary.get('n_pairs', 0)} pairs) -> {args.out}")
+    print(f"live table digest {trace.meta['live_table_digest'][:16]}…")
+    return 0
+
+
+def cmd_replay(args) -> int:
+    from repro.trace.analyze import replay_session, table_digest
+    trace = Trace.load(args.trace)
+    session = replay_session(trace, strict=not args.lenient)
+    table = session.run(verbose=not args.quiet)
+    digest = table_digest(table)
+    live = trace.meta.get("live_table_digest")
+    leftover = session.device.remaining_events
+    if leftover:
+        print(f"WARNING: {leftover} recorded protocol event(s) were never "
+              "replayed", file=sys.stderr)
+    if live is None:
+        print(f"replayed {len(table.pairs)} pairs; no live digest recorded, "
+              f"replay digest {digest[:16]}…")
+        return 0
+    if digest == live:
+        print(f"replay DETERMINISTIC: digest {digest[:16]}… matches the "
+              "live run bit for bit")
+        return 0
+    print(f"replay DIVERGED: live {live[:16]}… != replayed {digest[:16]}…",
+          file=sys.stderr)
+    return 1
+
+
+def cmd_analyze(args) -> int:
+    from repro.trace.analyze import analyze_trace, report_markdown
+    report = analyze_trace(Trace.load(args.trace))
+    _emit(report_markdown(report), args.out)
+    return 0 if report.ok else 1
+
+
+def cmd_export(args) -> int:
+    trace = Trace.load(args.trace)
+    lines = []
+    if args.format == "csv":
+        lines.append("index,kind,t_host,c0,c1,c2,c3")
+        for i in range(trace.n_events):
+            c = ",".join(f"{v:.9g}" for v in trace.cols[i])
+            lines.append(f"{i},{trace.kind_name(i)},{trace.t_host[i]:.9f},{c}")
+    else:
+        for i in range(trace.n_events):
+            doc = {"i": i, "kind": trace.kind_name(i),
+                   "t_host": float(trace.t_host[i]),
+                   "c": [None if v != v else float(v)
+                         for v in trace.cols[i]]}
+            doc.update(trace.extras.get(i, {}))
+            if int(trace.kinds[i]) == schema.WAIT:
+                doc["payload_shape"] = list(trace.wait_payload(i).shape)
+            lines.append(json.dumps(doc))
+    _emit("\n".join(lines), args.out)
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.trace",
+        description="Streaming telemetry traces: record, replay, analyze")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("record", help="run a traced sweep, save the trace")
+    p.add_argument("--out", required=True, help="trace output directory")
+    p.add_argument("--backend", default="vmapped-sim")
+    p.add_argument("--kind", default="a100")
+    p.add_argument("--n-cores", type=int, default=4)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--frequencies", type=float, nargs="*", default=None,
+                   help="MHz subset (default: all device frequencies)")
+    p.add_argument("--min-measurements", type=int, default=3)
+    p.add_argument("--max-measurements", type=int, default=6)
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=cmd_record)
+
+    p = sub.add_parser("replay",
+                       help="re-execute a trace; exit 1 unless bit-for-bit")
+    p.add_argument("trace", help="trace directory")
+    p.add_argument("--lenient", action="store_true",
+                   help="serve recorded data without strict call checking")
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=cmd_replay)
+
+    p = sub.add_parser("analyze",
+                       help="replay + online-vs-batch estimator report")
+    p.add_argument("trace", help="trace directory")
+    p.add_argument("--out", default=None, help="write markdown to file")
+    p.set_defaults(fn=cmd_analyze)
+
+    p = sub.add_parser("export", help="dump the event stream")
+    p.add_argument("trace", help="trace directory")
+    p.add_argument("--format", choices=("jsonl", "csv"), default="jsonl")
+    p.add_argument("--out", default=None, help="write to file")
+    p.set_defaults(fn=cmd_export)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,150 @@
+"""Online switching-latency estimation: a streaming change-point detector
+over per-iteration kernel runtimes.
+
+The batch path (:func:`repro.core.switching.detect_switch`) sees the whole
+pass at once; a runtime system sees iterations as they complete.  The
+estimator mirrors Alg. 2's per-core decision as a state machine:
+
+  SEARCH   until an iteration starting at/after ``t_s`` lands inside the
+           target baseline's +-k*sigma population band — that iteration is
+           the core's (only) transition candidate, exactly like the batch
+           path's first-hit rule;
+  CONFIRM  from the candidate on, suffix statistics accumulate in O(1)
+           (:class:`repro.core.stats.RunningStats`); once ``min_confirm``
+           iterations are in and the null hypothesis (suffix mean ==
+           target mean) holds, a *provisional* estimate is emitted — the
+           latency a runtime could act on immediately;
+  FINAL    at end of kernel, :meth:`finalize` applies the batch confirm
+           rule over the full suffix and returns the pass estimate
+           (max over viable cores), agreeing with ``detect_switch`` to
+           within the device timer resolution (tests/test_trace_online.py
+           cross-validates every pair).
+
+The estimator never holds the sample arrays — per-core state is a handful
+of scalars, so it runs happily inside a serving loop or over a trace
+replayed event by event.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import stats
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineEstimate:
+    """One emitted latency estimate (provisional while the kernel still
+    runs; final after :meth:`OnlineSwitchEstimator.finalize`)."""
+    latency: float              # t_e - t_s (s)
+    t_s: float                  # change request, accelerator timeline
+    core: int
+    transition_index: int       # iteration index of the candidate
+    n_confirm: int              # suffix samples backing the estimate
+    final: bool
+
+
+@dataclasses.dataclass
+class _CoreState:
+    index: int = 0                      # iterations observed so far
+    candidate_index: int = -1           # -1: still searching
+    candidate_end: float = 0.0          # t_e of the candidate iteration
+    suffix: stats.RunningStats = dataclasses.field(
+        default_factory=stats.RunningStats)
+    announced: bool = False             # provisional estimate emitted
+
+
+class OnlineSwitchEstimator:
+    """Streaming Alg. 2 for ONE switch pass.
+
+    Feed iterations in completion order via :meth:`observe`; call
+    :meth:`finalize` when the kernel ends.  ``target`` is the target
+    frequency's calibration baseline (:class:`repro.core.stats.FreqStats`);
+    the detection/confirm thresholds default to the batch path's.
+    """
+
+    def __init__(self, target: stats.FreqStats, t_s: float, *,
+                 k_sigma: float = 2.0, z: float = 1.96,
+                 tol_frac: float = 0.02, min_confirm: int = 64):
+        self.target = target
+        self.t_s = float(t_s)
+        self.z = float(z)
+        self.min_confirm = int(min_confirm)
+        self._lo, self._hi = stats.two_sigma_band(target, k_sigma)
+        self._tol = tol_frac * target.mean
+        self._cores: dict[int, _CoreState] = {}
+
+    def _confirmed(self, st: _CoreState) -> bool:
+        if st.candidate_index < 0 or st.suffix.n < self.min_confirm:
+            return False
+        suffix = stats.FreqStats(self.target.freq_mhz, st.suffix.mean,
+                                 st.suffix.std, st.suffix.n)
+        return stats.null_hypothesis_holds(suffix, self.target, z=self.z,
+                                           tol=self._tol)
+
+    def observe(self, core: int, start: float, end: float
+                ) -> OnlineEstimate | None:
+        """One finished iteration of ``core``; returns a provisional
+        estimate the first time that core's candidate confirms, else None."""
+        st = self._cores.setdefault(int(core), _CoreState())
+        dur = end - start
+        if st.candidate_index < 0:
+            # first-hit rule: the FIRST in-band iteration at/after t_s is
+            # the core's only candidate (Alg.2 line 12)
+            if start >= self.t_s and self._lo <= dur <= self._hi:
+                st.candidate_index = st.index
+                st.candidate_end = end
+                st.suffix.add(dur)
+        else:
+            st.suffix.add(dur)
+        st.index += 1
+        if not st.announced and self._confirmed(st):
+            st.announced = True
+            return OnlineEstimate(st.candidate_end - self.t_s, self.t_s,
+                                  int(core), st.candidate_index,
+                                  st.suffix.n, final=False)
+        return None
+
+    def finalize(self) -> OnlineEstimate | None:
+        """End of kernel: apply the full-suffix confirm rule per core and
+        return the pass estimate (max latency over viable cores), or None
+        when no core is viable — the batch path's GOTO."""
+        best: OnlineEstimate | None = None
+        for core, st in self._cores.items():
+            if not self._confirmed(st):
+                continue
+            lat = st.candidate_end - self.t_s
+            if best is None or lat > best.latency:
+                best = OnlineEstimate(lat, self.t_s, core, st.candidate_index,
+                                      st.suffix.n, final=True)
+        return best
+
+
+def stream_pass(data: np.ndarray, t_s: float, target: stats.FreqStats, *,
+                recorder=None, **kw
+                ) -> tuple[OnlineEstimate | None, list[OnlineEstimate]]:
+    """Stream one pass's (n_cores, n_iters, 2) timestamps through the
+    estimator in global completion order (the order a runtime would see
+    them).  Returns ``(final_estimate, provisional_estimates)``; when a
+    :class:`repro.trace.recorder.TraceRecorder` is given, every emission
+    is appended to the trace as an ESTIMATE annotation."""
+    starts = data[..., 0]
+    ends = data[..., 1]
+    n_cores, n_iters = starts.shape
+    est = OnlineSwitchEstimator(target, t_s, **kw)
+    provisional: list[OnlineEstimate] = []
+    order = np.argsort(ends, axis=None, kind="stable")
+    for flat in order:
+        core, i = divmod(int(flat), n_iters)
+        e = est.observe(core, float(starts[core, i]), float(ends[core, i]))
+        if e is not None:
+            provisional.append(e)
+            if recorder is not None:
+                recorder.record_estimate(float(ends[core, i]), e.latency,
+                                         e.t_s, e.core, final=False)
+    final = est.finalize()
+    if final is not None and recorder is not None:
+        recorder.record_estimate(float(ends.max()), final.latency,
+                                 final.t_s, final.core, final=True)
+    return final, provisional

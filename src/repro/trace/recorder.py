@@ -1,0 +1,563 @@
+"""Streaming telemetry recording: :class:`TraceRecorder` accumulates
+events, :class:`TracedBackend` wraps ANY :class:`AcceleratorBackend` and
+transparently records every interaction, :class:`Trace` is the loaded
+(or finished) columnar record.
+
+Recording is append-to-python-lists plus one extra ``host_now()`` read per
+event — bounded overhead by construction (``benchmarks/trace_overhead.py``
+holds it under 5% of an untraced simulated sweep).  Nothing is written
+until :meth:`TraceRecorder.save`, which emits the columnar npz + JSONL
+header described in :mod:`repro.trace.schema`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.trace import schema
+
+_NAN4 = (math.nan, math.nan, math.nan, math.nan)
+
+
+class Trace:
+    """One finished telemetry record: columnar event arrays + metadata.
+
+    ``kinds``/``t_host``/``cols`` have one row per event (``cols`` is
+    ``(n_events, 4)``); ``payload`` is the concatenated ``(rows, 2)``
+    device-timestamp store that WAIT/BATCH events reference by offset;
+    ``extras`` maps event index -> string-valued annotation dict.
+    """
+
+    def __init__(self, meta: dict, kinds: np.ndarray, t_host: np.ndarray,
+                 cols: np.ndarray, payload: np.ndarray,
+                 extras: dict[int, dict]):
+        self.meta = meta
+        self.kinds = np.asarray(kinds, dtype=np.int16)
+        self.t_host = np.asarray(t_host, dtype=np.float64)
+        self.cols = np.asarray(cols, dtype=np.float64).reshape(-1, 4)
+        self.payload = np.asarray(payload, dtype=np.float64).reshape(-1, 2)
+        self.extras = extras
+
+    @property
+    def n_events(self) -> int:
+        return int(self.kinds.size)
+
+    def kind_name(self, i: int) -> str:
+        return schema.KIND_NAMES.get(int(self.kinds[i]), f"?{self.kinds[i]}")
+
+    def wait_payload(self, i: int) -> np.ndarray:
+        """The (n_cores, n_iters, 2) timestamps of WAIT event ``i`` (a
+        view into the shared payload store)."""
+        if int(self.kinds[i]) != schema.WAIT:
+            raise ValueError(f"event {i} is {self.kind_name(i)}, not wait")
+        _, n_cores, n_iters, off = self.cols[i]
+        n_cores, n_iters, off = int(n_cores), int(n_iters), int(off)
+        return self.payload[off:off + n_cores * n_iters].reshape(
+            n_cores, n_iters, 2)
+
+    def batch_payload(self, i: int) -> np.ndarray:
+        """The (n_kernels, n_cores, n_iters, 2) timestamps of BATCH event
+        ``i`` (n_cores comes from the device metadata)."""
+        if int(self.kinds[i]) != schema.BATCH:
+            raise ValueError(f"event {i} is {self.kind_name(i)}, not batch")
+        n_kernels, n_iters, _, off = self.cols[i]
+        n_kernels, n_iters, off = int(n_kernels), int(n_iters), int(off)
+        n_cores = int(self.meta["device"]["n_cores"])
+        return self.payload[off:off + n_kernels * n_cores * n_iters].reshape(
+            n_kernels, n_cores, n_iters, 2)
+
+    # -------------------------------------------------------------- #
+    # persistence
+    # -------------------------------------------------------------- #
+    def save(self, path: str) -> str:
+        """Write the trace as a directory (``header.jsonl`` + ``events.npz``)
+        with atomic per-file replace; returns ``path``."""
+        os.makedirs(path, exist_ok=True)
+        header = os.path.join(path, schema.HEADER_FILE)
+        tmp = header + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(json.dumps({"schema_version": schema.SCHEMA_VERSION,
+                                "n_events": self.n_events,
+                                "meta": self.meta}) + "\n")
+            for i in sorted(self.extras):
+                f.write(json.dumps({"i": i, **self.extras[i]}) + "\n")
+        os.replace(tmp, header)
+        events = os.path.join(path, schema.EVENTS_FILE)
+        tmp = events + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, kind=self.kinds, t_host=self.t_host,
+                                cols=self.cols, payload=self.payload)
+        os.replace(tmp, events)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        header = os.path.join(path, schema.HEADER_FILE)
+        if not os.path.exists(header):
+            raise FileNotFoundError(
+                f"{path} is not a trace directory (no {schema.HEADER_FILE})")
+        with open(header) as f:
+            head = json.loads(f.readline())
+            schema.check_schema_version(head.get("schema_version", -1), path)
+            extras = {}
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                d = json.loads(line)
+                extras[int(d.pop("i"))] = d
+        with np.load(os.path.join(path, schema.EVENTS_FILE)) as z:
+            trace = cls(head.get("meta", {}), z["kind"], z["t_host"],
+                        z["cols"], z["payload"], extras)
+        if trace.n_events != int(head.get("n_events", trace.n_events)):
+            raise schema.TraceSchemaError(
+                f"{path}: header says {head['n_events']} events, npz holds "
+                f"{trace.n_events} — truncated or mismatched files")
+        return trace
+
+
+class _Arena:
+    """Chunked append-only store.  Chunks are ``np.empty`` (never touched
+    until the copy itself lands), so each retained byte costs exactly one
+    cold write and the source array can be freed immediately — holding
+    views of the device's output buffers instead would force the allocator
+    onto fresh pages for every subsequent kernel evaluation (measured 2x
+    slowdown of the whole simulator)."""
+
+    __slots__ = ("dtype", "chunk", "_chunks", "_pos")
+
+    def __init__(self, dtype, chunk_elems: int = 1 << 21):
+        self.dtype = np.dtype(dtype)
+        self.chunk = int(chunk_elems)
+        self._chunks: list[np.ndarray] = []
+        self._pos = 0
+
+    def reserve(self, n: int) -> np.ndarray:
+        """A writable 1-D view of ``n`` fresh elements."""
+        if not self._chunks or self._pos + n > self._chunks[-1].size:
+            self._chunks.append(np.empty(max(self.chunk, n), self.dtype))
+            self._pos = 0
+        view = self._chunks[-1][self._pos:self._pos + n]
+        self._pos += n
+        return view
+
+    def unreserve(self, n: int) -> None:
+        """Give back the most recent reservation (validation failed)."""
+        self._pos -= n
+
+    def prefault(self, n: int) -> None:
+        """Pre-touch capacity for ``n`` more elements so the recording hot
+        path writes into already-faulted pages (flight-recorder style: on
+        boxes without transparent huge pages, first-touch page faults are
+        the recorder's dominant cost)."""
+        free = self._chunks[-1].size - self._pos if self._chunks else 0
+        if n <= free:
+            return
+        chunk = np.empty(max(self.chunk, n - free), self.dtype)
+        chunk.fill(0)                   # dirty every page now, not mid-sweep
+        self._chunks.append(chunk)
+        self._pos = 0
+
+
+@dataclasses.dataclass
+class _PayloadDesc:
+    """One recorded timestamp array, in whichever in-memory encoding the
+    hot path chose; decodes back to the original float64 bits.
+
+    Modes (by field population):
+      raw   float64 copy — anything that fails the structure checks
+      b32   int32 boundary ticks relative to a scalar base (rel (c, i+1))
+      b16   uint16 per-iteration duration ticks (rel (c, i)) + per-core
+            int64 start ticks — the common case, 8x smaller than raw
+    """
+    rows: int                       # flat (rows, 2) rows when decoded
+    shape: tuple                    # original array shape
+    raw: np.ndarray | None = None   # float64 arena view ("raw" mode)
+    rel: np.ndarray | None = None   # tick array ("b32" / "b16")
+    base: int = 0                   # scalar base tick ("b32")
+    bases: np.ndarray | None = None  # per-core start ticks ("b16")
+    q: float = 0.0                  # timer resolution the ticks count
+
+    def decode_into(self, out: np.ndarray) -> None:
+        """Write the original (rows, 2) float64 data into ``out``."""
+        if self.raw is not None:
+            out[:] = self.raw.reshape(-1, 2)
+            return
+        if self.bases is not None:   # b16: boundary = start + running sum
+            acc = np.cumsum(self.rel, axis=1, dtype=np.int64)
+            acc += self.bases[:, None]
+            bounds = np.concatenate([self.bases[:, None], acc], axis=1) \
+                * self.q
+        else:                        # b32: boundaries relative to one base
+            bounds = (np.int64(self.base) + self.rel) * self.q
+        # float64(tick) * q reproduces the device's own quantization
+        # arithmetic bit for bit
+        view = out.reshape(self.shape)
+        view[..., 0] = bounds[:, :-1]
+        view[..., 1] = bounds[:, 1:]
+
+
+class TraceRecorder:
+    """Append-only event sink shared by one or more :class:`TracedBackend`
+    wrappers (and the annotation hooks: governor plans, online estimates).
+
+    Timestamp payloads are retained compactly: device timestamps are timer
+    ticks under the hood (``floor(t / q) * q``), and kernel iterations are
+    gapless (iteration i's end IS iteration i+1's start), so one wait's
+    (n_cores, n_iters, 2) float64 array collapses to (n_cores, n_iters+1)
+    int32 boundary ticks — 4x fewer retained bytes, decoded back to the
+    identical float64 bits at :meth:`finish`.  Arrays that don't fit the
+    pattern (non-quantized device, gapped iterations) fall back to a raw
+    float64 copy; either way the device's buffer is released immediately.
+    """
+
+    def __init__(self, meta: dict | None = None):
+        self.meta: dict = dict(meta or {})
+        self._kinds: list[int] = []
+        self._t_host: list[float] = []
+        self._cols: list[tuple] = []
+        self._extras: dict[int, dict] = {}
+        self._payloads: list[_PayloadDesc] = []
+        self._payload_rows = 0
+        self._f64 = _Arena(np.float64)
+        self._i32 = _Arena(np.int32)
+        self._u16 = _Arena(np.uint16)
+        self._tick_buf: np.ndarray | None = None   # reused encode scratch
+        self._dur_buf: np.ndarray | None = None    # reused duration scratch
+        self._pending_sync: list[tuple] = []       # current sync round
+
+    @property
+    def n_events(self) -> int:
+        return len(self._kinds) + bool(self._pending_sync)
+
+    def update_meta(self, **kw) -> None:
+        self.meta.update(kw)
+
+    def prefault(self, *, wait_samples: int = 0, raw_samples: int = 0,
+                 sync_exchanges: int = 0) -> None:
+        """Pre-touch arena capacity (flight-recorder style) so recording
+        never stalls on first-touch page faults mid-measurement:
+        ``wait_samples`` = expected total core x iteration samples across
+        all kernels, ``raw_samples`` = samples expected to fall back to the
+        raw float64 path, ``sync_exchanges`` = total clock-sync exchanges.
+        Purely optional — unreserved growth just faults lazily."""
+        if wait_samples:
+            self._u16.prefault(wait_samples)
+        if raw_samples or sync_exchanges:
+            self._f64.prefault(2 * raw_samples + 4 * sync_exchanges)
+
+    def record(self, kind: int, t_host: float, c: tuple = _NAN4,
+               extra: dict | None = None) -> int:
+        """Append one event; returns its index."""
+        if self._pending_sync:
+            self._flush_sync()
+        i = len(self._kinds)
+        self._kinds.append(kind)
+        self._t_host.append(t_host)
+        self._cols.append(c)
+        if extra:
+            self._extras[i] = extra
+        return i
+
+    # sync rounds -------------------------------------------------- #
+    def record_sync(self, exchange: tuple) -> None:
+        """Buffer one (t1, t2, t3, t4) exchange; consecutive exchanges
+        become ONE sync-round event, flushed when any other event arrives.
+        A sync round is 16+ back-to-back exchanges (best-of-n), so folding
+        it keeps the per-exchange recording cost at a list append."""
+        self._pending_sync.append(exchange)
+
+    def _flush_sync(self) -> None:
+        pend = self._pending_sync
+        self._pending_sync = []
+        arr = np.asarray(pend, dtype=np.float64)        # (n, 4)
+        raw = self._f64.reserve(arr.size)
+        np.copyto(raw.reshape(arr.shape), arr)
+        desc = _PayloadDesc(rows=arr.size // 2, shape=arr.shape, raw=raw)
+        off = self._payload_rows
+        self._payloads.append(desc)
+        self._payload_rows += desc.rows
+        self._kinds.append(schema.SYNC_BATCH)
+        self._t_host.append(float(pend[-1][3]))         # t4 of the last one
+        self._cols.append((float(len(pend)), math.nan, math.nan, float(off)))
+
+    def _encode_compact(self, data: np.ndarray) -> _PayloadDesc | None:
+        """Compact tick encoding, or None when ``data`` doesn't prove (on a
+        sampled row prefix, cheap) to be quantized and gapless.  The
+        sampling is backed end to end by the replay-determinism digest: a
+        device that quantizes row 0 but not row 5 would fail the
+        bit-for-bit table check immediately.
+
+        Preferred mode is b16 — per-iteration duration ticks in uint16
+        (durations are exact integer differences, so per-core running sums
+        rebuild every boundary exactly); kernels with >65535-tick
+        iterations fall back to b32 boundary ticks."""
+        q = self.meta.get("device", {}).get("timer_resolution_s") or 0.0
+        if q <= 0.0 or data.ndim != 3 or data.shape[-1] != 2 \
+                or data.shape[1] < 1:
+            return None
+        n_cores, n_iters = data.shape[:2]
+        k = min(64, n_iters - 1)
+        # sampled structure check: row 0 gapless (ends == next starts)
+        if (data[0, 1:1 + k, 0] != data[0, :k, 1]).any():
+            return None
+        inv_q = 1.0 / q
+        dbuf = self._dur_buf
+        if dbuf is None or dbuf.shape != (n_cores, n_iters):
+            dbuf = self._dur_buf = np.empty((n_cores, n_iters))
+        np.subtract(data[..., 1], data[..., 0], out=dbuf)
+        np.multiply(dbuf, inv_q, out=dbuf)        # duration ticks +- eps
+        if not -0.5 < float(dbuf.max()) < 65535.0:
+            return self._encode_b32(data, q, k)   # wide/degenerate kernel
+        bases = np.rint(data[:, 0, 0] * inv_q).astype(np.int64)
+        # +0.5 then truncate == rint for the non-negative tick counts
+        np.add(dbuf, 0.5, out=dbuf)
+        rel = self._u16.reserve(dbuf.size).reshape(dbuf.shape)
+        np.copyto(rel, dbuf, casting="unsafe")         # the one cold write
+        # telescoped validity: every core's last boundary rebuilt from the
+        # running duration sum must equal its recorded last end tick — one
+        # cheap pass that catches gapped rows, negative durations and
+        # non-quantized data anywhere in the array, not just in row 0
+        ends = (bases + rel.sum(axis=1, dtype=np.int64)) * q
+        # sampled exactness: row 0's decoded prefix must give the input
+        # bits (same float64(tick) * q arithmetic as decode_into)
+        t0 = np.int64(bases[0])
+        ends0 = (t0 + np.cumsum(rel[0, :k + 1], dtype=np.int64)) * q
+        if (ends != data[:, -1, 1]).any() or float(t0 * q) != data[0, 0, 0] \
+                or (ends0 != data[0, :k + 1, 1]).any():
+            self._u16.unreserve(dbuf.size)
+            return self._encode_b32(data, q, k)
+        return _PayloadDesc(rows=n_cores * n_iters, shape=data.shape,
+                            rel=rel, bases=bases, q=q)
+
+    def _encode_b32(self, data: np.ndarray, q: float,
+                    k: int) -> _PayloadDesc | None:
+        """Boundary ticks relative to one scalar base, in int32 — the wide
+        fallback when a single iteration exceeds 65535 ticks."""
+        n_cores, n_iters = data.shape[:2]
+        buf = self._tick_buf
+        if buf is None or buf.shape != (n_cores, n_iters + 1):
+            buf = self._tick_buf = np.empty((n_cores, n_iters + 1))
+        inv_q = 1.0 / q
+        np.multiply(data[..., 0], inv_q, out=buf[:, :-1])
+        np.multiply(data[:, -1, 1], inv_q, out=buf[:, -1])
+        # buf now holds tick values k +- eps.  base = the smallest tick
+        # (boundaries are monotone per core, so column 0 has the minimum);
+        # shifting by base - 0.5 makes every value (k - base) + 0.5 +- eps,
+        # strictly positive, so the int32 cast *truncates* to exactly
+        # k - base — the rint pass is folded into the cast.
+        m = float(buf[:, 0].min())
+        if m != m:                                 # NaN timestamps: raw copy
+            return None
+        base = int(m + 0.5)
+        np.subtract(buf, base - 0.5, out=buf)
+        if float(buf[:, -1].max()) >= 2 ** 31:     # only the last column
+            return None                            # can overflow (monotone)
+        rel = self._i32.reserve(buf.size).reshape(buf.shape)
+        np.copyto(rel, buf, casting="unsafe")      # the one cold write
+        # sampled exactness check: decoding row 0's prefix must reproduce
+        # the input bits (same float64(k) * q arithmetic as decode_into)
+        if (((np.int64(base) + rel[0, :k + 1]) * q)
+                != data[0, :k + 1, 0]).any():
+            self._i32.unreserve(buf.size)
+            return None
+        return _PayloadDesc(rows=n_cores * n_iters, shape=data.shape,
+                            rel=rel, base=base, q=q)
+
+    def record_payload(self, kind: int, t_host: float, data: np.ndarray,
+                       c_prefix: tuple) -> int:
+        """Append one event carrying a timestamp array: ``c_prefix`` fills
+        c0..c2, c3 becomes the payload row offset."""
+        if self._pending_sync:
+            self._flush_sync()     # before claiming this event's row offset
+        desc = self._encode_compact(data) if kind == schema.WAIT else None
+        if desc is None:
+            raw = self._f64.reserve(data.size)
+            np.copyto(raw.reshape(data.shape), data)
+            desc = _PayloadDesc(rows=data.size // 2, shape=data.shape,
+                                raw=raw)
+        off = self._payload_rows
+        self._payloads.append(desc)
+        self._payload_rows += desc.rows
+        return self.record(kind, t_host, (*c_prefix, float(off)))
+
+    # annotation hooks ---------------------------------------------- #
+    def record_plan(self, t_host: float, f_from: float, f_to: float,
+                    reason: str, region_kind: str, duration_s: float) -> int:
+        return self.record(schema.PLAN, t_host,
+                           (float(f_from), float(f_to), float(duration_s),
+                            math.nan),
+                           {"reason": reason, "region": region_kind})
+
+    def record_estimate(self, t_host: float, latency_s: float, t_s: float,
+                        core: int, final: bool) -> int:
+        return self.record(schema.ESTIMATE, t_host,
+                           (float(latency_s), float(t_s), float(core),
+                            1.0 if final else 0.0))
+
+    # -------------------------------------------------------------- #
+    def finish(self) -> Trace:
+        """Freeze the buffered events into an immutable :class:`Trace`
+        (payloads decode back to their original float64 bits here, off the
+        recording hot path)."""
+        if self._pending_sync:
+            self._flush_sync()
+        payload = np.empty((self._payload_rows, 2))
+        off = 0
+        for desc in self._payloads:
+            desc.decode_into(payload[off:off + desc.rows])
+            off += desc.rows
+        return Trace(dict(self.meta),
+                     np.asarray(self._kinds, dtype=np.int16),
+                     np.asarray(self._t_host, dtype=np.float64),
+                     np.asarray(self._cols, dtype=np.float64).reshape(-1, 4),
+                     payload, dict(self._extras))
+
+    def save(self, path: str) -> Trace:
+        trace = self.finish()
+        trace.save(path)
+        return trace
+
+
+@dataclasses.dataclass
+class _TracedHandle:
+    inner: Any
+    seq: int
+    n_iters: int
+
+
+def device_meta(device) -> dict:
+    """Best-effort device identity for the trace header."""
+    meta = {"class": type(device).__name__,
+            "frequencies": [float(f) for f in device.frequencies]}
+    cfg = getattr(device, "cfg", None)
+    if cfg is not None:
+        meta["n_cores"] = int(getattr(cfg, "n_cores", 0))
+        meta["timer_resolution_s"] = float(
+            getattr(cfg, "timer_resolution_s", 0.0))
+    model = getattr(device, "model", None)
+    if model is not None:
+        meta["model"] = getattr(model, "name", type(model).__name__)
+    return meta
+
+
+class TracedBackend:
+    """Transparent recording wrapper around any AcceleratorBackend.
+
+    Every protocol call is delegated to the wrapped device and appended to
+    the recorder; results (wait timestamps, sync tuples, throttle flags)
+    are recorded verbatim so a :class:`repro.trace.replay.TraceReplayBackend`
+    can re-serve them bit for bit.  Non-protocol attributes (``cfg``,
+    ``history``, ``dev_now``...) delegate untouched; ``run_kernel_batch``
+    is intercepted per-instance only when the wrapped device has it, so
+    ``hasattr`` probes (e.g. the calibration fast path) see the same
+    surface as the bare device.
+    """
+
+    def __init__(self, device, recorder: TraceRecorder):
+        self._device = device
+        self._recorder = recorder
+        self._seq = 0
+        recorder.meta.setdefault("device", device_meta(device))
+        if hasattr(device, "run_kernel_batch"):
+            recorder.meta["device"]["batch_capable"] = True
+            self.run_kernel_batch = self._run_kernel_batch
+
+    def __getattr__(self, name):
+        # only reached when normal lookup fails: pass-through for the
+        # wrapped device's extra surface (history, cfg, rng, ...)
+        return getattr(self._device, name)
+
+    @property
+    def device(self):
+        """The wrapped (inner) backend."""
+        return self._device
+
+    @property
+    def recorder(self) -> TraceRecorder:
+        return self._recorder
+
+    # protocol ------------------------------------------------------ #
+    @property
+    def frequencies(self):
+        return self._device.frequencies
+
+    def host_now(self) -> float:
+        v = self._device.host_now()
+        self._recorder.record(schema.HOST_NOW, v,
+                              (v, math.nan, math.nan, math.nan))
+        return v
+
+    def usleep(self, dt: float) -> None:
+        self._device.usleep(dt)
+        self._recorder.record(schema.USLEEP, self._device.host_now(),
+                              (float(dt), math.nan, math.nan, math.nan))
+
+    def set_frequency(self, mhz: float) -> None:
+        self._device.set_frequency(mhz)
+        self._recorder.record(schema.SET_FREQUENCY, self._device.host_now(),
+                              (float(mhz), math.nan, math.nan, math.nan))
+
+    def sync_exchange(self):
+        t = self._device.sync_exchange()
+        # buffered: the whole best-of-n round becomes one SYNC_BATCH event
+        self._recorder.record_sync(t)
+        return t
+
+    def throttle_reasons(self) -> set:
+        flags = self._device.throttle_reasons()
+        self._recorder.record(schema.THROTTLE, self._device.host_now(),
+                              extra={"flags": sorted(flags)})
+        return flags
+
+    def launch_kernel(self, n_iters: int, base_iter_s: float) -> _TracedHandle:
+        h = self._device.launch_kernel(n_iters, base_iter_s)
+        seq = self._seq
+        self._seq += 1
+        self._recorder.record(schema.LAUNCH, self._device.host_now(),
+                              (float(n_iters), float(base_iter_s),
+                               float(seq), math.nan))
+        return _TracedHandle(h, seq, int(n_iters))
+
+    def wait(self, h: _TracedHandle) -> np.ndarray:
+        data = self._device.wait(h.inner)
+        self._recorder.record_payload(
+            schema.WAIT, self._device.host_now(), data,
+            (float(h.seq), float(data.shape[0]), float(data.shape[1])))
+        return data
+
+    def run_kernel(self, n_iters: int, base_iter_s: float) -> np.ndarray:
+        return self.wait(self.launch_kernel(n_iters, base_iter_s))
+
+    def warm_kernel(self, n_iters: int, base_iter_s: float) -> None:
+        """Run-for-effect kernel (warm-up): the caller declares it will
+        never read the timestamps, so none are retained — the single
+        biggest recording saving on the measurement hot path."""
+        warm = getattr(self._device, "warm_kernel", None)
+        if warm is not None:
+            warm(n_iters, base_iter_s)
+        else:
+            self._device.run_kernel(n_iters, base_iter_s)
+        self._recorder.record(schema.WARM_KERNEL, self._device.host_now(),
+                              (float(n_iters), float(base_iter_s),
+                               math.nan, math.nan))
+
+    def _run_kernel_batch(self, n_kernels: int, n_iters: int,
+                          base_iter_s: float) -> np.ndarray:
+        data = self._device.run_kernel_batch(n_kernels, n_iters, base_iter_s)
+        self._recorder.record_payload(
+            schema.BATCH, self._device.host_now(), data,
+            (float(n_kernels), float(n_iters), float(base_iter_s)))
+        return data
+
+    # annotation ---------------------------------------------------- #
+    def record_plan(self, *, f_from: float, f_to: float, reason: str,
+                    region_kind: str, duration_s: float) -> None:
+        """Governor audit hook (called by :meth:`Governor.plan`)."""
+        self._recorder.record_plan(self._device.host_now(), f_from, f_to,
+                                   reason, region_kind, duration_s)

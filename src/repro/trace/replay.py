@@ -1,0 +1,174 @@
+"""`trace-replay` backend: re-execute a recorded timeline with no device.
+
+The replay backend is a strict log-structured double: each protocol call
+consumes the next recorded protocol event (annotations — governor plans,
+online estimates — are skipped) and returns the recorded result verbatim.
+Because the measurement pipeline is deterministic given the device's
+responses, driving a :class:`MeasurementSession` with the same config
+against the replay backend reproduces the live run bit for bit — phase-1
+calibration, phase-2/3 detection, DBSCAN labels, the whole latency table
+(``repro.trace.analyze.replay_table`` / ``tests/test_trace.py``).
+
+In strict mode (default) any divergence — wrong call kind, different
+frequency, different kernel shape — raises :class:`TraceReplayError`
+with the event position, instead of silently serving mismatched data.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+
+from repro.backends.registry import register_backend
+from repro.trace import schema
+from repro.trace.recorder import Trace
+
+
+class TraceReplayError(RuntimeError):
+    """The caller's call sequence diverged from the recorded timeline."""
+
+
+@dataclasses.dataclass
+class _ReplayHandle:
+    seq: int
+    n_iters: int
+    base_iter_s: float
+
+
+def _close(a: float, b: float) -> bool:
+    return a == b or math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-15)
+
+
+class TraceReplayBackend:
+    """AcceleratorBackend serving a recorded :class:`Trace`."""
+
+    def __init__(self, trace: Trace, strict: bool = True):
+        self.trace = trace
+        self.strict = strict
+        # cursor over protocol events only (annotations interleave freely)
+        self._protocol = np.flatnonzero(
+            np.isin(trace.kinds, list(schema.PROTOCOL_KINDS)))
+        self._pos = 0
+        self._sync_queue: collections.deque = collections.deque()
+        dev_meta = trace.meta.get("device", {})
+        self._frequencies = tuple(float(f)
+                                  for f in dev_meta.get("frequencies", ()))
+        if dev_meta.get("batch_capable"):
+            self.run_kernel_batch = self._run_kernel_batch
+
+    # -------------------------------------------------------------- #
+    @property
+    def frequencies(self) -> tuple[float, ...]:
+        return self._frequencies
+
+    @property
+    def remaining_events(self) -> int:
+        """Protocol events not yet consumed (0 after a complete replay)."""
+        return int(self._protocol.size - self._pos)
+
+    def _next(self, kind: int, call: str) -> int:
+        if self._pos >= self._protocol.size:
+            raise TraceReplayError(
+                f"replay exhausted: {call}() called after all "
+                f"{self._protocol.size} recorded protocol events were "
+                "consumed — the driving code ran longer than the recording")
+        i = int(self._protocol[self._pos])
+        got = int(self.trace.kinds[i])
+        if got != kind:
+            raise TraceReplayError(
+                f"replay diverged at event {i}: caller issued {call}() but "
+                f"the recording holds {self.trace.kind_name(i)!r} — drive "
+                "the replay with the same configuration that recorded it")
+        self._pos += 1
+        return i
+
+    def _check(self, i: int, what: str, want: float, got: float) -> None:
+        if self.strict and not _close(want, got):
+            raise TraceReplayError(
+                f"replay diverged at event {i} ({self.trace.kind_name(i)}): "
+                f"{what} was {got!r} when recorded, caller passed {want!r}")
+
+    # protocol ------------------------------------------------------ #
+    def host_now(self) -> float:
+        i = self._next(schema.HOST_NOW, "host_now")
+        return float(self.trace.cols[i, 0])
+
+    def usleep(self, dt: float) -> None:
+        i = self._next(schema.USLEEP, "usleep")
+        self._check(i, "dt", float(dt), float(self.trace.cols[i, 0]))
+
+    def set_frequency(self, mhz: float) -> None:
+        i = self._next(schema.SET_FREQUENCY, "set_frequency")
+        self._check(i, "mhz", float(mhz), float(self.trace.cols[i, 0]))
+
+    def sync_exchange(self) -> tuple[float, float, float, float]:
+        if self._sync_queue:
+            return self._sync_queue.popleft()
+        # a recorded sync ROUND (SYNC_BATCH) serves the whole best-of-n
+        # loop; bare SYNC_EXCHANGE events are accepted one-for-one
+        if self._pos < self._protocol.size and \
+                int(self.trace.kinds[int(self._protocol[self._pos])]) \
+                == schema.SYNC_EXCHANGE:
+            i = self._next(schema.SYNC_EXCHANGE, "sync_exchange")
+            t1, t2, t3, t4 = self.trace.cols[i]
+            return float(t1), float(t2), float(t3), float(t4)
+        i = self._next(schema.SYNC_BATCH, "sync_exchange")
+        n, _, _, off = self.trace.cols[i]
+        rows = self.trace.payload[int(off):int(off) + 2 * int(n)]
+        self._sync_queue.extend(
+            tuple(float(v) for v in rows[2 * j:2 * j + 2].ravel())
+            for j in range(int(n)))
+        return self._sync_queue.popleft()
+
+    def warm_kernel(self, n_iters: int, base_iter_s: float) -> None:
+        i = self._next(schema.WARM_KERNEL, "warm_kernel")
+        self._check(i, "n_iters", float(n_iters),
+                    float(self.trace.cols[i, 0]))
+        self._check(i, "base_iter_s", float(base_iter_s),
+                    float(self.trace.cols[i, 1]))
+
+    def throttle_reasons(self) -> set:
+        i = self._next(schema.THROTTLE, "throttle_reasons")
+        return set(self.trace.extras.get(i, {}).get("flags", ()))
+
+    def launch_kernel(self, n_iters: int, base_iter_s: float) -> _ReplayHandle:
+        i = self._next(schema.LAUNCH, "launch_kernel")
+        rec_iters, rec_base, seq, _ = self.trace.cols[i]
+        self._check(i, "n_iters", float(n_iters), float(rec_iters))
+        self._check(i, "base_iter_s", float(base_iter_s), float(rec_base))
+        return _ReplayHandle(int(seq), int(n_iters), float(base_iter_s))
+
+    def wait(self, h: Any) -> np.ndarray:
+        i = self._next(schema.WAIT, "wait")
+        seq = float(self.trace.cols[i, 0])
+        if isinstance(h, _ReplayHandle):
+            self._check(i, "kernel seq", float(h.seq), seq)
+        return self.trace.wait_payload(i).copy()
+
+    def run_kernel(self, n_iters: int, base_iter_s: float) -> np.ndarray:
+        return self.wait(self.launch_kernel(n_iters, base_iter_s))
+
+    def _run_kernel_batch(self, n_kernels: int, n_iters: int,
+                          base_iter_s: float) -> np.ndarray:
+        i = self._next(schema.BATCH, "run_kernel_batch")
+        rec_k, rec_iters, rec_base, _ = self.trace.cols[i]
+        self._check(i, "n_kernels", float(n_kernels), float(rec_k))
+        self._check(i, "n_iters", float(n_iters), float(rec_iters))
+        self._check(i, "base_iter_s", float(base_iter_s), float(rec_base))
+        return self.trace.batch_payload(i).copy()
+
+
+@register_backend(
+    "trace-replay",
+    description="re-execute a recorded telemetry trace offline, bit for bit")
+def make_trace_replay(path: str | None = None, trace: Trace | None = None,
+                      strict: bool = True) -> TraceReplayBackend:
+    if trace is None:
+        if path is None:
+            raise ValueError("trace-replay needs path= (a saved trace "
+                             "directory) or trace= (a loaded Trace)")
+        trace = Trace.load(path)
+    return TraceReplayBackend(trace, strict=strict)

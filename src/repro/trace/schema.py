@@ -1,0 +1,85 @@
+"""Trace schema: event kinds, columnar layout, and the version policy.
+
+A trace is a compact columnar record of every backend interaction:
+
+* ``events.npz`` — numeric columns, one row per event in wall order:
+  ``kind`` (int16 code), ``t_host`` (float64, host clock after the call)
+  and four generic float64 payload slots ``c0..c3`` (NaN when unused),
+  plus one concatenated ``payload`` array holding every kernel's
+  ``(start, end)`` device timestamps back to back (events reference it by
+  row offset, so the big arrays are stored exactly once, contiguously);
+* ``header.jsonl`` — line 1 is the header (``schema_version``, free-form
+  ``meta`` with device metadata / sweep config / live-table digest);
+  every following line annotates one event with the string-valued payload
+  the numeric columns cannot carry (throttle flags, governor reasons).
+
+Version policy: ``SCHEMA_VERSION`` is a single integer bumped on ANY
+incompatible change to the column layout or event semantics.  Readers
+refuse traces written under a different version instead of guessing —
+a replayed measurement that silently mis-decodes would defeat the whole
+point of bit-for-bit replay.
+"""
+from __future__ import annotations
+
+SCHEMA_VERSION = 1
+
+HEADER_FILE = "header.jsonl"
+EVENTS_FILE = "events.npz"
+
+# ---------------------------------------------------------------------- #
+# event kinds.  Codes are part of the on-disk format: append only, never
+# renumber (renumbering is a SCHEMA_VERSION bump).
+# ---------------------------------------------------------------------- #
+SET_FREQUENCY = 1      # c0 = mhz
+LAUNCH = 2             # c0 = n_iters, c1 = base_iter_s, c2 = seq
+WAIT = 3               # c0 = seq, c1 = n_cores, c2 = n_iters, c3 = payload row offset
+SYNC_EXCHANGE = 4      # c0..c3 = t1, t2, t3, t4
+HOST_NOW = 5           # c0 = returned host time
+USLEEP = 6             # c0 = dt
+THROTTLE = 7           # extra: {"flags": [...]}
+BATCH = 8              # c0 = n_kernels, c1 = n_iters, c2 = base_iter_s,
+                       # c3 = payload row offset
+PLAN = 9               # c0 = f_from, c1 = f_to, c2 = region duration_s;
+                       # extra: {"reason": ..., "region": ...}
+ESTIMATE = 10          # c0 = latency_s, c1 = t_s, c2 = core, c3 = final(0/1)
+WARM_KERNEL = 11       # c0 = n_iters, c1 = base_iter_s — run-for-effect
+                       # kernel whose timestamps nobody reads; no payload
+SYNC_BATCH = 12        # c0 = n_exchanges, c3 = payload row offset; one
+                       # event per sync ROUND (consecutive exchanges),
+                       # payload holds the (t1..t4) tuples back to back
+
+KIND_NAMES = {
+    SET_FREQUENCY: "set_frequency",
+    LAUNCH: "launch",
+    WAIT: "wait",
+    SYNC_EXCHANGE: "sync_exchange",
+    HOST_NOW: "host_now",
+    USLEEP: "usleep",
+    THROTTLE: "throttle",
+    BATCH: "batch",
+    PLAN: "plan",
+    ESTIMATE: "estimate",
+    WARM_KERNEL: "warm_kernel",
+    SYNC_BATCH: "sync_batch",
+}
+KIND_CODES = {v: k for k, v in KIND_NAMES.items()}
+
+# kinds that are part of the AcceleratorBackend protocol (replay must see
+# them in call order); PLAN / ESTIMATE are annotations layered on top and
+# are skipped by the replay cursor.
+PROTOCOL_KINDS = frozenset({SET_FREQUENCY, LAUNCH, WAIT, SYNC_EXCHANGE,
+                            HOST_NOW, USLEEP, THROTTLE, BATCH, WARM_KERNEL,
+                            SYNC_BATCH})
+ANNOTATION_KINDS = frozenset({PLAN, ESTIMATE})
+
+
+class TraceSchemaError(ValueError):
+    """Raised when a trace file cannot be decoded under this schema."""
+
+
+def check_schema_version(version: int, path: str = "<trace>") -> None:
+    if int(version) != SCHEMA_VERSION:
+        raise TraceSchemaError(
+            f"{path}: trace schema version {version} != supported "
+            f"{SCHEMA_VERSION}; re-record the trace (or run a matching "
+            "repro version) — the format is refused, never guessed")

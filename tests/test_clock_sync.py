@@ -1,8 +1,19 @@
-"""IEEE-1588 sync: recovered offset within the link-jitter bound."""
+"""IEEE-1588 sync: recovered offset within the link-jitter bound,
+best-of-n really picks the min-RTT exchange, and degenerate inputs fail
+loudly instead of crashing."""
 import pytest
 
-from repro.core.clock_sync import synchronize_timers
+from repro.core.clock_sync import sync_from_exchanges, synchronize_timers
 from repro.dvfs import make_device
+
+
+def _exchange(offset: float, d_fwd: float, d_back: float, t1: float = 0.0):
+    """Build one (t1, t2, t3, t4) tuple with a known true offset and
+    asymmetric forward/backward link delays."""
+    t2 = t1 + d_fwd + offset
+    t3 = t2 + 2e-6
+    t4 = (t3 - offset) + d_back
+    return (t1, t2, t3, t4)
 
 
 @pytest.mark.parametrize("kind", ["a100", "gh200", "rtx6000"])
@@ -21,3 +32,87 @@ def test_sync_improves_with_exchanges():
     s16 = synchronize_timers(dev, n_exchanges=32)
     true_offset = dev.cfg.clock_offset_s
     assert abs(s16.offset - true_offset) <= abs(s1.offset - true_offset) + 1e-6
+
+
+def test_zero_exchanges_raises():
+    dev = make_device("a100", seed=0, n_cores=2)
+    with pytest.raises(ValueError, match="n_exchanges"):
+        synchronize_timers(dev, n_exchanges=0)
+    with pytest.raises(ValueError, match="at least one exchange"):
+        sync_from_exchanges([])
+
+
+def test_best_of_n_picks_min_rtt_exchange():
+    """One clean exchange among jittery asymmetric ones: the estimate must
+    be the clean exchange's offset, and every per-exchange value must be
+    exposed for trace recording."""
+    true = 1.234
+    exchanges = [
+        _exchange(true, 50e-6 + 40e-6, 50e-6 + 10e-6),   # asymmetric, slow
+        _exchange(true, 50e-6, 50e-6),                   # clean: min RTT
+        _exchange(true, 50e-6 + 5e-6, 50e-6 + 80e-6),    # jittery
+        _exchange(true, 50e-6 + 25e-6, 50e-6 + 25e-6),   # symmetric, slow
+    ]
+    sync = sync_from_exchanges(exchanges)
+    assert sync.n_exchanges == 4
+    assert len(sync.offsets) == 4 and len(sync.rtts) == 4
+    assert sync.rtt == min(sync.rtts)
+    assert sync.offset == sync.offsets[1]        # the clean exchange
+    assert sync.offset == pytest.approx(true, abs=1e-12)
+    # asymmetric exchanges bias the per-exchange offset by the asymmetry/2
+    assert abs(sync.offsets[0] - true) == pytest.approx(15e-6, abs=1e-9)
+
+
+def test_device_sync_exposes_per_exchange_offsets():
+    dev = make_device("gh200", seed=5, n_cores=2)
+    sync = synchronize_timers(dev, n_exchanges=8)
+    assert len(sync.offsets) == 8
+    assert sync.rtt == min(sync.rtts)
+    assert sync.offset == sync.offsets[sync.rtts.index(sync.rtt)]
+
+
+def test_offset_error_bounded_by_asymmetric_jitter():
+    """Jittery asymmetric links: the best-of-n error stays inside the
+    worst single-exchange asymmetry bound (rtt/2 of the chosen one)."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    true = -0.5
+    base = 40e-6
+    exchanges = [
+        _exchange(true, base + rng.uniform(0, 30e-6),
+                  base + rng.uniform(0, 30e-6))
+        for _ in range(24)
+    ]
+    sync = sync_from_exchanges(exchanges)
+    assert abs(sync.offset - true) <= (sync.rtt - 2e-6) / 2 + 1e-12
+
+
+# ------------------------------------------------------------------ #
+# properties (run when hypothesis is installed)
+# ------------------------------------------------------------------ #
+def test_rtt_monotone_offset_consistent_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    delays = st.floats(1e-6, 1e-3, allow_nan=False)
+
+    @given(st.lists(st.tuples(delays, delays), min_size=1, max_size=32),
+           st.floats(-10.0, 10.0, allow_nan=False))
+    @settings(max_examples=80, deadline=None)
+    def prop(delay_pairs, true_offset):
+        exchanges = [_exchange(true_offset, f, b) for f, b in delay_pairs]
+        # monotonicity: adding exchanges never worsens the best RTT
+        prev = None
+        for k in range(1, len(exchanges) + 1):
+            s = sync_from_exchanges(exchanges[:k])
+            if prev is not None:
+                assert s.rtt <= prev + 1e-15
+            prev = s.rtt
+        # consistency: the chosen offset is the min-RTT exchange's offset,
+        # and its error is bounded by that exchange's asymmetry (rtt/2)
+        full = sync_from_exchanges(exchanges)
+        k = full.rtts.index(min(full.rtts))
+        assert full.offset == full.offsets[k]
+        assert abs(full.offset - true_offset) <= full.rtt / 2 + 1e-9
+
+    prop()

@@ -1,0 +1,318 @@
+"""Trace subsystem: bit-for-bit record/replay, columnar persistence,
+transparent backend wrapping, campaign artifacts and the CLI."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.backends import create_backend, list_backends
+from repro.core.calibration import calibrate
+from repro.core.evaluation import MeasureConfig
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
+from repro.core.switching import measure_switch_once
+from repro.core.workload import WorkloadSpec
+from repro.dvfs import make_device
+from repro.trace import (Trace, TracedBackend, TraceRecorder,
+                         TraceReplayBackend, TraceReplayError,
+                         TraceSchemaError)
+from repro.trace import schema
+from repro.trace.analyze import (analyze_trace, replay_table, replay_session,
+                                 table_digest)
+
+FREQS = [210.0, 705.0, 1410.0]
+
+
+def _fast_cfg() -> SessionConfig:
+    return SessionConfig(latest=LatestConfig(measure=MeasureConfig(
+        min_measurements=3, max_measurements=5, rse_check_every=3)))
+
+
+@pytest.fixture(scope="module")
+def recorded():
+    """One traced sweep shared by the replay/persistence tests."""
+    rec = TraceRecorder()
+    session = MeasurementSession(
+        cfg=_fast_cfg(), backend="vmapped-sim",
+        backend_options={"kind": "a100", "n_cores": 4, "seed": 0},
+        frequencies=FREQS, trace=rec)
+    table = session.run()
+    return rec.finish(), table
+
+
+# ------------------------------------------------------------------ #
+# replay determinism (the acceptance-criteria gate)
+# ------------------------------------------------------------------ #
+def test_replay_reproduces_live_table_bit_for_bit(recorded):
+    trace, live = recorded
+    replayed = replay_table(trace)
+    assert set(replayed.pairs) == set(live.pairs)
+    for key, lp in live.pairs.items():
+        rp = replayed.pairs[key]
+        np.testing.assert_array_equal(rp.latencies, lp.latencies)
+        np.testing.assert_array_equal(rp.labels, lp.labels)  # DBSCAN labels
+        np.testing.assert_array_equal(rp.clean, lp.clean)
+        assert rp.status == lp.status
+        assert rp.n_clusters == lp.n_clusters
+    assert table_digest(replayed) == table_digest(live)
+    assert trace.meta["live_table_digest"] == table_digest(live)
+
+
+def test_replay_consumes_every_protocol_event(recorded):
+    trace, _ = recorded
+    session = replay_session(trace)
+    session.run()
+    assert session.device.remaining_events == 0
+
+
+def test_analyze_trace_report(recorded):
+    trace, live = recorded
+    report = analyze_trace(trace)
+    assert report.deterministic
+    assert report.passes, "no switch passes reconstructed"
+    assert report.online_agrees
+    assert report.max_delta <= report.timer_resolution_s
+    assert report.ok
+    # every measured pair shows up among the reconstructed passes
+    seen = {(p.f_init, p.f_target) for p in report.passes}
+    ok_pairs = {k for k, pr in live.pairs.items() if pr.status == "ok"}
+    assert ok_pairs <= seen
+
+
+# ------------------------------------------------------------------ #
+# persistence
+# ------------------------------------------------------------------ #
+def test_save_load_roundtrip(recorded, tmp_path):
+    trace, live = recorded
+    path = trace.save(str(tmp_path / "sweep.trace"))
+    loaded = Trace.load(path)
+    np.testing.assert_array_equal(loaded.kinds, trace.kinds)
+    np.testing.assert_array_equal(loaded.cols, trace.cols)
+    np.testing.assert_array_equal(loaded.payload, trace.payload)
+    assert loaded.extras == trace.extras
+    assert loaded.meta["live_table_digest"] == table_digest(live)
+    assert table_digest(replay_table(loaded)) == table_digest(live)
+
+
+def test_schema_version_guard(recorded, tmp_path):
+    trace, _ = recorded
+    path = trace.save(str(tmp_path / "bad.trace"))
+    header = os.path.join(path, schema.HEADER_FILE)
+    with open(header) as f:
+        lines = f.readlines()
+    head = json.loads(lines[0])
+    head["schema_version"] = schema.SCHEMA_VERSION + 1
+    lines[0] = json.dumps(head) + "\n"
+    with open(header, "w") as f:
+        f.writelines(lines)
+    with pytest.raises(TraceSchemaError, match="schema version"):
+        Trace.load(path)
+
+
+def test_registry_backend(recorded, tmp_path):
+    trace, _ = recorded
+    assert "trace-replay" in list_backends()
+    path = trace.save(str(tmp_path / "reg.trace"))
+    dev = create_backend("trace-replay", path=path)
+    assert isinstance(dev, TraceReplayBackend)
+    # the replay device advertises the recorded device's full table; the
+    # swept subset lives in meta["sweep"]
+    assert list(dev.frequencies) == trace.meta["device"]["frequencies"]
+    assert set(FREQS) <= set(dev.frequencies)
+    assert trace.meta["sweep"]["frequencies"] == FREQS
+    with pytest.raises(ValueError, match="path="):
+        create_backend("trace-replay")
+
+
+def test_replay_strict_divergence(recorded):
+    trace, _ = recorded
+    dev = TraceReplayBackend(trace)
+    # the recorded stream starts with calibration's set_frequency
+    with pytest.raises(TraceReplayError, match="diverged"):
+        dev.usleep(1.0)
+    dev2 = TraceReplayBackend(trace)
+    with pytest.raises(TraceReplayError, match="set_frequency"):
+        dev2.set_frequency(-123.0)
+
+
+# ------------------------------------------------------------------ #
+# TracedBackend wrapping
+# ------------------------------------------------------------------ #
+def test_traced_backend_is_transparent():
+    """Same seed, same calls -> the traced device produces bit-identical
+    measurements (recording must not perturb the RNG stream)."""
+    spec = WorkloadSpec(iters_per_kernel=700, flops_per_iter=40e-6,
+                        delay_iters=200, confirm_iters=250)
+    plain = create_backend("simulated", kind="a100", n_cores=4, seed=7)
+    traced = TracedBackend(
+        create_backend("simulated", kind="a100", n_cores=4, seed=7),
+        TraceRecorder())
+    cal_p = calibrate(plain, FREQS, spec)
+    cal_t = calibrate(traced, FREQS, spec)
+    for f in FREQS:
+        assert cal_p.baselines[f] == cal_t.baselines[f]
+    sp = measure_switch_once(plain, 210.0, 1410.0, cal_p, spec)
+    st = measure_switch_once(traced, 210.0, 1410.0, cal_t, spec)
+    assert (sp is None) == (st is None)
+    if sp is not None:
+        assert sp.latency == st.latency
+        assert sp.t_s == st.t_s
+        np.testing.assert_array_equal(sp.core_latencies, st.core_latencies)
+
+
+def test_traced_payload_roundtrip_is_bit_exact():
+    for kind in ("a100", "gh200", "rtx6000"):
+        dev = make_device(kind, seed=3, n_cores=5)
+        rec = TraceRecorder()
+        traced = TracedBackend(dev, rec)
+        traced.set_frequency(dev.frequencies[0])
+        data = traced.run_kernel(300, 40e-6)
+        trace = rec.finish()
+        wait_events = np.flatnonzero(trace.kinds == schema.WAIT)
+        np.testing.assert_array_equal(trace.wait_payload(int(wait_events[-1])),
+                                      data)
+
+
+def test_throttle_reasons_pass_through():
+    dev = make_device("a100", seed=0, n_cores=2,
+                      power_throttle_freqs=(705.0,))
+    rec = TraceRecorder()
+    traced = TracedBackend(dev, rec)
+    traced.set_frequency(705.0)
+    traced.run_kernel(16, 40e-6)
+    flags = traced.throttle_reasons()
+    assert flags == {"power"}
+    assert traced.throttle_reasons() == set()   # drained from the device
+    trace = rec.finish()
+    throttle_events = [i for i in range(trace.n_events)
+                       if int(trace.kinds[i]) == schema.THROTTLE]
+    assert trace.extras[throttle_events[0]]["flags"] == ["power"]
+    assert trace.extras.get(throttle_events[1], {}).get("flags", []) == []
+
+
+def test_warm_kernel_records_no_payload():
+    rec = TraceRecorder()
+    traced = TracedBackend(make_device("a100", seed=0, n_cores=2), rec)
+    rows_before = rec._payload_rows
+    traced.warm_kernel(64, 40e-6)
+    assert rec._payload_rows == rows_before
+    trace = rec.finish()
+    assert int(trace.kinds[-1]) == schema.WARM_KERNEL
+
+
+def test_resumed_session_trace_not_stamped_replayable(tmp_path):
+    """A resume loads pairs/calibration the recorder never saw: the trace
+    must not claim the bit-for-bit contract, and replay must refuse it
+    with a clear error instead of diverging mid-stream."""
+    def session(trace=None):
+        return MeasurementSession(
+            cfg=SessionConfig(latest=_fast_cfg().latest,
+                              out_dir=str(tmp_path / "state")),
+            backend="vmapped-sim",
+            backend_options={"kind": "a100", "n_cores": 3},
+            frequencies=[210.0, 1410.0], trace=trace)
+
+    session().run()                       # full sweep, persisted
+    rec = TraceRecorder()
+    session(trace=rec).run()              # resume: everything loads
+    trace = rec.finish()
+    assert trace.meta["trace_complete"] is False
+    assert "live_table_digest" not in trace.meta
+    with pytest.raises(ValueError, match="RESUMED"):
+        replay_session(trace)
+
+
+def test_sweepless_trace_replay_fails_with_clear_error():
+    """Traces not recorded through MeasurementSession (governor audits,
+    ad-hoc TracedBackend use) get the crafted message, not a KeyError."""
+    rec = TraceRecorder()
+    TracedBackend(make_device("a100", seed=0, n_cores=2), rec) \
+        .run_kernel(16, 40e-6)
+    with pytest.raises(ValueError, match="sweep"):
+        replay_session(rec.finish())
+
+
+def test_traced_session_requires_serial_executor():
+    session = MeasurementSession(
+        cfg=SessionConfig(executor="threads", max_workers=2),
+        backend="simulated",
+        backend_options={"kind": "a100", "n_cores": 2},
+        frequencies=FREQS, trace=TraceRecorder())
+    with pytest.raises(ValueError, match="serial"):
+        session._ensure_workers(2)
+
+
+# ------------------------------------------------------------------ #
+# governor audit + campaign artifacts
+# ------------------------------------------------------------------ #
+def test_governor_plan_audited_into_trace():
+    from repro.core.latency_table import LatencyTable, analyse_pair
+    from repro.dvfs.governor import Governor
+    from repro.dvfs.planner import Region
+    from repro.dvfs.power_model import PowerModel
+
+    dev = make_device("a100", seed=0, n_cores=2)
+    rec = TraceRecorder()
+    traced = TracedBackend(dev, rec)
+    table = LatencyTable()
+    rng = np.random.default_rng(0)
+    for fi, ft in [(210.0, 1410.0), (1410.0, 210.0)]:
+        table.add(analyse_pair(fi, ft, 5e-3 + 1e-4 * rng.random(12)))
+    gov = Governor(table, PowerModel(f_max_mhz=1410.0), [210.0, 1410.0])
+    gov.plan(Region("compute", 10.0), traced)
+    gov.plan(Region("memory", 10.0), traced)
+    trace = rec.finish()
+    plans = [i for i in range(trace.n_events)
+             if int(trace.kinds[i]) == schema.PLAN]
+    assert len(plans) == 2
+    assert trace.extras[plans[0]]["region"] == "compute"
+    assert "reason" in trace.extras[plans[0]]
+    # the audit precedes the issued command
+    kinds = [int(k) for k in trace.kinds]
+    assert schema.SET_FREQUENCY in kinds
+    assert plans[0] < kinds.index(schema.SET_FREQUENCY)
+
+
+def test_campaign_stores_and_lists_traces(tmp_path):
+    from repro.campaign import ArtifactStore, CampaignSpec, run_campaign
+
+    spec = CampaignSpec.from_dict({
+        "name": "trace-artifacts",
+        "devices": [{"key": "a100", "backend": "vmapped-sim",
+                     "options": {"kind": "a100", "n_cores": 3},
+                     "frequencies": [210.0, 1410.0]}],
+        "measures": [{"key": "fast", "min_measurements": 3,
+                      "max_measurements": 5, "rse_check_every": 3}]})
+    store = ArtifactStore(str(tmp_path))
+    result = run_campaign(spec, store, trace=True)
+    assert result.ok
+    campaign = result.campaign
+    unit = "a100@fast"
+    assert campaign.list_traces() == {unit: ["session"]}
+    trace = campaign.load_trace(unit)
+    assert trace.meta["unit_key"] == unit
+    assert trace.meta["campaign_id"] == campaign.campaign_id
+    # stored trace replays to the exact table the campaign persisted
+    assert table_digest(replay_table(trace)) \
+        == trace.meta["live_table_digest"]
+
+
+# ------------------------------------------------------------------ #
+# CLI
+# ------------------------------------------------------------------ #
+def test_cli_record_replay_analyze_export(tmp_path, capsys):
+    from repro.trace.cli import main
+
+    out = str(tmp_path / "cli.trace")
+    assert main(["record", "--out", out, "--frequencies", "210", "1410",
+                 "--n-cores", "3", "--min-measurements", "2",
+                 "--max-measurements", "3", "--quiet"]) == 0
+    assert main(["replay", out, "--quiet"]) == 0
+    capsys.readouterr()
+    assert main(["analyze", out]) == 0
+    assert "AGREE" in capsys.readouterr().out
+    report = str(tmp_path / "events.jsonl")
+    assert main(["export", out, "--out", report]) == 0
+    first = json.loads(open(report).readline())
+    assert first["kind"] in ("set_frequency", "sync_batch", "batch")
