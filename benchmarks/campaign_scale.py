@@ -1,0 +1,289 @@
+"""Campaign scaling benchmark: process-parallel fleet measurement.
+
+Runs the same multi-unit simulated fleet twice — ``--executor serial``
+(the paper's single-process shape) and ``--executor processes`` (the
+fault-tolerant work queue) — into separate stores, verifies the two
+artifact sets are **bit-identical** (the determinism contract), and
+records the speedup in ``BENCH_campaign.json``.
+
+CI's ``campaign-scale-smoke`` job runs ``--smoke --inject-crash``: a
+worker is hard-killed mid-unit (``os._exit`` after two persisted pairs)
+and the run must still complete through the requeue path, with the marker
+file proving the crash actually fired.
+
+  PYTHONPATH=src python -m benchmarks.campaign_scale [--smoke]
+      [--executor processes] [--max-workers N] [--inject-crash]
+      [--min-speedup X | auto]
+
+Speedup expectations: units are CPU-bound numpy, so the ceiling is
+``min(max_workers, cpu_count, n_units)`` minus process spawn overhead.
+``--min-speedup auto`` asserts >= 2x when the host can possibly deliver
+it (>= 2 effective workers at full-mode unit sizes) and scales the bar
+down honestly on smaller hosts instead of faking parallelism.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import time
+
+import numpy as np
+
+# fleet shape: one kind, many seeds (distinct modeled boards).  A scaling
+# benchmark needs units of comparable cost: with mixed kinds a single
+# expensive unit (rtx6000 sweeps cost ~5x a gh200) becomes the makespan
+# lower bound and no amount of workers can beat serial by much.  Kind
+# heterogeneity is exercised by the recovery tests instead.
+_KIND = "gh200"
+_FREQS = (345.0, 1155.0, 1980.0)
+
+
+def fleet_spec(n_units: int, *, n_cores: int, max_measurements: int,
+               retries: int = 3):
+    from repro.campaign import CampaignSpec, DeviceSpec, MeasureSpec
+    measure = MeasureSpec(key="fast", min_measurements=4,
+                          max_measurements=max_measurements,
+                          rse_check_every=4)
+    devices = tuple(
+        DeviceSpec.make(f"u{i:02d}-{_KIND}", "simulated",
+                        {"kind": _KIND, "n_cores": n_cores, "seed": i},
+                        frequencies=_FREQS)
+        for i in range(n_units))
+    return CampaignSpec("campaign-scale", devices=devices,
+                        measures=(measure,), retries=retries)
+
+
+def crash_unit_key(spec) -> str:
+    """The unit the smoke run hard-kills mid-sweep (first in the fleet)."""
+    return spec.units()[0].key
+
+
+def _assert_bit_identical(ref, cand) -> int:
+    """Every pair of every unit, compared through the store (what
+    consumers read).  Returns the number of pairs compared."""
+    n = 0
+    ref_tables = {k: ref.campaign.load_table(k) for k in ref.outcomes}
+    for key, rt in ref_tables.items():
+        ct = cand.campaign.load_table(key)
+        if set(rt.pairs) != set(ct.pairs):
+            raise AssertionError(f"{key}: pair sets differ")
+        for p, pr in rt.pairs.items():
+            cp = ct.pairs[p]
+            if not (np.array_equal(pr.latencies, cp.latencies)
+                    and np.array_equal(pr.outlier_mask, cp.outlier_mask)
+                    and pr.status == cp.status
+                    and pr.n_clusters == cp.n_clusters):
+                raise AssertionError(
+                    f"{key} pair {p}: tables are not bit-identical "
+                    "between serial and parallel schedules")
+            n += 1
+    return n
+
+
+def run_scale(*, n_units: int, n_cores: int, max_measurements: int,
+              executor: str, max_workers: int, inject_crash: bool,
+              store_root: str, verbose: bool = False):
+    """Serial reference vs parallel candidate; returns benchmark rows plus
+    the recovery stats (rows feed BENCH_campaign.json)."""
+    from repro.campaign import ArtifactStore, CampaignRunner
+    from repro.campaign.workqueue import FaultPlan, fault_marker_path
+
+    spec = fleet_spec(n_units, n_cores=n_cores,
+                      max_measurements=max_measurements)
+    roots = {name: os.path.join(store_root, name)
+             for name in ("serial", executor)}
+    for r in roots.values():            # fresh stores: measure, not resume
+        shutil.rmtree(r, ignore_errors=True)
+
+    t0 = time.perf_counter()
+    ref = CampaignRunner(spec, ArtifactStore(roots["serial"])).run(
+        verbose=verbose)
+    t_serial = time.perf_counter() - t0
+    if not ref.ok:
+        raise AssertionError(
+            f"serial reference failed: {[(o.key, o.error) for o in ref.failed()]}")
+
+    fault_plan = None
+    if inject_crash:
+        if executor != "processes":
+            raise SystemExit("--inject-crash requires --executor processes "
+                             "(crashes are recovered by the work queue)")
+        fault_plan = FaultPlan.make(
+            crash_after_pairs={crash_unit_key(spec): 2})
+    t0 = time.perf_counter()
+    cand = CampaignRunner(spec, ArtifactStore(roots[executor]),
+                          executor=executor, max_workers=max_workers,
+                          fault_plan=fault_plan).run(verbose=verbose)
+    t_parallel = time.perf_counter() - t0
+    if not cand.ok:
+        raise AssertionError(
+            f"{executor} campaign failed: "
+            f"{[(o.key, o.error) for o in cand.failed()]}")
+
+    if inject_crash:
+        marker = fault_marker_path(cand.campaign, crash_unit_key(spec),
+                                   "crash")
+        if not os.path.exists(marker):
+            raise AssertionError(
+                "injected crash never fired: the smoke run proved nothing "
+                f"(missing {marker})")
+        if cand.stats.get("crashed_workers", 0) < 1:
+            raise AssertionError(
+                f"crash fired but the scheduler recorded no dead worker: "
+                f"{cand.stats}")
+        if cand.stats.get("requeued_units", 0) < 1:
+            raise AssertionError(
+                f"crashed unit was not requeued: {cand.stats}")
+
+    n_pairs = _assert_bit_identical(ref, cand)
+    speedup = t_serial / t_parallel
+    eff = min(max_workers, os.cpu_count() or 1, n_units)
+    # contention inflation: how much slower each unit ran inside a
+    # concurrent worker than serially (manifest wall times).  >1 means the
+    # host's cores do not deliver independent throughput (shared memory
+    # bandwidth, oversubscribed vCPUs) — a hardware ceiling that caps any
+    # process-parallel speedup and is not the scheduler's overhead.
+    serial_sum = sum(st.get("wall_s", 0.0) for st in
+                     ref.campaign.unit_states().values())
+    par_sum = sum(st.get("wall_s", 0.0) for st in
+                  cand.campaign.unit_states().values())
+    inflation = max(1.0, par_sum / serial_sum) if serial_sum > 0 else 1.0
+    # the parallel run's own ideal makespan: its measured unit costs
+    # spread perfectly over the workers.  t_parallel/ideal isolates the
+    # scheduler's overhead (spawn, queueing, tail imbalance) from both
+    # host contention AND run-to-run throughput noise
+    ideal = par_sum / eff if eff else float("inf")
+    overhead = t_parallel / ideal if ideal > 0 else float("inf")
+    rows = [
+        ("campaign_serial", t_serial * 1e6,
+         f"units={n_units} pairs={n_pairs} wall_s={t_serial:.2f}"),
+        (f"campaign_{executor}", t_parallel * 1e6,
+         f"speedup={speedup:.2f} workers={max_workers} "
+         f"effective={eff} cpus={os.cpu_count()} "
+         f"contention_inflation={inflation:.2f} "
+         f"sched_overhead={overhead:.2f} "
+         f"wall_s={t_parallel:.2f} bit_identical_pairs={n_pairs}"
+         + (f" crash_recovered=1 requeued={cand.stats['requeued_units']}"
+            if inject_crash else "")),
+    ]
+    metrics = {"speedup": speedup, "eff": eff, "inflation": inflation,
+               "overhead": overhead, "ideal_s": ideal,
+               "t_serial": t_serial, "t_parallel": t_parallel}
+    return rows, cand.stats, metrics
+
+
+def check_scaling(metrics: dict, *, smoke: bool,
+                  spawn_allowance_s: float = 3.0) -> list[str]:
+    """Performance gates; returns failure messages (empty = pass).
+
+    Two gates, separating what the scheduler controls from what the host
+    does:
+
+    * **scheduler overhead** (full mode, always): the parallel wall time
+      must stay close to the run's own ideal makespan (its measured unit
+      costs spread perfectly over the workers) plus a spawn allowance.
+      Computed entirely from one run, so noisy-neighbor throughput swings
+      between the serial and parallel runs cannot flake it.
+    * **the 2x contract** (full mode, capable hosts): where the host
+      demonstrably delivers independent core throughput (>= 3 effective
+      workers and <= 1.25x contention inflation — CI runners qualify,
+      oversubscribed 2-vCPU containers do not), end-to-end speedup must
+      reach 2x over serial.
+
+    Smoke mode gates recovery and bit-identity elsewhere and asserts
+    nothing about speed: its units are so small that process spawn
+    dominates by design."""
+    if smoke:
+        return []
+    fails = []
+    eff, inflation = metrics["eff"], metrics["inflation"]
+    budget = 1.35 * metrics["ideal_s"] + spawn_allowance_s
+    if metrics["t_parallel"] > budget:
+        fails.append(
+            f"scheduler overhead: parallel wall {metrics['t_parallel']:.2f}s "
+            f"exceeds 1.35 x ideal makespan {metrics['ideal_s']:.2f}s "
+            f"+ {spawn_allowance_s:.0f}s spawn allowance")
+    if eff >= 3 and inflation <= 1.25 and metrics["speedup"] < 2.0:
+        fails.append(
+            f"2x contract: speedup {metrics['speedup']:.2f}x < 2x on a "
+            f"host with {eff} effective workers and only "
+            f"{inflation:.2f}x contention inflation")
+    return fails
+
+
+def bench_campaign():
+    """benchmarks.run entry point -> BENCH_campaign.json."""
+    from repro.core.paths import results_dir
+    rows, _, metrics = run_scale(
+        n_units=8, n_cores=8, max_measurements=8, executor="processes",
+        max_workers=min(4, os.cpu_count() or 1), inject_crash=False,
+        store_root=results_dir("campaign-scale"))
+    fails = check_scaling(metrics, smoke=False)
+    assert not fails, f"campaign scaling regressed: {fails}"
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fleet (4 small units)")
+    ap.add_argument("--executor", default="processes",
+                    choices=("threads", "processes"))
+    ap.add_argument("--max-workers", type=int,
+                    default=min(4, os.cpu_count() or 1))
+    ap.add_argument("--units", type=int, default=None,
+                    help="fleet size (default: 4 smoke / 8 full)")
+    ap.add_argument("--inject-crash", action="store_true",
+                    help="hard-kill a worker mid-unit; the run must "
+                         "complete via requeue (processes only)")
+    ap.add_argument("--min-speedup", default="auto",
+                    help="fail below this speedup; 'auto' scales the 2x "
+                         "bar to the host's effective parallelism")
+    ap.add_argument("--store-root", default=None,
+                    help="scratch store root (default: "
+                         "$REPRO_RESULTS_DIR/campaign-scale)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.core.paths import results_dir
+    n_units = args.units or (4 if args.smoke else 8)
+    shape = (dict(n_cores=6, max_measurements=6) if args.smoke
+             else dict(n_cores=8, max_measurements=8))
+    store_root = args.store_root or results_dir("campaign-scale")
+    rows, stats, metrics = run_scale(
+        n_units=n_units, executor=args.executor,
+        max_workers=args.max_workers, inject_crash=args.inject_crash,
+        store_root=store_root, verbose=args.verbose, **shape)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"recovery stats: {stats}", file=sys.stderr)
+
+    from benchmarks.run import _emit_json
+    _emit_json(results_dir("bench"), "campaign", rows, sum(
+        us for _, us, _ in rows) / 1e6)
+
+    if args.min_speedup == "auto":
+        fails = check_scaling(metrics, smoke=args.smoke)
+    elif metrics["speedup"] < float(args.min_speedup):
+        fails = [f"speedup {metrics['speedup']:.2f}x below the explicit "
+                 f"{float(args.min_speedup):.2f}x floor"]
+    else:
+        fails = []
+    if fails:
+        for f in fails:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"ok: {metrics['speedup']:.2f}x over serial "
+          f"({metrics['eff']} effective workers, "
+          f"{metrics['inflation']:.2f}x contention inflation, "
+          f"{metrics['overhead']:.2f}x scheduler overhead); "
+          "BENCH_campaign.json written")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,6 @@ from __future__ import annotations
 import glob
 import json
 
-import numpy as np
 
 from benchmarks.common import bench_campaign, unit_key, wall_us_for
 from repro.core.paths import results_dir

@@ -1,7 +1,6 @@
 """Roofline table from the dry-run sweep artifacts (deliverable g)."""
 from __future__ import annotations
 
-import glob
 import json
 import os
 

@@ -45,6 +45,7 @@ def main() -> None:
     from repro.core.paths import results_dir
 
     from benchmarks.analysis_speedup import bench_analysis
+    from benchmarks.campaign_scale import bench_campaign
     from benchmarks.governor_energy import bench_governor_energy
     from benchmarks.kernel_bench import (bench_flash_attention_kernel,
                                          bench_microbench_kernel,
@@ -64,6 +65,7 @@ def main() -> None:
     benches = [
         bench_wait_vectorized,       # simulator hot path (session refactor)
         bench_analysis,              # sorted-window analysis engine
+        bench_campaign,              # process-parallel fleet scaling
         bench_trace,                 # telemetry recorder overhead (<5% bar)
         bench_phase1_two_sigma,      # §V-A
         bench_dbscan_adaptive,       # Alg. 3

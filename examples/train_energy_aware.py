@@ -13,7 +13,6 @@ from repro.core.evaluation import MeasureConfig
 from repro.core.paths import results_dir
 from repro.core.session import (LatestConfig, MeasurementSession,
                                 SessionConfig)
-from repro.dvfs import PowerModel
 from repro.dvfs.governor import Governor, oblivious_governor_sim, static_sim
 from repro.dvfs.planner import Region
 from repro.parallel.sharding import make_env

@@ -29,6 +29,12 @@ class BackendEntry:
     factory: Callable[..., AcceleratorBackend]
     description: str = ""
     requires: tuple[str, ...] = ()
+    # virtual backends model a device entirely in software: any number of
+    # independent instances may be constructed (one per worker, or one per
+    # measured pair for deterministic parallel sweeps).  Hardware-bound or
+    # stream-bound backends (cuda-nvml, trace-replay) keep the default
+    # False and are measured on their single explicit instance.
+    virtual: bool = False
 
     def missing_requirements(self) -> list[str]:
         return [m for m in self.requires
@@ -43,11 +49,12 @@ _REGISTRY: dict[str, BackendEntry] = {}
 
 
 def register_backend(name: str, *, description: str = "",
-                     requires: tuple[str, ...] = ()):
+                     requires: tuple[str, ...] = (), virtual: bool = False):
     """Decorator registering ``factory`` under ``name`` (idempotent per
     name: re-registration overwrites, so module reloads are harmless)."""
     def deco(factory: Callable[..., AcceleratorBackend]):
-        _REGISTRY[name] = BackendEntry(name, factory, description, requires)
+        _REGISTRY[name] = BackendEntry(name, factory, description, requires,
+                                       virtual)
         return factory
     return deco
 

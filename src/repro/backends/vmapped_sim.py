@@ -42,7 +42,8 @@ class VmappedSimAccelerator(SimulatedAccelerator):
 @register_backend(
     "vmapped-sim",
     description="SimulatedAccelerator with mandatory vectorized evaluation "
-                "and batched multi-kernel passes")
+                "and batched multi-kernel passes",
+    virtual=True)
 def make_vmapped_sim(kind: str = "a100", *, seed: int = 0, unit_seed: int = 0,
                      n_cores: int | None = None, **overrides):
     overrides.setdefault("wait_impl", "vectorized")

@@ -29,24 +29,38 @@ def _store(args) -> ArtifactStore:
 def cmd_run(args) -> int:
     spec = CampaignSpec.load(args.spec)
     runner = CampaignRunner(spec, _store(args), executor=args.executor,
-                            max_workers=args.workers, trace=args.trace)
+                            max_workers=args.max_workers, trace=args.trace,
+                            heartbeat_timeout_s=args.heartbeat_timeout,
+                            speculate=not args.no_speculate)
     print(f"campaign {spec.campaign_id()} ({spec.name}): "
-          f"{len(spec.units())} unit(s)")
+          f"{len(spec.units())} unit(s) [{args.executor}"
+          + (f" x{args.max_workers}" if args.executor != "serial" else "")
+          + "]")
     result = runner.run(verbose=not args.quiet)
     for o in result.failed():
         print(f"  FAILED {o.key} after {o.attempts} attempt(s): {o.error}",
               file=sys.stderr)
+    if result.stats and any(result.stats.values()):
+        recovered = {k: v for k, v in result.stats.items() if v}
+        print(f"recovery: {recovered}")
     print(f"{'ok' if result.ok else 'INCOMPLETE'}: "
           f"artifacts in {result.campaign.dir}")
     return 0 if result.ok else 1
 
 
 def cmd_ls(args) -> int:
-    rows = _store(args).list_campaigns()
-    if not rows:
-        print(f"no campaigns under {_store(args).root}")
-        return 0
     store = _store(args)
+    if args.latest:
+        cid = store.latest_campaign_id()
+        if cid is None:
+            print(f"no campaigns under {store.root}", file=sys.stderr)
+            return 1
+        print(cid)
+        return 0
+    rows = store.list_campaigns()
+    if not rows:
+        print(f"no campaigns under {store.root}")
+        return 0
     for r in rows:
         traces = store.load(r["campaign_id"]).list_traces()
         n_traces = sum(len(v) for v in traces.values())
@@ -82,9 +96,26 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("run", help="run (or resume) a campaign spec")
     p.add_argument("spec", help="path to a CampaignSpec JSON file")
-    p.add_argument("--executor", choices=("serial", "threads"),
-                   default="serial")
-    p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--executor",
+                   choices=("serial", "threads", "processes"),
+                   default="serial",
+                   help="unit scheduler: serial (paper shape), threads "
+                        "(in-process pool), processes (fault-tolerant "
+                        "work queue: crash requeue, hang detection, "
+                        "straggler speculation)")
+    p.add_argument("--max-workers", "--workers", dest="max_workers",
+                   type=int, default=4,
+                   help="worker count for threads/processes "
+                        "(--workers kept as an alias)")
+    p.add_argument("--heartbeat-timeout", type=float, default=60.0,
+                   help="processes only: seconds of worker silence "
+                        "before it is declared hung and its unit "
+                        "requeued; workers beat once per measured pair, "
+                        "so this must exceed the longest silent phase "
+                        "(calibration + one pair)")
+    p.add_argument("--no-speculate", action="store_true",
+                   help="processes only: disable speculative re-dispatch "
+                        "of straggler units")
     p.add_argument("--trace", action="store_true",
                    help="record each unit's telemetry (repro.trace) and "
                         "store it as a campaign artifact")
@@ -92,6 +123,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("ls", help="list campaigns in the store")
+    p.add_argument("--latest", action="store_true",
+                   help="print only the newest campaign id (exit 1 on an "
+                        "empty store) — the script/CI-friendly form")
     p.set_defaults(fn=cmd_ls)
 
     p = sub.add_parser("report", help="cross-device markdown report")

@@ -7,14 +7,22 @@ The runner is the glue between three resume layers:
 * **unit level** — each unit's :class:`MeasurementSession` persists into
   the campaign's ``units/<key>/session`` directory, so a unit interrupted
   mid-sweep resumes at *pair* granularity;
-* **per-unit retry** — a unit that raises gets up to ``spec.retries``
-  TOTAL attempts before being marked ``failed`` (the failure may be
-  transient: a flaky board, a throttling burst); failed units never
-  poison the rest of the campaign.
+* **per-unit retry** — a unit that raises (or whose worker process dies)
+  gets up to ``spec.retries`` TOTAL attempts before being marked
+  ``failed`` (the failure may be transient: a flaky board, a throttling
+  burst); failed units never poison the rest of the campaign.
 
-Units are scheduled through :mod:`repro.core.executors` — the same
-serial/thread pool the session uses for pairs — because a campaign is an
-embarrassingly parallel bag of units, each owning its own device.
+Scheduling is selected by ``executor``:
+
+  serial | threads   in-process, through :mod:`repro.core.executors`;
+                     a campaign is an embarrassingly parallel bag of
+                     units, each owning its own device
+  processes          the fault-tolerant work queue
+                     (:mod:`repro.campaign.workqueue`): true CPU
+                     parallelism plus heartbeat-based crash/hang recovery
+                     and speculative straggler re-dispatch.  Unit tables
+                     stay bit-identical to the serial schedule because
+                     sessions measure every pair on a pair-seeded device.
 """
 from __future__ import annotations
 
@@ -37,13 +45,16 @@ class UnitOutcome:
     wall_s: float = 0.0
     error: str | None = None
     table: LatencyTable | None = None
-    session: object | None = None      # live session (fresh runs only)
+    session: object | None = None      # live session (in-process runs only)
 
 
 @dataclasses.dataclass
 class CampaignResult:
     campaign: Campaign
     outcomes: dict[str, UnitOutcome]
+    # recovery evidence from the process work queue (empty for in-process
+    # schedules): crashed/hung worker counts, requeues, speculation
+    stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -59,20 +70,25 @@ class CampaignResult:
 
 
 def _ground_truth(session) -> dict[tuple[float, float], float]:
-    """Max true transition latency per pair from the simulator's event log
+    """Max true transition latency per pair across the session's devices
     (empty when the backend keeps no history, e.g. real hardware)."""
+    if hasattr(session, "ground_truth"):
+        return session.ground_truth()
+    # fallback for session doubles: harvest device histories directly
+    from repro.core.pairtask import extract_ground_truth
     gt: dict[tuple[float, float], float] = {}
     for dev in getattr(session, "devices", []):
-        for h in getattr(dev, "history", []):
-            key = (float(h["from"]), float(h["to"]))
-            gt[key] = max(gt.get(key, 0.0), float(h["true_latency"]))
+        for k, v in extract_ground_truth(dev).items():
+            gt[k] = max(gt.get(k, 0.0), v)
     return gt
 
 
 class CampaignRunner:
     def __init__(self, spec: CampaignSpec, store: ArtifactStore | None = None,
                  *, executor: str = "serial", max_workers: int = 4,
-                 trace: bool = False):
+                 trace: bool = False, heartbeat_timeout_s: float = 60.0,
+                 straggler_ratio: float = 3.0, speculate: bool = True,
+                 fault_plan=None):
         self.spec = spec
         self.store = store if store is not None else ArtifactStore()
         self.executor = executor
@@ -82,6 +98,11 @@ class CampaignRunner:
         # resumed unit's already-persisted pairs are loaded, not re-measured,
         # so they do not reappear in the new trace
         self.trace = trace
+        # process work-queue knobs (ignored by in-process executors)
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.straggler_ratio = straggler_ratio
+        self.speculate = speculate
+        self.fault_plan = fault_plan
 
     def run(self, verbose: bool = False) -> CampaignResult:
         campaign = self.store.open(self.spec)
@@ -103,13 +124,27 @@ class CampaignRunner:
                   f"{len(outcomes)} unit(s) loaded from store, "
                   f"{len(todo)} to run")
 
-        def one(unit: UnitSpec, worker: int) -> UnitOutcome:
-            return self._run_unit(campaign, unit, verbose)
+        stats: dict = {}
+        if self.executor == "processes":
+            from repro.campaign.workqueue import ProcessCampaignScheduler
+            sched = ProcessCampaignScheduler(
+                self.spec, campaign, max_workers=self.max_workers,
+                heartbeat_timeout_s=self.heartbeat_timeout_s,
+                straggler_ratio=self.straggler_ratio,
+                speculate=self.speculate, fault_plan=self.fault_plan,
+                verbose=verbose)
+            sched.trace = self.trace
+            outcomes.update(sched.run(todo))
+            stats = sched.stats
+        else:
+            def one(unit: UnitSpec, worker: int) -> UnitOutcome:
+                return self._run_unit(campaign, unit, verbose)
 
-        pool = get_executor(self.executor, self.max_workers)
-        for outcome in pool.map_pairs(one, todo):
-            outcomes[outcome.key] = outcome
-        return CampaignResult(campaign, outcomes)
+            pool = get_executor(self.executor, self.max_workers)
+            for outcome in pool.map_pairs(one, todo):
+                outcomes[outcome.key] = outcome
+        ordered = {u.key: outcomes[u.key] for u in self.spec.units()}
+        return CampaignResult(campaign, ordered, stats)
 
     # -------------------------------------------------------------- #
     def _run_unit(self, campaign: Campaign, unit: UnitSpec,

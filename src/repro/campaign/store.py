@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.campaign.spec import CampaignSpec
 from repro.core.latency_table import LatencyTable, PairResult
-from repro.core.paths import campaigns_dir
+from repro.core.paths import atomic_replace, campaigns_dir
 
 _SPEC = "spec.json"
 _MANIFEST = "manifest.json"
@@ -45,10 +45,9 @@ UNIT_FAILED = "failed"
 
 
 def _atomic_write_json(path: str, doc: dict) -> None:
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(doc, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    with atomic_replace(path) as tmp:
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
 
 
 class Campaign:
@@ -290,3 +289,14 @@ class ArtifactStore:
                         "units_done": n_done, "units_total": len(states),
                         "created_at": c.manifest().get("created_at")})
         return out
+
+    def latest_campaign_id(self) -> str | None:
+        """Id of the most recently created campaign (manifest timestamp;
+        id as a deterministic tiebreak), or None for an empty store.
+        Powers ``campaign ls --latest`` so CI scripts get exactly one id
+        instead of scraping the human listing."""
+        rows = self.list_campaigns()
+        if not rows:
+            return None
+        return max(rows, key=lambda r: (r.get("created_at") or 0.0,
+                                        r["campaign_id"]))["campaign_id"]

@@ -1,0 +1,514 @@
+"""Resilient process-parallel campaign execution.
+
+``CampaignRunner(executor="processes")`` schedules its units through this
+module instead of a plain pool: a fleet campaign must survive the failure
+modes a pool hides — a worker process that dies mid-unit, one that hangs,
+and one that is merely slow.  The design is a driver/worker work queue:
+
+* the **driver** (parent process) owns the manifest, the unit queue and
+  all bookkeeping; it assigns one unit at a time to each worker over a
+  per-worker task queue and consumes a shared result queue;
+* **workers** are long-lived processes (spawn start method — they import
+  only the numpy measurement stack, never the JAX runtime) that build each
+  unit's :class:`MeasurementSession` locally and persist artifacts through
+  the shared store.  Devices never cross the process boundary: sessions
+  rebuild backends from the picklable unit spec
+  (:mod:`repro.core.pairtask`);
+* **liveness** is heartbeat-based (:class:`HeartbeatMonitor` from
+  :mod:`repro.runtime.fault_tolerance`, monotonic clock): every measured
+  pair beats.  A worker that exits (crash) or goes silent (hang) has its
+  in-flight unit *requeued* to the surviving workers, bounded by the
+  spec's per-unit attempt budget; exhausting the budget records a failed
+  :class:`~repro.campaign.scheduler.UnitOutcome` instead of raising, so
+  one cursed unit never poisons the campaign.  Replacement workers are
+  respawned while work remains.  Beats mark *progress*, not merely a
+  running process (a watchdog thread would keep beating through a
+  genuine hang), so ``heartbeat_timeout_s`` must exceed the longest
+  silent phase of a unit — calibration plus one pair measurement; the
+  60 s default is orders of magnitude above the simulators' worst case;
+* **stragglers** (:class:`StragglerPolicy` EWMA over completed unit wall
+  times) are speculatively re-dispatched to idle workers;
+  first-result-wins, the loser's identical artifacts are discarded.
+
+Correctness under all of this rests on the session layer's determinism:
+every pair is measured on a pair-seeded device, so a requeued or
+speculated unit resumes from the persisted pairs and lands on the exact
+bytes the serial path would have produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue as queue_mod
+import time
+from collections import deque
+
+from repro.campaign.spec import CampaignSpec, UnitSpec
+from repro.campaign.store import (UNIT_DONE, UNIT_FAILED, UNIT_RUNNING,
+                                  Campaign)
+from repro.core.executors import SerialExecutor
+
+_POISON = None                      # task-queue sentinel: worker shutdown
+_CRASH_EXIT = 43                    # injected-crash exit code (tests/CI)
+
+
+# ------------------------------------------------------------------ #
+# fault injection (tests + the CI campaign-scale smoke job)
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault injection, applied inside workers.
+
+    Three fault shapes, keyed by unit:
+
+    * ``crash_after_pairs``: number of measured pairs after which the
+      worker hard-exits (``os._exit`` — no cleanup, like a real
+      segfault/OOM kill);
+    * ``stall_s``: seconds the worker sleeps *silently* before starting
+      the unit — no heartbeats, so the driver's hang detection fires;
+    * ``slow_pairs_s``: seconds slept after each measured pair, *with*
+      heartbeats — a live straggler, the speculation path's target.
+
+    Each fault fires once per unit: the first attempt trips it and drops
+    a marker file in the unit directory, so the requeued (or speculated)
+    attempt runs clean.  Markers double as the test/CI evidence that the
+    recovery path (not a lucky clean run) produced the result.
+    """
+
+    crash_after_pairs: tuple = ()       # sorted ((unit_key, n), ...)
+    stall_s: tuple = ()                 # sorted ((unit_key, seconds), ...)
+    slow_pairs_s: tuple = ()            # sorted ((unit_key, seconds), ...)
+
+    @staticmethod
+    def make(crash_after_pairs: dict | None = None,
+             stall_s: dict | None = None,
+             slow_pairs_s: dict | None = None) -> "FaultPlan":
+        return FaultPlan(
+            tuple(sorted((crash_after_pairs or {}).items())),
+            tuple(sorted((stall_s or {}).items())),
+            tuple(sorted((slow_pairs_s or {}).items())))
+
+    def crash_for(self, unit_key: str):
+        return dict(self.crash_after_pairs).get(unit_key)
+
+    def stall_for(self, unit_key: str):
+        return dict(self.stall_s).get(unit_key)
+
+    def slow_for(self, unit_key: str):
+        return dict(self.slow_pairs_s).get(unit_key)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.crash_after_pairs or self.stall_s
+                    or self.slow_pairs_s)
+
+
+def fault_marker_path(campaign: Campaign, unit_key: str, kind: str) -> str:
+    return os.path.join(campaign.unit_dir(unit_key), f"{kind}.injected")
+
+
+def _trip_once(campaign: Campaign, unit_key: str, kind: str) -> bool:
+    """Atomically claim one injected fault; False when already tripped."""
+    path = fault_marker_path(campaign, unit_key, kind)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    try:
+        fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return False
+    os.close(fd)
+    return True
+
+
+class _BeatingSerial(SerialExecutor):
+    """Worker-side session executor: serial in-order measurement (the
+    determinism contract) that emits one heartbeat per measured pair and
+    hosts the injected crash/slowdown hooks."""
+
+    def __init__(self, beat, crash_after=None, on_crash=None,
+                 sleep_between_s=None):
+        self.beat = beat
+        self.crash_after = crash_after
+        self.on_crash = on_crash
+        self.sleep_between_s = sleep_between_s
+
+    def map_pairs(self, fn, pairs, on_result=None):
+        out = []
+        for i, p in enumerate(pairs):
+            r = fn(p, 0)
+            if on_result is not None:
+                on_result(p, r)
+            out.append(r)
+            self.beat()
+            if self.crash_after is not None and i + 1 >= self.crash_after:
+                if self.on_crash is None or self.on_crash():
+                    # hard exit AFTER persistence: the requeued attempt
+                    # must find the measured pairs on disk (mid-unit, not
+                    # before-unit, crash semantics)
+                    os._exit(_CRASH_EXIT)
+            if self.sleep_between_s:
+                time.sleep(self.sleep_between_s)    # injected straggler:
+                self.beat()                         # slow but alive
+        return out
+
+
+# ------------------------------------------------------------------ #
+# worker process
+# ------------------------------------------------------------------ #
+def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
+                 campaign_id: str, task_q, result_q, fault_plan: FaultPlan,
+                 trace: bool) -> None:
+    """Long-lived worker loop: pull a unit key, measure it, persist, ack.
+
+    Messages (worker -> driver):
+      ("ready",  wid)
+      ("start",  wid, unit_key)
+      ("beat",   wid)                        one per measured pair
+      ("done",   wid, unit_key, wall_s, n_pairs)
+      ("failed", wid, unit_key, error_str)
+    """
+    spec = CampaignSpec.from_dict(spec_doc)
+    units = {u.key: u for u in spec.units()}
+    campaign = Campaign(store_root, spec, campaign_id=campaign_id)
+    result_q.put(("ready", worker_id))
+    while True:
+        unit_key = task_q.get()
+        if unit_key is _POISON:
+            return
+        unit = units[unit_key]
+        result_q.put(("start", worker_id, unit_key))
+        t0 = time.perf_counter()
+        try:
+            stall = fault_plan.stall_for(unit_key)
+            if stall is not None and _trip_once(campaign, unit_key, "stall"):
+                time.sleep(stall)           # silent: no heartbeats
+            slow = fault_plan.slow_for(unit_key)
+            if slow is not None and not _trip_once(campaign, unit_key,
+                                                   "slow"):
+                slow = None                 # only the first attempt drags
+            crash_after = fault_plan.crash_for(unit_key)
+            executor = _BeatingSerial(
+                lambda: result_q.put(("beat", worker_id)),
+                crash_after=crash_after,
+                on_crash=(lambda: _trip_once(campaign, unit_key, "crash"))
+                if crash_after is not None else None,
+                sleep_between_s=slow)
+            recorder = None
+            kw = {}
+            if trace:
+                from repro.trace.recorder import TraceRecorder
+                recorder = TraceRecorder(meta={
+                    "campaign_id": campaign.campaign_id,
+                    "unit_key": unit_key, "worker": worker_id})
+                kw["trace"] = recorder
+            session = unit.build_session(
+                out_dir=campaign.session_dir(unit_key), executor=executor,
+                **kw)
+            table = session.run(verbose=False)
+            gt = (session.ground_truth()
+                  if hasattr(session, "ground_truth") else {})
+            campaign.save_unit_result(unit_key, table, gt)
+            if recorder is not None:
+                campaign.save_trace(unit_key, recorder)
+            result_q.put(("done", worker_id, unit_key,
+                          time.perf_counter() - t0, len(table.pairs)))
+        except Exception as exc:  # noqa: BLE001 — unit isolation boundary
+            result_q.put(("failed", worker_id, unit_key,
+                          f"{type(exc).__name__}: {exc}"))
+
+
+# ------------------------------------------------------------------ #
+# driver
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class _Worker:
+    proc: object
+    task_q: object
+    result_q: object                # per-worker: terminating one worker
+                                    # mid-put can only corrupt ITS queue,
+                                    # never the survivors' message path
+    inflight: str | None = None     # unit key currently assigned
+
+
+class ProcessCampaignScheduler:
+    """Drive a campaign's pending units through a fault-tolerant process
+    fleet.  Returns per-unit outcomes; all manifest writes happen here
+    (single writer — workers only touch their own unit's artifact files).
+    """
+
+    def __init__(self, spec: CampaignSpec, campaign: Campaign, *,
+                 max_workers: int = 4,
+                 heartbeat_timeout_s: float = 60.0,
+                 straggler_ratio: float = 3.0,
+                 speculate: bool = True,
+                 fault_plan: FaultPlan | None = None,
+                 mp_context: str = "spawn",
+                 poll_s: float = 0.05,
+                 clock=time.monotonic,
+                 verbose: bool = False):
+        self.spec = spec
+        self.campaign = campaign
+        self.max_workers = max(1, int(max_workers))
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.straggler_ratio = straggler_ratio
+        self.speculate = speculate
+        self.fault_plan = fault_plan or FaultPlan()
+        self.mp_context = mp_context
+        self.poll_s = poll_s
+        self.clock = clock
+        self.verbose = verbose
+        self.trace = False
+        # recovery evidence, surfaced on CampaignResult.stats
+        self.stats = {"crashed_workers": 0, "hung_workers": 0,
+                      "requeued_units": 0, "speculative_dispatches": 0,
+                      "discarded_duplicates": 0, "respawned_workers": 0}
+
+    # -------------------------------------------------------------- #
+    def run(self, todo: list[UnitSpec]) -> dict:
+        from repro.campaign.scheduler import UnitOutcome
+        from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                                   StragglerPolicy)
+        import multiprocessing
+        if not todo:
+            return {}
+        ctx = multiprocessing.get_context(self.mp_context)
+        self._ctx = ctx
+        self._next_wid = 0
+        self._workers: dict[int, _Worker] = {}
+        retries = max(1, self.spec.retries)
+        # trace recording is a per-unit event stream: a resumed duplicate
+        # records only the remainder (trace_complete=False), so duplicate
+        # artifacts are NOT identical bytes and first-result-wins cannot
+        # discard the loser's save — speculation stays off under trace
+        speculate = self.speculate and not self.trace
+
+        unit_keys = [u.key for u in todo]
+        pending = deque(unit_keys)
+        attempts = {k: 0 for k in unit_keys}        # dispatches so far
+        failures = {k: 0 for k in unit_keys}        # crashed/failed attempts
+        errors: dict[str, str] = {}
+        outcomes: dict[str, UnitOutcome] = {}
+        copies: dict[str, int] = {k: 0 for k in unit_keys}  # in-flight count
+
+        hb = HeartbeatMonitor(0, timeout_s=self.heartbeat_timeout_s,
+                              clock=self.clock)
+        sp = StragglerPolicy(ratio=self.straggler_ratio, clock=self.clock)
+
+        def resolved(key: str) -> bool:
+            return key in outcomes
+
+        def release(wid: int, key: str) -> None:
+            w = self._workers.get(wid)
+            if w is not None and w.inflight == key:
+                w.inflight = None
+            copies[key] = max(0, copies[key] - 1)
+
+        def dispatch(worker: _Worker, key: str, speculative=False) -> None:
+            worker.inflight = key
+            copies[key] += 1
+            attempts[key] += 1
+            sp.start(key)       # idempotent: a duplicate keeps the
+                                # original's start stamp
+            if not speculative:
+                self.campaign.mark_unit(key, status=UNIT_RUNNING,
+                                        attempts=attempts[key])
+            worker.task_q.put(key)
+            if self.verbose:
+                tag = " (speculative)" if speculative else ""
+                print(f"  [{key}] dispatched{tag}")
+
+        def finish_done(wid: int, key: str, wall: float, n_pairs: int):
+            release(wid, key)
+            if resolved(key):           # a duplicate lost the race; its
+                self.stats["discarded_duplicates"] += 1   # artifacts are
+                return                  # identical bytes, nothing to undo
+            sp.finish(key)
+            self.campaign.mark_unit(key, status=UNIT_DONE, wall_s=wall,
+                                    n_pairs=n_pairs, error=None)
+            outcomes[key] = UnitOutcome(
+                key, "done", attempts=attempts[key], wall_s=wall,
+                table=self.campaign.load_table(key))
+            if self.verbose:
+                print(f"  [{key}] done: {n_pairs} pairs in {wall:.1f}s "
+                      f"(attempt {attempts[key]})")
+
+        def finalize_failed(key: str) -> None:
+            sp.abandon(key)
+            self.campaign.mark_unit(key, status=UNIT_FAILED,
+                                    error=errors.get(key))
+            outcomes[key] = UnitOutcome(key, "failed",
+                                        attempts=attempts[key],
+                                        error=errors.get(key))
+            if self.verbose:
+                print(f"  [{key}] FAILED: {errors.get(key)}")
+
+        def record_failure(key: str, error: str) -> None:
+            """One attempt burned; requeue within budget, else finalize."""
+            if resolved(key):
+                return
+            # drop the in-flight stamp: the failed attempt's wall time says
+            # nothing about the unit's cost, and a requeued dispatch must
+            # not inherit it (sp.start is a setdefault) — a stale stamp
+            # would flag the fresh attempt as straggling immediately and
+            # fold cross-attempt elapsed into the EWMA on finish
+            sp.abandon(key)
+            failures[key] += 1
+            errors[key] = error
+            if failures[key] >= retries:
+                if copies[key] == 0:
+                    finalize_failed(key)
+                # else: a speculative copy is still in flight — it may win
+            else:
+                self.stats["requeued_units"] += 1
+                pending.appendleft(key)
+                if self.verbose:
+                    print(f"  [{key}] requeued after: {error}")
+
+        def reap(wid: int, reason: str) -> None:
+            """A worker died (exit) or hung (heartbeat timeout): discard
+            it, requeue its in-flight unit."""
+            w = self._workers.pop(wid, None)
+            if w is None:
+                return
+            hb.remove(wid)
+            if w.proc.is_alive():
+                w.proc.terminate()
+            w.proc.join(timeout=5.0)
+            key = w.inflight
+            if self.verbose:
+                print(f"  worker {wid} {reason}"
+                      + (f" while running [{key}]" if key else ""))
+            if key is not None:
+                copies[key] = max(0, copies[key] - 1)
+                record_failure(key, f"worker {reason}")     # abandons the
+                                                            # straggler stamp
+
+        def drain() -> int:
+            """Pull every queued message from every worker's own result
+            queue; sleep one poll tick when nothing arrived so the driver
+            loop doesn't spin."""
+            n = 0
+            for wid, w in list(self._workers.items()):
+                while True:
+                    try:
+                        msg = w.result_q.get_nowait()
+                    except queue_mod.Empty:
+                        break
+                    except (OSError, ValueError):   # queue torn down
+                        break
+                    n += 1
+                    kind = msg[0]
+                    hb.beat(wid)
+                    if kind == "done":
+                        _, _, key, wall, n_pairs = msg
+                        finish_done(wid, key, wall, n_pairs)
+                    elif kind == "failed":
+                        _, _, key, error = msg
+                        release(wid, key)
+                        record_failure(key, error)
+                    # "ready"/"start"/"beat" only feed the monitor
+            if n == 0 and self.poll_s:
+                time.sleep(self.poll_s)
+            return n
+
+        for _ in range(min(self.max_workers, len(pending))):
+            self._spawn_worker(hb)
+
+        try:
+            while len(outcomes) < len(unit_keys):
+                # assign pending units to idle workers
+                idle = [w for w in self._workers.values()
+                        if w.inflight is None]
+                while idle and pending:
+                    key = pending.popleft()
+                    if resolved(key):
+                        continue
+                    dispatch(idle.pop(), key)
+                # keep the fleet at strength while queued work remains
+                while (pending
+                       and len(self._workers) < min(self.max_workers,
+                                                    len(pending))):
+                    self._spawn_worker(hb)
+                    self.stats["respawned_workers"] += 1
+                # speculation: clone the slowest straggler onto idle
+                # capacity once the queue is empty
+                if speculate and not pending:
+                    idle = [w for w in self._workers.values()
+                            if w.inflight is None]
+                    cands = [k for k, n in copies.items()
+                             if n == 1 and not resolved(k)
+                             and sp.straggling(k)]
+                    cands.sort(key=sp.elapsed, reverse=True)
+                    if idle and cands:
+                        self.stats["speculative_dispatches"] += 1
+                        dispatch(idle[0], cands[0], speculative=True)
+                drain()
+                # idle workers legitimately send nothing: keep them alive
+                # in the monitor so only silent *busy* workers count
+                for wid, w in self._workers.items():
+                    if w.inflight is None:
+                        hb.beat(wid)
+                # crash detection: process exited (messages already
+                # drained above, so a clean "done" wins over the reap)
+                for wid in [w for w, st in list(self._workers.items())
+                            if not st.proc.is_alive()]:
+                    self.stats["crashed_workers"] += 1
+                    reap(wid, "crashed")
+                # hang detection: heartbeat silence past the timeout
+                for wid in hb.dead():
+                    if self._workers.get(wid) is not None:
+                        self.stats["hung_workers"] += 1
+                        reap(wid, "hung (heartbeat timeout)")
+                # exhausted units whose last in-flight copy vanished
+                for key in unit_keys:
+                    if (not resolved(key) and failures[key] >= retries
+                            and copies[key] == 0 and key not in pending):
+                        finalize_failed(key)
+        finally:
+            self._shutdown()
+        return {k: outcomes[k] for k in unit_keys}
+
+    # -------------------------------------------------------------- #
+    def _spawn_worker(self, hb) -> None:
+        wid = self._next_wid
+        self._next_wid += 1
+        task_q = self._ctx.Queue()
+        result_q = self._ctx.Queue()
+        store_root = os.path.dirname(self.campaign.dir)
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(wid, self.spec.to_dict(), store_root,
+                  self.campaign.campaign_id, task_q, result_q,
+                  self.fault_plan, self.trace),
+            daemon=True)
+        proc.start()
+        self._workers[wid] = _Worker(proc=proc, task_q=task_q,
+                                     result_q=result_q)
+        hb.register(wid)
+
+    def _shutdown(self) -> None:
+        # every unit is resolved by now, so a worker still mid-unit is a
+        # losing speculative duplicate: its remaining work is discarded,
+        # terminate it outright (artifact writes are atomic, a kill can
+        # only leave tmp debris).  Idle workers get the poison pill and a
+        # short grace period.
+        for w in self._workers.values():
+            if w.inflight is not None and w.proc.is_alive():
+                w.proc.terminate()
+                continue
+            try:
+                w.task_q.put(_POISON)
+            except (OSError, ValueError):
+                pass
+        deadline = time.monotonic() + 5.0
+        for w in self._workers.values():
+            w.proc.join(timeout=max(0.1, deadline - time.monotonic()))
+            if w.proc.is_alive():
+                w.proc.terminate()
+                w.proc.join(timeout=2.0)
+            # drain leftovers so the queue feeder threads exit cleanly
+            try:
+                while True:
+                    w.result_q.get_nowait()
+            except (queue_mod.Empty, OSError, ValueError):
+                pass
+        self._workers.clear()

@@ -3,40 +3,58 @@
 A sweep is an embarrassingly parallel bag of (f_init, f_target) tasks —
 *provided each worker owns an independent device* (two threads interleaving
 set_frequency on one accelerator would corrupt each other's transitions).
-The session therefore hands every worker its own backend instance; the
-executor only decides how tasks are scheduled:
+The session therefore isolates devices per task (or per worker, for
+explicit-device sessions); the executor only decides how tasks are
+scheduled:
 
-  SerialExecutor   one device, in-order — the paper's single-GPU campaign
-  ThreadExecutor   N worker threads, one independent device each — the
-                   fleet-measurement shape (multiple boards, or several
-                   simulated units evaluated concurrently)
+  SerialExecutor    in-order — the paper's single-GPU campaign
+  ThreadExecutor    N worker threads; concurrency for workloads that
+                    release the GIL (numpy hot paths) or block on I/O
+  ProcessExecutor   N worker processes; true CPU parallelism.  The task
+                    callable must be PICKLABLE (a module-level function or
+                    functools.partial over one — never a closure), which is
+                    why the session hands process pools a
+                    :mod:`repro.core.pairtask` spec instead of a device.
 
 Results always come back in task order regardless of completion order.
+Executors additionally accept an ``on_result(task, result)`` callback,
+invoked in the scheduling process as each task finishes — the session's
+per-pair persistence hook, which therefore never crosses a process
+boundary.
 """
 from __future__ import annotations
 
 import concurrent.futures
+import inspect
 import itertools
+import multiprocessing
 import threading
 
 
 class SerialExecutor:
-    """In-order execution on the session's primary device."""
+    """In-order execution in the calling thread."""
 
     n_workers = 1
 
-    def map_pairs(self, fn, pairs):
-        return [fn(p, 0) for p in pairs]
+    def map_pairs(self, fn, pairs, on_result=None):
+        out = []
+        for p in pairs:
+            r = fn(p, 0)
+            if on_result is not None:
+                on_result(p, r)
+            out.append(r)
+        return out
 
 
 class ThreadExecutor:
     """Thread pool; ``fn(pair, worker_index)`` runs with a stable worker
-    index so the session can pin one device per worker."""
+    index so sessions without a backend factory can pin one device per
+    worker."""
 
     def __init__(self, max_workers: int = 4):
         self.n_workers = max(1, int(max_workers))
 
-    def map_pairs(self, fn, pairs):
+    def map_pairs(self, fn, pairs, on_result=None):
         pairs = list(pairs)
         if not pairs:
             return []
@@ -49,20 +67,117 @@ class ThreadExecutor:
                 local.idx = next(counter) % self.n_workers
             return local.idx
 
+        results: list = [None] * len(pairs)
         with concurrent.futures.ThreadPoolExecutor(self.n_workers) as pool:
-            return list(pool.map(lambda p: fn(p, worker_index()), pairs))
+            futs = {pool.submit(lambda p: fn(p, worker_index()), p): i
+                    for i, p in enumerate(pairs)}
+            for fut in concurrent.futures.as_completed(futs):
+                i = futs[fut]
+                results[i] = fut.result()
+                if on_result is not None:
+                    # callback runs in the scheduling thread, so result
+                    # consumers (persistence, verbose printing) need no lock
+                    on_result(pairs[i], results[i])
+        return results
+
+
+# ------------------------------------------------------------------ #
+# process pool
+# ------------------------------------------------------------------ #
+# Module-level state set by the pool initializer: each worker process gets
+# a stable index from a shared counter (mirroring ThreadExecutor's
+# per-thread ids) and the task callable — shipped ONCE per worker, so a
+# task closure embedding real payload (e.g. a PairTask's calibration
+# arrays) is not re-pickled for every submitted pair.
+_WORKER_INDEX = 0
+_WORKER_FN = None
+
+
+def _init_process_worker(counter, fn) -> None:
+    global _WORKER_INDEX, _WORKER_FN
+    with counter.get_lock():
+        _WORKER_INDEX = counter.value
+        counter.value += 1
+    _WORKER_FN = fn
+
+
+def _call_in_worker(pair):
+    return _WORKER_FN(pair, _WORKER_INDEX)
+
+
+class ProcessExecutor:
+    """Process pool for CPU-bound sweeps.
+
+    ``fn`` is pickled per task, so it must be a module-level callable (or a
+    ``functools.partial`` over one) with picklable arguments; sessions
+    satisfy this with :func:`repro.core.pairtask.run_pair_task`, which
+    rebuilds the backend *inside* the worker from its ``(backend, options)``
+    spec — device objects never cross the process boundary.
+
+    Uses the ``spawn`` start method by default: workers import only the
+    numpy measurement stack (fast), and no parent-process locks or JAX
+    runtime state are inherited mid-flight.
+    """
+
+    requires_picklable_fn = True
+
+    def __init__(self, max_workers: int = 4, mp_context: str = "spawn"):
+        self.n_workers = max(1, int(max_workers))
+        self._mp_context = mp_context
+
+    def map_pairs(self, fn, pairs, on_result=None):
+        pairs = list(pairs)
+        if not pairs:
+            return []
+        ctx = multiprocessing.get_context(self._mp_context)
+        counter = ctx.Value("i", 0)
+        results: list = [None] * len(pairs)
+        with concurrent.futures.ProcessPoolExecutor(
+                min(self.n_workers, len(pairs)), mp_context=ctx,
+                initializer=_init_process_worker,
+                initargs=(counter, fn)) as pool:
+            futs = {pool.submit(_call_in_worker, p): i
+                    for i, p in enumerate(pairs)}
+            for fut in concurrent.futures.as_completed(futs):
+                i = futs[fut]
+                results[i] = fut.result()
+                if on_result is not None:
+                    on_result(pairs[i], results[i])
+        return results
+
+
+def map_pairs_with_callback(executor, fn, pairs, on_result):
+    """Invoke ``executor.map_pairs`` with the per-result callback when the
+    executor supports it, degrading gracefully for third-party executors
+    that predate ``on_result`` (the callback then runs after the batch)."""
+    try:
+        accepts = "on_result" in inspect.signature(
+            executor.map_pairs).parameters
+    except (TypeError, ValueError):     # builtins / C callables
+        accepts = False
+    if accepts:
+        return executor.map_pairs(fn, pairs, on_result=on_result)
+    results = executor.map_pairs(fn, pairs)
+    for p, r in zip(pairs, results):
+        on_result(p, r)
+    return results
+
+
+EXECUTOR_NAMES = ("serial", "threads", "processes")
 
 
 def get_executor(spec, max_workers: int = 4):
-    """Resolve an executor from a name ("serial" | "threads") or pass an
-    instance through unchanged."""
+    """Resolve an executor from a name ("serial" | "threads" | "processes")
+    or pass an instance through unchanged."""
     if isinstance(spec, str):
         if spec == "serial":
             return SerialExecutor()
         if spec == "threads":
             return ThreadExecutor(max_workers=max_workers)
+        if spec == "processes":
+            return ProcessExecutor(max_workers=max_workers)
         raise ValueError(f"unknown executor {spec!r} "
-                         "(expected 'serial' or 'threads')")
+                         f"(expected one of {EXECUTOR_NAMES})")
     missing = [a for a in ("map_pairs", "n_workers") if not hasattr(spec, a)]
     if missing:
         raise TypeError(f"executor {spec!r} lacks {', '.join(missing)}")

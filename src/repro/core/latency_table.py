@@ -9,6 +9,7 @@ import os
 import numpy as np
 
 from repro.core.dbscan import NOISE, adaptive_dbscan, split_clusters
+from repro.core.paths import atomic_replace
 from repro.core.silhouette import silhouette_score
 
 
@@ -97,8 +98,12 @@ class LatencyTable:
             p = os.path.join(out_dir, self.csv_name(fi, ft))
             rows = np.column_stack([pr.latencies,
                                     pr.outlier_mask.astype(np.float64)])
-            np.savetxt(p, rows, fmt=("%.9f", "%d"), delimiter=",",
-                       header="latency_s,is_outlier", comments="")
+            # %.17g round-trips float64 exactly, so a store-loaded table is
+            # bit-identical to the live one — the campaign determinism
+            # contract reaches through the artifact layer
+            with atomic_replace(p) as tmp:
+                np.savetxt(tmp, rows, fmt=("%.17g", "%d"), delimiter=",",
+                           header="latency_s,is_outlier", comments="")
             paths.append(p)
         return paths
 

@@ -1,0 +1,87 @@
+"""Picklable per-pair measurement tasks.
+
+Process-parallel sweeps cannot ship a live device object to a worker (the
+simulator holds numpy RNG state and an event timeline; real backends hold
+driver handles).  What crosses the boundary instead is a :class:`PairTask`:
+the backend *name* plus its constructor options, the calibration result,
+and the workload/measurement configs — all plain data.  The worker rebuilds
+the backend locally and measures.
+
+The same task spec also gives every executor a *determinism* guarantee the
+shared-device path never had: each pair is measured on a device seeded by
+:func:`pair_seed`, a stable hash of ``(base_seed, f_init, f_target)``.
+Pair results therefore depend only on the unit spec and the pair — never on
+which worker ran them, in what order, or whether the sweep was interrupted
+and resumed — so serial, thread, and process schedules (and crash-requeued
+re-runs) produce bit-identical tables on simulated backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+from repro.core.calibration import Calibration
+from repro.core.evaluation import (MeasureConfig, PairMeasurement,
+                                   measure_pair)
+from repro.core.workload import WorkloadSpec
+
+
+def pair_seed(base_seed: int, f_init: float, f_target: float) -> int:
+    """Stable 64-bit seed for one (f_init, f_target) measurement device.
+
+    Uses blake2s, not ``hash()``: Python string hashing is salted per
+    process, and the whole point is that every process derives the same
+    stream."""
+    key = f"{int(base_seed)}|{f_init:.6g}|{f_target:.6g}".encode()
+    return int.from_bytes(hashlib.blake2s(key, digest_size=8).digest(),
+                          "big")
+
+
+def extract_ground_truth(device) -> dict[tuple[float, float], float]:
+    """Max true transition latency per (from, to) from a simulator's event
+    log; empty for backends that keep no history (real hardware)."""
+    gt: dict[tuple[float, float], float] = {}
+    for h in getattr(device, "history", []):
+        k = (float(h["from"]), float(h["to"]))
+        gt[k] = max(gt.get(k, 0.0), float(h["true_latency"]))
+    return gt
+
+
+@dataclasses.dataclass(frozen=True)
+class PairTask:
+    """Everything a worker needs to measure one frequency pair, as plain
+    picklable data.  ``options`` is the canonical sorted (name, value)
+    tuple form (see :class:`repro.campaign.spec.DeviceSpec`)."""
+
+    backend: str
+    options: tuple                      # sorted (name, value) pairs, no seed
+    base_seed: int
+    cal: Calibration
+    spec: WorkloadSpec
+    measure: MeasureConfig
+
+    @staticmethod
+    def make(backend: str, options: dict, cal: Calibration,
+             spec: WorkloadSpec, measure: MeasureConfig) -> "PairTask":
+        opts = dict(options or {})
+        base_seed = int(opts.pop("seed", 0))
+        return PairTask(backend, tuple(sorted(opts.items())), base_seed,
+                        cal, spec, measure)
+
+
+def run_pair_task(task: PairTask, pair, worker: int = 0
+                  ) -> tuple[PairMeasurement, dict]:
+    """Measure one pair on a freshly built, pair-seeded device.
+
+    Returns ``(measurement, ground_truth)`` where ground truth is the
+    simulator's true-latency log for this device (empty on hardware).
+    Module-level on purpose: ``functools.partial(run_pair_task, task)`` is
+    what sessions hand to executors, and it pickles by reference."""
+    from repro.backends import create_backend
+    f_init, f_target = pair
+    device = create_backend(
+        task.backend, **dict(task.options),
+        seed=pair_seed(task.base_seed, f_init, f_target))
+    pm = measure_pair(device, f_init, f_target, task.cal, task.spec,
+                      task.measure)
+    return pm, extract_ground_truth(device)

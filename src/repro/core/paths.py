@@ -9,9 +9,21 @@ tree stays clean; leave it unset and you get the familiar ``results/``.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 _ENV = "REPRO_RESULTS_DIR"
+
+
+@contextlib.contextmanager
+def atomic_replace(path: str):
+    """Write-then-rename: yields a tmp path; on clean exit renames it onto
+    ``path`` atomically.  The tmp name is pid-unique so concurrent writers
+    (campaign worker processes, speculative duplicate units) never race on
+    the rename source, and a mid-write kill leaves only tmp debris."""
+    tmp = f"{path}.tmp-{os.getpid()}"
+    yield tmp
+    os.replace(tmp, path)
 
 
 def results_root() -> str:

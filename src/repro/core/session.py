@@ -10,8 +10,14 @@ tooling needs:
 * phase-1 calibration state (baselines, workload sizing) is owned by the
   session and computed once;
 * phase-2/3 pair measurements are scheduled through a pluggable executor —
-  serial on one device, or thread-parallel with one independent device per
-  worker;
+  serial, thread-parallel, or process-parallel.  For *virtual* registry
+  backends (the simulators) every pair is measured on a freshly built
+  device seeded from ``(base_seed, f_init, f_target)``
+  (:mod:`repro.core.pairtask`): the per-pair work is plain picklable data,
+  so it can cross process boundaries, and the resulting tables are
+  bit-identical across serial/thread/process schedules and across
+  crash-resume boundaries.  Explicit device instances (hardware,
+  trace-replay, traced runs) keep the shared-device path;
 * with ``out_dir`` set, every finished pair is persisted to disk the moment
   it completes, so an interrupted sweep resumes where it stopped (already
   measured pairs are loaded, not re-measured) and calibration is reloaded
@@ -22,6 +28,7 @@ tooling needs:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 
@@ -30,8 +37,11 @@ import numpy as np
 from repro.core.calibration import Calibration, calibrate, valid_pairs
 from repro.core.evaluation import (MeasureConfig, PairMeasurement,
                                    measure_pair)
-from repro.core.executors import get_executor
+from repro.core.executors import get_executor, map_pairs_with_callback
 from repro.core.latency_table import LatencyTable, analyse_pair
+from repro.core.pairtask import (PairTask, extract_ground_truth,
+                                 run_pair_task)
+from repro.core.paths import atomic_replace
 from repro.core.stats import FreqStats
 from repro.core.workload import WorkloadSpec, size_workload
 
@@ -116,6 +126,10 @@ class MeasurementSession:
         self.cal: Calibration | None = None
         self.spec: WorkloadSpec | None = None
         self._cal_loaded = False
+        # ground truth from pair-scoped devices (their histories never
+        # attach to self._devices); merged with device histories by
+        # ground_truth()
+        self._pair_ground_truth: dict[tuple[float, float], float] = {}
         if trace is not None:
             # everything a replay needs to rebuild this session offline
             trace.update_meta(sweep={
@@ -172,6 +186,18 @@ class MeasurementSession:
         self.calibrate()
         return valid_pairs(self.cal)
 
+    def pair_scoped(self) -> bool:
+        """True when pairs are measured on per-pair deterministic devices
+        (virtual registry backend, no trace recorder attached) — the mode
+        that makes parallel and resumed sweeps bit-identical to serial."""
+        if self._backend is None or self._trace is not None:
+            return False
+        from repro.backends import get_backend
+        try:
+            return get_backend(self._backend).virtual
+        except KeyError:
+            return False
+
     def run(self, pair_subset=None, verbose: bool = False) -> LatencyTable:
         self.calibrate()
         pairs = valid_pairs(self.cal)
@@ -187,24 +213,54 @@ class MeasurementSession:
             print(f"  resume: {len(done)} pair(s) loaded from "
                   f"{self.cfg.out_dir}, {len(todo)} to measure")
         executor = get_executor(self.cfg.executor, self.cfg.max_workers)
-        self._ensure_workers(executor.n_workers)
-        analysed: dict[tuple[float, float], object] = {}
+        pair_scoped = self.pair_scoped()
+        if pair_scoped:
+            # every pair measured on a freshly built, pair-seeded device;
+            # the task is plain data, so any executor (including process
+            # pools) can schedule it
+            task = PairTask.make(self._backend, self._backend_options,
+                                 self.cal, self.spec,
+                                 self.cfg.latest.measure)
+            fn = functools.partial(run_pair_task, task)
+        else:
+            if getattr(executor, "requires_picklable_fn", False):
+                raise ValueError(
+                    "process-parallel sweeps need a virtual registry "
+                    "backend (e.g. 'simulated', 'vmapped-sim'): explicit "
+                    "device instances and traced runs cannot cross process "
+                    "boundaries — use backend=... or a serial/thread "
+                    "executor")
+            self._ensure_workers(executor.n_workers)
 
-        def one(pair, worker):
-            fi, ft = pair
-            pm = measure_pair(self._devices[worker], fi, ft, self.cal,
-                              self.spec, self.cfg.latest.measure)
-            self._save_pair(pm)
+            def fn(pair, worker):
+                pm = measure_pair(self._devices[worker], pair[0], pair[1],
+                                  self.cal, self.spec,
+                                  self.cfg.latest.measure)
+                return pm, {}
+
+        analysed: dict[tuple[float, float], object] = {}
+        measured: dict[tuple[float, float], PairMeasurement] = {}
+
+        def on_result(pair, result):
+            # runs in the scheduling process as each pair completes: the
+            # persistence (crash-resume) hook never crosses processes
+            pm, gt = result
+            measured[pair] = pm
+            for k, v in gt.items():
+                self._pair_ground_truth[k] = max(
+                    self._pair_ground_truth.get(k, 0.0), v)
+            self._save_pair(pm, gt)
             if verbose:
-                pr = analyse_pair(fi, ft, pm.latencies, pm.status)
+                pr = analyse_pair(pm.f_init, pm.f_target, pm.latencies,
+                                  pm.status)
                 analysed[pair] = pr
-                print(f"  {fi:.0f}->{ft:.0f} MHz: n={pm.latencies.size} "
+                print(f"  {pm.f_init:.0f}->{pm.f_target:.0f} MHz: "
+                      f"n={pm.latencies.size} "
                       f"status={pm.status} worst={pr.worst_case*1e3:.2f}ms "
                       f"best={pr.best_case*1e3:.2f}ms "
                       f"clusters={pr.n_clusters}")
-            return pm
 
-        measured = dict(zip(todo, executor.map_pairs(one, todo)))
+        map_pairs_with_callback(executor, fn, todo, on_result)
         table = LatencyTable(self.device_name, self.device_index,
                              self.hostname)
         for p in pairs:
@@ -227,6 +283,18 @@ class MeasurementSession:
                 from repro.trace.analyze import table_digest
                 self._trace.update_meta(live_table_digest=table_digest(table))
         return table
+
+    def ground_truth(self) -> dict[tuple[float, float], float]:
+        """Max true transition latency per (from, to) pair across every
+        device this session touched: the primary (calibration) device, any
+        per-worker devices, and the pair-scoped measurement devices whose
+        histories were harvested as their results arrived.  Empty entries
+        only for backends without an event log (real hardware)."""
+        gt = dict(self._pair_ground_truth)
+        for dev in self._devices:
+            for k, v in extract_ground_truth(dev).items():
+                gt[k] = max(gt.get(k, 0.0), v)
+        return gt
 
     def _ensure_workers(self, n: int) -> None:
         if n <= len(self._devices):
@@ -271,15 +339,23 @@ class MeasurementSession:
         return os.path.join(self.cfg.out_dir, _PAIR_DIR,
                             f"{f_init:g}_{f_target:g}.json")
 
-    def _save_pair(self, pm: PairMeasurement) -> None:
+    def _save_pair(self, pm: PairMeasurement,
+                   ground_truth: dict | None = None) -> None:
         if self.cfg.out_dir is None:
             return
         path = self._pair_path(pm.f_init, pm.f_target)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(pm.to_dict(), f)
-        os.replace(tmp, path)           # atomic: a crash never half-writes
+        doc = pm.to_dict()
+        if ground_truth:
+            # the simulator's oracle for this pair rides WITH the pair: a
+            # session that resumes these measurements (crash-requeue, a
+            # speculative duplicate) recovers the truths it never measured
+            # itself, so downstream gt consumers see no holes
+            doc["ground_truth"] = [[fi, ft, float(v)] for (fi, ft), v in
+                                   sorted(ground_truth.items())]
+        with atomic_replace(path) as tmp:
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
 
     def _load_pairs(self) -> dict[tuple[float, float], PairMeasurement]:
         out: dict[tuple[float, float], PairMeasurement] = {}
@@ -292,7 +368,14 @@ class MeasurementSession:
             if not name.endswith(".json"):
                 continue
             with open(os.path.join(pair_dir, name)) as f:
-                pm = PairMeasurement.from_dict(json.load(f))
+                doc = json.load(f)
+            pm = PairMeasurement.from_dict(doc)
+            # harvest the persisted oracle: this session never ran these
+            # transitions, but ground_truth() must still cover them
+            for fi, ft, v in doc.get("ground_truth", []):
+                k = (float(fi), float(ft))
+                self._pair_ground_truth[k] = max(
+                    self._pair_ground_truth.get(k, 0.0), float(v))
             out[(pm.f_init, pm.f_target)] = pm
         return out
 
@@ -311,10 +394,10 @@ class MeasurementSession:
                           for st in self.cal.baselines.values()],
             "spec": dataclasses.asdict(self.spec),
         }
-        tmp = os.path.join(self.cfg.out_dir, _SESSION_FILE + ".tmp")
-        with open(tmp, "w") as f:
-            json.dump(doc, f, indent=1)
-        os.replace(tmp, os.path.join(self.cfg.out_dir, _SESSION_FILE))
+        with atomic_replace(os.path.join(self.cfg.out_dir,
+                                         _SESSION_FILE)) as tmp:
+            with open(tmp, "w") as f:
+                json.dump(doc, f, indent=1)
 
     def _load_calibration(self) -> bool:
         if self.cfg.out_dir is None:

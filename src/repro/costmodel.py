@@ -25,7 +25,6 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import numpy as np

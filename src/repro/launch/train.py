@@ -4,9 +4,7 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
-from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import ShapeSpec
 from repro.launch.mesh import make_smoke_mesh
 from repro.parallel.sharding import make_env

@@ -13,7 +13,6 @@ Layer topology per family (cfg.family):
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax

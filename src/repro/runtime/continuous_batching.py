@@ -14,9 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import decode_module, model_module
-from repro.data.synthetic import make_batch
-from repro.configs.shapes import ShapeSpec
+from repro.configs.registry import decode_module
 
 
 @dataclasses.dataclass

@@ -13,12 +13,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.configs.registry import model_module
 from repro.data.synthetic import make_batch
-from repro.launch.specs import abstract_init, batch_shardings, make_train_step
+from repro.launch.specs import abstract_init, make_train_step
 from repro.optim import adamw, schedules
 from repro.parallel.sharding import param_shardings
 from repro.runtime.fault_tolerance import StragglerPolicy, retry_step

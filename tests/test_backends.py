@@ -1,6 +1,5 @@
 """Backend registry: round-trips, protocol conformance, availability
 gating, and the vmapped batch fast path."""
-import numpy as np
 import pytest
 
 from repro.backends import (AcceleratorBackend, BackendUnavailableError,

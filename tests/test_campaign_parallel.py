@@ -1,0 +1,179 @@
+"""Process-parallel campaign execution: the fault-tolerant work queue.
+
+Covers the resilience contract end to end against real worker processes:
+a worker hard-killed mid-pair has its unit requeued and the recovered
+campaign is bit-identical to the serial schedule; a unit that exhausts
+its attempt budget lands in ``CampaignResult.failed`` without poisoning
+the rest; a silently hung worker is detected by heartbeat timeout and
+its unit re-dispatched; a live straggler is speculatively duplicated
+with first-result-wins."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import (ArtifactStore, CampaignRunner, CampaignSpec,
+                            DeviceSpec, MeasureSpec, run_campaign)
+from repro.campaign.workqueue import FaultPlan, fault_marker_path
+
+FAST = MeasureSpec(key="fast", min_measurements=4, max_measurements=5,
+                   rse_check_every=4)
+FREQS = (210.0, 705.0, 1410.0)
+
+
+def _device(key, seed, kind="a100"):
+    return DeviceSpec.make(key, "simulated",
+                           {"kind": kind, "n_cores": 6, "seed": seed},
+                           frequencies=FREQS)
+
+
+def _fleet(n=4, retries=3):
+    return CampaignSpec("par", devices=tuple(_device(f"u{i}", i)
+                                             for i in range(n)),
+                        measures=(FAST,), retries=retries)
+
+
+def _assert_tables_bit_identical(ref, cand):
+    assert set(ref.outcomes) == set(cand.outcomes)
+    for key in ref.outcomes:
+        rt, ct = ref.campaign.load_table(key), cand.campaign.load_table(key)
+        rm = ref.outcomes[key].table          # serial in-memory table too:
+        assert set(rt.pairs) == set(ct.pairs)  # the store round trip is
+        for p, pr in rt.pairs.items():         # part of the contract
+            for other in (ct.pairs[p], rm.pairs[p]):
+                assert np.array_equal(pr.latencies, other.latencies)
+                assert np.array_equal(pr.outlier_mask, other.outlier_mask)
+            assert pr.status == ct.pairs[p].status
+            assert pr.n_clusters == ct.pairs[p].n_clusters
+
+
+def test_crashed_worker_unit_requeued_bit_identical(tmp_path):
+    """A worker hard-killed (os._exit) two pairs into a unit: the pairs it
+    persisted are resumed, the rest measured by a surviving worker, and
+    the final tables match the serial schedule byte for byte."""
+    spec = _fleet(4)
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    assert ref.ok
+
+    crash_key = spec.units()[0].key
+    cand = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "proc")), executor="processes",
+        max_workers=2,
+        fault_plan=FaultPlan.make(crash_after_pairs={crash_key: 2})).run()
+    assert cand.ok, [(o.key, o.error) for o in cand.failed()]
+    # the kill really fired (marker), was seen (dead worker), and the
+    # unit went through the requeue path, burning one attempt
+    assert os.path.exists(
+        fault_marker_path(cand.campaign, crash_key, "crash"))
+    assert cand.stats["crashed_workers"] >= 1
+    assert cand.stats["requeued_units"] >= 1
+    assert cand.outcomes[crash_key].attempts >= 2
+    # ...and the crashed unit's session dir shows a pair-level resume:
+    # the first attempt's persisted pairs were never re-measured
+    _assert_tables_bit_identical(ref, cand)
+    # the oracle rides with the pair files, so the resumed attempt has no
+    # ground-truth holes for pairs measured by the dead worker
+    table_pairs = set(cand.campaign.load_table(crash_key).pairs)
+    assert table_pairs <= set(cand.campaign.ground_truth(crash_key))
+
+
+def test_unit_exhausting_retries_fails_without_poisoning(tmp_path):
+    """A unit whose worker attempt fails every time (unknown device kind
+    raises inside the worker) is marked failed after spec.retries total
+    attempts while every healthy unit completes."""
+    bad = DeviceSpec.make("bad", "simulated",
+                          {"kind": "no-such-gpu", "n_cores": 6, "seed": 0},
+                          frequencies=FREQS)
+    spec = CampaignSpec("mix", devices=(bad, _device("ok0", 1),
+                                        _device("ok1", 2)),
+                        measures=(FAST,), retries=2)
+    result = CampaignRunner(spec, ArtifactStore(str(tmp_path)),
+                            executor="processes", max_workers=2).run()
+    assert not result.ok
+    (failed,) = result.failed()
+    assert failed.key == "bad@fast"
+    assert failed.attempts == 2                   # spec.retries is TOTAL
+    assert "no-such-gpu" in failed.error
+    for key in ("ok0@fast", "ok1@fast"):
+        assert result.outcomes[key].status == "done"
+    states = result.campaign.unit_states()
+    assert states["bad@fast"]["status"] == "failed"
+    assert states["ok0@fast"]["status"] == "done"
+
+
+def test_hung_worker_detected_by_heartbeat_and_requeued(tmp_path):
+    """A worker that goes silent (sleeps without heartbeats) past the
+    timeout is terminated and its unit re-dispatched; the stall fires only
+    on the first attempt, so the retry completes."""
+    spec = _fleet(2, retries=3)
+    stall_key = spec.units()[0].key
+    result = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path)), executor="processes",
+        max_workers=2, heartbeat_timeout_s=3.0, speculate=False,
+        fault_plan=FaultPlan.make(stall_s={stall_key: 60.0})).run()
+    assert result.ok, [(o.key, o.error) for o in result.failed()]
+    assert result.stats["hung_workers"] >= 1
+    assert result.stats["requeued_units"] >= 1
+    assert result.outcomes[stall_key].attempts >= 2
+
+
+def test_straggler_unit_speculatively_duplicated(tmp_path):
+    """A unit that is slow but alive (beats flowing) gets cloned onto idle
+    capacity once its elapsed time exceeds ratio x EWMA; the clean clone
+    wins and the campaign completes without burning retry attempts."""
+    spec = _fleet(4, retries=2)
+    slow_key = spec.units()[0].key
+    result = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path)), executor="processes",
+        max_workers=2, straggler_ratio=1.5, heartbeat_timeout_s=60.0,
+        fault_plan=FaultPlan.make(slow_pairs_s={slow_key: 1.0})).run()
+    assert result.ok, [(o.key, o.error) for o in result.failed()]
+    assert result.stats["speculative_dispatches"] >= 1
+    assert result.stats["requeued_units"] == 0
+    assert result.stats["crashed_workers"] == 0
+
+
+def test_processes_records_traces(tmp_path):
+    spec = _fleet(1)
+    result = CampaignRunner(spec, ArtifactStore(str(tmp_path)),
+                            executor="processes", max_workers=1,
+                            trace=True).run()
+    assert result.ok
+    traces = result.campaign.list_traces()
+    assert traces.get("u0@fast") == ["session"]
+
+
+def test_process_campaign_resumes_from_store(tmp_path):
+    spec = _fleet(2)
+    store = ArtifactStore(str(tmp_path))
+    first = CampaignRunner(spec, store, executor="processes",
+                           max_workers=2).run()
+    assert first.ok
+    again = CampaignRunner(spec, store, executor="processes",
+                           max_workers=2).run()
+    assert again.ok
+    assert all(o.status == "loaded" for o in again.outcomes.values())
+
+
+def test_fault_plan_roundtrip_and_empty():
+    assert FaultPlan().empty
+    fp = FaultPlan.make(crash_after_pairs={"a": 2}, stall_s={"b": 1.5},
+                        slow_pairs_s={"c": 0.2})
+    assert not fp.empty
+    assert fp.crash_for("a") == 2 and fp.crash_for("b") is None
+    assert fp.stall_for("b") == 1.5
+    assert fp.slow_for("c") == 0.2
+
+
+@pytest.mark.slow
+def test_speculative_duplicate_discarded_when_original_wins(tmp_path):
+    """First-result-wins the other way around: with speculation forced
+    early (tiny ratio) onto a unit that is NOT actually slow, whichever
+    copy loses is discarded without corrupting artifacts."""
+    spec = _fleet(3, retries=2)
+    result = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "proc")), executor="processes",
+        max_workers=3, straggler_ratio=0.01).run()
+    assert result.ok
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    _assert_tables_bit_identical(ref, result)

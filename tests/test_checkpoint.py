@@ -57,7 +57,6 @@ def test_elastic_restore_with_shardings(tmp_path):
 def test_train_resume_equivalence(tmp_path):
     """Training 6 steps straight == training 3, restarting, training 3 —
     checkpoint/restart + step-indexed data make resume bit-exact."""
-    import dataclasses
     from repro.configs import get_config
     from repro.configs.shapes import ShapeSpec
     from repro.parallel.sharding import make_env

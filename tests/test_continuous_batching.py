@@ -1,6 +1,5 @@
 """Continuous batching: admission, completion, slot reuse."""
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.registry import model_module

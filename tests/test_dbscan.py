@@ -5,7 +5,7 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests run when installed
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dbscan import NOISE, adaptive_dbscan, dbscan, split_clusters
+from repro.core.dbscan import adaptive_dbscan, dbscan, split_clusters
 from repro.core.silhouette import silhouette_score
 
 

@@ -1,0 +1,67 @@
+"""Executor layer: serial/thread/process scheduling, result ordering,
+per-result callbacks, and the picklable-task contract."""
+import pytest
+
+from repro.core.executors import (ProcessExecutor, SerialExecutor,
+                                  ThreadExecutor, get_executor,
+                                  map_pairs_with_callback)
+
+
+def _square(pair, worker):
+    # module-level on purpose: ProcessExecutor pickles tasks by reference
+    return pair[0] * pair[0] + pair[1]
+
+
+PAIRS = [(i, i % 3) for i in range(7)]
+WANT = [_square(p, 0) for p in PAIRS]
+
+
+def test_get_executor_by_name():
+    assert isinstance(get_executor("serial"), SerialExecutor)
+    assert isinstance(get_executor("threads"), ThreadExecutor)
+    proc = get_executor("processes", max_workers=3)
+    assert isinstance(proc, ProcessExecutor)
+    assert proc.n_workers == 3
+    assert proc.requires_picklable_fn
+    with pytest.raises(ValueError, match="serial.*threads.*processes"):
+        get_executor("fork-bomb")
+
+
+def test_get_executor_rejects_partial_instances():
+    class Half:
+        n_workers = 1
+    with pytest.raises(TypeError, match="map_pairs"):
+        get_executor(Half())
+
+
+@pytest.mark.parametrize("executor", [SerialExecutor(), ThreadExecutor(3)])
+def test_in_process_executors_order_and_callback(executor):
+    seen = []
+    out = executor.map_pairs(_square, PAIRS,
+                             on_result=lambda p, r: seen.append((p, r)))
+    assert out == WANT                       # task order, not completion
+    assert sorted(seen) == sorted(zip(PAIRS, WANT))
+    assert executor.map_pairs(_square, []) == []
+
+
+def test_process_executor_orders_results_and_calls_back():
+    seen = []
+    out = ProcessExecutor(max_workers=2).map_pairs(
+        _square, PAIRS, on_result=lambda p, r: seen.append((p, r)))
+    assert out == WANT
+    assert sorted(seen) == sorted(zip(PAIRS, WANT))
+    assert ProcessExecutor(2).map_pairs(_square, []) == []
+
+
+def test_map_pairs_with_callback_wraps_legacy_executors():
+    class Legacy:                            # pre-on_result protocol
+        n_workers = 1
+
+        def map_pairs(self, fn, pairs):
+            return [fn(p, 0) for p in pairs]
+
+    seen = []
+    out = map_pairs_with_callback(Legacy(), _square, PAIRS,
+                                  lambda p, r: seen.append(p))
+    assert out == WANT
+    assert seen == PAIRS                     # called after the batch

@@ -41,7 +41,10 @@ def test_run_latest_through_session(backend):
                                         "n_cores": 6})
     assert len(table.pairs) == 6               # all permutations valid
     assert all(p.status == "ok" for p in table.pairs.values())
-    assert all(p.clean.size >= 4 for p in table.pairs.values())
+    # min_measurements passes per pair; the DBSCAN clean cluster may keep
+    # fewer when a pair's handful of samples splits into clusters
+    assert all(p.latencies.size >= 4 for p in table.pairs.values())
+    assert all(p.clean.size >= 1 for p in table.pairs.values())
 
 
 def test_interrupted_sweep_resumes_from_disk(tmp_path):
@@ -123,13 +126,17 @@ def test_resume_retries_failed_pairs(tmp_path):
     assert table.pairs[(210.0, 1410.0)].clean.size >= 4
 
 
-def test_thread_executor_independent_devices():
-    s = _session(executor="threads", max_workers=3, backend="vmapped-sim")
-    table = s.run()
-    assert len(table.pairs) == 6
-    assert all(p.status == "ok" for p in table.pairs.values())
-    assert len(s._devices) == 3                # one device per worker
-    assert len({id(d) for d in s._devices}) == 3
+def test_thread_executor_bit_identical_to_serial():
+    """Virtual backends measure every pair on a pair-seeded device, so the
+    schedule (and the worker that ran each pair) cannot leak into the
+    results: a thread-parallel sweep reproduces the serial table exactly."""
+    serial = _session(backend="vmapped-sim").run()
+    threaded = _session(executor="threads", max_workers=3,
+                        backend="vmapped-sim").run()
+    assert set(serial.pairs) == set(threaded.pairs) and len(serial.pairs) == 6
+    for p, pr in serial.pairs.items():
+        assert np.array_equal(pr.latencies, threaded.pairs[p].latencies)
+        assert np.array_equal(pr.labels, threaded.pairs[p].labels)
 
 
 def test_explicit_device_without_factory_rejects_threads():
@@ -138,6 +145,15 @@ def test_explicit_device_without_factory_rejects_threads():
     s = MeasurementSession(dev, FREQS, _cfg(executor="threads",
                                             max_workers=2))
     with pytest.raises(ValueError, match="independent devices"):
+        s.run()
+
+
+def test_explicit_device_rejects_process_executor():
+    from repro.backends import create_backend
+    dev = create_backend("simulated", kind="a100", n_cores=4)
+    s = MeasurementSession(dev, FREQS, _cfg(executor="processes",
+                                            max_workers=2))
+    with pytest.raises(ValueError, match="process"):
         s.run()
 
 

@@ -1,7 +1,5 @@
 """Sharding policy: divisibility fallback, spec trees, collective parser."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

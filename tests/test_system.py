@@ -1,7 +1,6 @@
 """End-to-end behaviour tests: train-to-convergence on the synthetic
 grammar, serving, and the full paper pipeline feeding the governor."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

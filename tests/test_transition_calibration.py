@@ -5,7 +5,6 @@ tests pin their ground-truth distributions to the paper's reported
 qualitative structure so a future re-calibration cannot silently drift.
 """
 import numpy as np
-import pytest
 
 from repro.dvfs import make_device
 from repro.dvfs.transition_models import A100Like, GH200Like, RTXQuadro6000Like
