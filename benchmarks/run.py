@@ -59,11 +59,13 @@ def main() -> None:
                                          bench_phase1_two_sigma,
                                          bench_table2_summary)
     from benchmarks.roofline_report import bench_roofline_table
+    from benchmarks.sweep_e2e import bench_sweep
     from benchmarks.trace_overhead import bench_trace
     from benchmarks.wait_speedup import bench_wait_vectorized
 
     benches = [
         bench_wait_vectorized,       # simulator hot path (session refactor)
+        bench_sweep,                 # end-to-end batched sweep engine
         bench_analysis,              # sorted-window analysis engine
         bench_campaign,              # process-parallel fleet scaling
         bench_trace,                 # telemetry recorder overhead (<5% bar)

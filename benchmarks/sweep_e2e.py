@@ -1,0 +1,107 @@
+"""End-to-end sweep benchmark: the batched engine vs the serial per-pair
+loop on the SAME 72-pair grid — wall time of the whole measurement sweep
+(paper Alg. 2 over every (f_init, f_target) pair), not analysis
+microseconds.
+
+Shape is locked to the paper-scale configuration the acceptance bar is
+stated against: rtx6000 (72 cores), 9 evenly spaced frequencies from the
+device table -> 72 ordered pairs, 8-iteration measured kernels with a
+4-iteration confirmation suffix, 8..24 passes per pair with RSE checks
+every 8.  Calibration runs once and is shared by both engines (it is
+identical work either way and the paper treats it as a separate phase).
+
+Every invocation asserts the batched engine's per-pair results are
+bit-identical to the serial reference — status, retry count, latency
+vectors, RSE and ground truth — before reporting any timing.  A speedup
+number from a diverged result would be meaningless.
+
+Timing uses ``time.process_time`` (CPU time): the sweep is pure compute,
+and shared-runner wall clock adds 20-35% noise that CPU time does not
+see.  Best-of-``REPS`` per engine; ``REPRO_BENCH_SMOKE=1`` drops to one
+rep and a 3-frequency grid for CI smoke runs.
+
+Acceptance bar: batched >= 5x serial on the full 72-pair grid.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.backends import create_backend
+from repro.core.batched_sweep import run_batched_sweep
+from repro.core.calibration import calibrate, valid_pairs
+from repro.core.evaluation import MeasureConfig
+from repro.core.pairtask import PairTask, run_pair_task
+from repro.core.workload import WorkloadSpec
+
+KIND = "rtx6000"
+SEED = 123
+N_FREQS = 9
+REPS = 3
+
+SPEC = WorkloadSpec(iters_per_kernel=8, flops_per_iter=256e-3,
+                    delay_iters=2, confirm_iters=4)
+MEASURE = MeasureConfig(min_measurements=8, max_measurements=24,
+                        rse_check_every=8, rse_target=0.0,
+                        max_retries=100, min_confirm=4)
+
+
+def _grid(n_freqs: int):
+    """n_freqs evenly spaced entries of the device frequency table plus
+    the shared calibration and pair task."""
+    opts = {"kind": KIND}
+    dev = create_backend("vmapped-sim", **opts, seed=SEED)
+    fs = dev.frequencies
+    step = (len(fs) - 1) / (n_freqs - 1)
+    freqs = sorted({float(fs[round(i * step)]) for i in range(n_freqs)})
+    cal = calibrate(dev, freqs, SPEC)
+    pairs = valid_pairs(cal)
+    task = PairTask.make("vmapped-sim", opts, cal, SPEC, MEASURE)
+    return task, pairs
+
+
+def _assert_identical(pairs, serial, batched) -> None:
+    for p in pairs:
+        pm_s, gt_s = serial[p]
+        pm_b, gt_b = batched[p]
+        same = (pm_s.status == pm_b.status
+                and pm_s.retries == pm_b.retries
+                and pm_s.latencies.shape == pm_b.latencies.shape
+                and np.array_equal(pm_s.latencies, pm_b.latencies)
+                and (pm_s.rse == pm_b.rse
+                     or (np.isinf(pm_s.rse) and np.isinf(pm_b.rse)))
+                and repr(gt_s) == repr(gt_b))
+        assert same, (
+            f"batched result diverged from serial at pair {p}: "
+            f"status {pm_s.status}/{pm_b.status} "
+            f"retries {pm_s.retries}/{pm_b.retries}")
+
+
+def bench_sweep():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    reps = 1 if smoke else REPS
+    task, pairs = _grid(3 if smoke else N_FREQS)
+
+    serial_s = batched_s = float("inf")
+    serial = batched = None
+    for _ in range(reps):
+        t0 = time.process_time()
+        serial = {p: run_pair_task(task, p) for p in pairs}
+        serial_s = min(serial_s, time.process_time() - t0)
+        t0 = time.process_time()
+        batched = run_batched_sweep(task, pairs)
+        batched_s = min(batched_s, time.process_time() - t0)
+        _assert_identical(pairs, serial, batched)
+
+    n = len(pairs)
+    ratio = serial_s / batched_s
+    per_pair_b = batched_s / n * 1e6
+    per_pair_s = serial_s / n * 1e6
+    statuses = sorted({pm.status for pm, _ in batched.values()})
+    yield (f"sweep_serial_{n}pairs", per_pair_s,
+           f"total={serial_s:.3f}s cpu, per-pair run_pair_task loop")
+    yield (f"sweep_batched_{n}pairs", per_pair_b,
+           f"total={batched_s:.3f}s cpu, speedup={ratio:.2f}x, "
+           f"bit-identical statuses={statuses}")

@@ -35,6 +35,12 @@ class BackendEntry:
     # stream-bound backends (cuda-nvml, trace-replay) keep the default
     # False and are measured on their single explicit instance.
     virtual: bool = False
+    # batchable backends expose the simulator's split wait protocol
+    # (_wait_draw / event timeline), which the batched sweep engine
+    # (repro.core.batched_sweep) fuses across pair lanes.  Lets sessions
+    # reject engine="batched" on unsuitable backends before building a
+    # single device.
+    batchable: bool = False
 
     def missing_requirements(self) -> list[str]:
         return [m for m in self.requires
@@ -49,12 +55,13 @@ _REGISTRY: dict[str, BackendEntry] = {}
 
 
 def register_backend(name: str, *, description: str = "",
-                     requires: tuple[str, ...] = (), virtual: bool = False):
+                     requires: tuple[str, ...] = (), virtual: bool = False,
+                     batchable: bool = False):
     """Decorator registering ``factory`` under ``name`` (idempotent per
     name: re-registration overwrites, so module reloads are harmless)."""
     def deco(factory: Callable[..., AcceleratorBackend]):
         _REGISTRY[name] = BackendEntry(name, factory, description, requires,
-                                       virtual)
+                                       virtual, batchable)
         return factory
     return deco
 

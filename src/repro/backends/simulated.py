@@ -13,7 +13,7 @@ from repro.dvfs.transition_models import make_device
 @register_backend(
     "simulated",
     description="SimulatedAccelerator calibrated to the paper's three GPUs",
-    virtual=True)
+    virtual=True, batchable=True)
 def make_simulated(kind: str = "a100", *, seed: int = 0, unit_seed: int = 0,
                    n_cores: int | None = None, **overrides):
     return make_device(kind, seed=seed, unit_seed=unit_seed,

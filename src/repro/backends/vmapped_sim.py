@@ -1,15 +1,21 @@
 """`vmapped-sim` backend: batched, always-vectorized simulator.
 
-Same device model and statistics as `simulated`, with two differences:
+Same device model and statistics as `simulated`, with three differences:
 
 * the segment-wise cumulative-sum timestamp evaluation is mandatory (the
-  per-iteration reference loop is rejected), and
+  per-iteration reference loop is rejected),
 * :meth:`run_kernel_batch` evaluates a back-to-back train of identical
   kernels — all cores x all passes — in ONE vectorized numpy pass over the
   frequency-event timeline, instead of one `launch/wait` round-trip per
   kernel.  The train is gapless: no per-kernel launch overhead or start
   skew re-roll, which is exactly the calibration warm-up burst shape
-  (paper Alg. 1) where only the last kernel's statistics matter.
+  (paper Alg. 1) where only the last kernel's statistics matter, and
+* :func:`eval_timestamps_lanes` extends the same segment-wise evaluation
+  from one device to a whole GRID of independent pair-seeded devices
+  ("lanes"): every lane's cores become rows of one (lanes*cores, iters)
+  program evaluated against per-lane frequency timelines.  This is the
+  switch-pass analogue of :meth:`run_kernel_batch` and the numeric core of
+  the batched sweep engine (:mod:`repro.core.batched_sweep`).
 """
 from __future__ import annotations
 
@@ -18,6 +24,129 @@ import numpy as np
 from repro.backends.registry import register_backend
 from repro.dvfs.device_model import SimulatedAccelerator
 from repro.dvfs.transition_models import make_device
+
+
+def eval_timestamps_lanes(base_iter_s: float, t0: np.ndarray,
+                          noise_t: np.ndarray, lane_of_row: np.ndarray,
+                          ev_t_pad: np.ndarray, ev_f_pad: np.ndarray,
+                          f_max: float, *, ends_only: bool = False
+                          ) -> np.ndarray:
+    """Segment-wise cumsum evaluation of MANY lanes' kernels at once.
+
+    Everything is laid out iteration-major ("transposed"): ``noise_t`` is
+    (iters, R) with R = lanes*cores columns, and the result is the
+    (iters + 1, R) iteration-boundary timestamp stack — or just the (R,)
+    final boundaries when ``ends_only`` is set (warm-up kernels: the
+    timestamps are never read, only the completion time and the RNG
+    stream matter).  ``lane_of_row`` maps each column to its lane;
+    ``ev_t_pad`` / ``ev_f_pad`` are (events, lanes) frequency timelines
+    right-padded with ``+inf`` times (at least one pad row, so
+    ``seg + 1`` always gathers).
+
+    Iteration-major matters on this hot path: the loop advances ALL
+    columns one iteration per step with two contiguous R-wide ops (one
+    multiply, one add), instead of R tiny per-row inner loops or the
+    windowed scatter/gather rounds of the single-device evaluator —
+    both of which dominate wall time for the 8-24-iteration kernels
+    sweeps actually use, where nearly every column crosses a frequency
+    event (the warm-up kernel brackets the f_init arrival, the measured
+    kernel brackets the switch) and windowing degenerates.
+
+    Bit-identical per column to
+    :meth:`SimulatedAccelerator._eval_timestamps_vectorized` on the
+    corresponding single device: the frequency is still sampled at each
+    iteration's start (``searchsorted side='right'`` semantics, computed
+    here as a padded comparison count), each duration is the same single
+    ``noise * (base * (f_max / f))`` multiply, and each boundary is one
+    ``t + dur`` add.  The windowed evaluator's ``np.add.accumulate``
+    IS that same sequential add chain — it restarts each round from the
+    last committed boundary and discards (then recomputes) everything
+    past the segment end — so both schemes perform the identical
+    additions in the identical order, just one column per device core.
+    Segment state (``seg``/``seg_end``/``scale``) advances incrementally
+    for the few columns that cross an event each step, which is where
+    the per-column "recompute the window with the new scale" of the
+    windowed scheme collapses to a small fancy-indexed update.
+    """
+    it, r_total = noise_t.shape
+    if it >= 128 and r_total <= 512:
+        # few columns, long kernels: the iteration loop would be all numpy
+        # dispatch.  The windowed scheme (bit-identical, see its docstring)
+        # covers a whole segment per round instead.
+        return _eval_lanes_windowed(base_iter_s, t0, noise_t, lane_of_row,
+                                    ev_t_pad, ev_f_pad, f_max,
+                                    ends_only=ends_only)
+    # f_max / f per (event, lane) once; `base * pre[...]` below keeps the
+    # serial `base * (f_max / f)` operation order exactly
+    pre_scale = f_max / ev_f_pad
+    # segment of each column at its start time: count events <= t, like
+    # searchsorted(side="right") against that column's lane timeline
+    ev_t = ev_t_pad[:, lane_of_row]                      # (E, R) gather
+    seg = np.maximum((ev_t <= t0[None, :]).sum(axis=0) - 1, 0)
+    scale = base_iter_s * pre_scale[seg, lane_of_row]
+    seg_end = ev_t_pad[seg + 1, lane_of_row]
+    bounds = None
+    if ends_only:
+        t = t0.astype(np.float64, copy=True)
+    else:
+        bounds = np.empty((it + 1, r_total))
+        bounds[0] = t0
+    dur = np.empty(r_total)
+    cross = np.empty(r_total, dtype=bool)
+    for k in range(it):
+        np.multiply(noise_t[k], scale, out=dur)
+        if bounds is None:
+            np.add(t, dur, out=t)
+        else:
+            t = bounds[k + 1]
+            np.add(bounds[k], dur, out=t)
+        if k == it - 1:                  # last boundary: freq never read
+            break
+        # an iteration starting exactly at seg_end belongs to the next
+        # segment (events at time t count as <= t), hence >=; columns in
+        # the final segment (seg_end = inf) never cross.  A column can
+        # skip several closely-spaced events in one iteration, so re-test
+        # the shrinking crossed set until every column's boundary holds.
+        np.greater_equal(t, seg_end, out=cross)
+        if cross.any():
+            idx = np.flatnonzero(cross)
+            while idx.size:
+                seg[idx] += 1
+                ln = lane_of_row[idx]
+                s = seg[idx]
+                seg_end[idx] = ev_t_pad[s + 1, ln]
+                scale[idx] = base_iter_s * pre_scale[s, ln]
+                idx = idx[seg_end[idx] <= t[idx]]
+    return t if ends_only else bounds
+
+
+def _eval_lanes_windowed(base_iter_s, t0, noise_t, lane_of_row,
+                         ev_t_pad, ev_f_pad, f_max, *, ends_only=False):
+    """Few-columns / many-iterations fallback: the per-iteration loop
+    above would be all numpy dispatch, so delegate each lane to the
+    single-device segment-windowed evaluator in its native row-major
+    layout — bitwise identical by construction, since that IS the serial
+    code path.  The transposes in and out are a few MB per lane, noise
+    in the bandwidth the evaluation itself touches anyway."""
+    it, r_total = noise_t.shape
+    n_lanes = ev_t_pad.shape[1]
+    out = (np.empty(r_total) if ends_only
+           else np.empty((it + 1, r_total)))
+    for i in range(n_lanes):
+        cols = np.flatnonzero(lane_of_row == i)
+        if not cols.size:
+            continue
+        keep = np.isfinite(ev_t_pad[:, i])               # drop inf padding
+        ev_t = ev_t_pad[keep, i]
+        ev_f = ev_f_pad[keep, i]
+        noise = np.ascontiguousarray(noise_t[:, cols].T)
+        b = SimulatedAccelerator._eval_timestamps_vectorized(
+            base_iter_s, t0[cols], noise, ev_t, ev_f, f_max)
+        if ends_only:
+            out[cols] = b[:, -1]
+        else:
+            out[:, cols] = b.T
+    return out
 
 
 class VmappedSimAccelerator(SimulatedAccelerator):
@@ -43,7 +172,7 @@ class VmappedSimAccelerator(SimulatedAccelerator):
     "vmapped-sim",
     description="SimulatedAccelerator with mandatory vectorized evaluation "
                 "and batched multi-kernel passes",
-    virtual=True)
+    virtual=True, batchable=True)
 def make_vmapped_sim(kind: str = "a100", *, seed: int = 0, unit_seed: int = 0,
                      n_cores: int | None = None, **overrides):
     overrides.setdefault("wait_impl", "vectorized")

@@ -28,13 +28,19 @@ def _store(args) -> ArtifactStore:
 
 def cmd_run(args) -> int:
     spec = CampaignSpec.load(args.spec)
-    runner = CampaignRunner(spec, _store(args), executor=args.executor,
-                            max_workers=args.max_workers, trace=args.trace,
-                            heartbeat_timeout_s=args.heartbeat_timeout,
-                            speculate=not args.no_speculate)
+    try:
+        runner = CampaignRunner(spec, _store(args), executor=args.executor,
+                                max_workers=args.max_workers,
+                                engine=args.engine, trace=args.trace,
+                                heartbeat_timeout_s=args.heartbeat_timeout,
+                                speculate=not args.no_speculate)
+    except ValueError as exc:           # e.g. processes + batched
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
     print(f"campaign {spec.campaign_id()} ({spec.name}): "
           f"{len(spec.units())} unit(s) [{args.executor}"
           + (f" x{args.max_workers}" if args.executor != "serial" else "")
+          + (f", {args.engine} engine" if args.engine != "serial" else "")
           + "]")
     result = runner.run(verbose=not args.quiet)
     for o in result.failed():
@@ -107,6 +113,13 @@ def build_parser() -> argparse.ArgumentParser:
                    type=int, default=4,
                    help="worker count for threads/processes "
                         "(--workers kept as an alias)")
+    p.add_argument("--engine", choices=("serial", "batched"),
+                   default="serial",
+                   help="per-unit sweep engine: serial (per-pair "
+                        "reference loop) or batched (the whole pair grid "
+                        "as lock-stepped vectorized dispatches; "
+                        "bit-identical tables, virtual backends only, "
+                        "incompatible with --executor processes)")
     p.add_argument("--heartbeat-timeout", type=float, default=60.0,
                    help="processes only: seconds of worker silence "
                         "before it is declared hung and its unit "

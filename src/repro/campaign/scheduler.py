@@ -23,6 +23,13 @@ Scheduling is selected by ``executor``:
                      and speculative straggler re-dispatch.  Unit tables
                      stay bit-identical to the serial schedule because
                      sessions measure every pair on a pair-seeded device.
+
+Orthogonally, ``engine`` selects how each unit measures its own pair
+grid: ``serial`` (the per-pair reference loop) or ``batched`` (the
+lock-stepped lane engine, :mod:`repro.core.batched_sweep`).  Both land
+on identical tables; ``processes`` + ``batched`` is rejected — one
+fuses units across workers, the other fuses pairs within a unit, and
+nesting them schedules nothing.
 """
 from __future__ import annotations
 
@@ -86,13 +93,22 @@ def _ground_truth(session) -> dict[tuple[float, float], float]:
 class CampaignRunner:
     def __init__(self, spec: CampaignSpec, store: ArtifactStore | None = None,
                  *, executor: str = "serial", max_workers: int = 4,
-                 trace: bool = False, heartbeat_timeout_s: float = 60.0,
+                 engine: str = "serial", trace: bool = False,
+                 heartbeat_timeout_s: float = 60.0,
                  straggler_ratio: float = 3.0, speculate: bool = True,
                  fault_plan=None):
+        if engine == "batched" and executor == "processes":
+            raise ValueError(
+                "executor='processes' farms whole units out to workers, "
+                "while engine='batched' already fuses each unit's sweep "
+                "into one lock-stepped program; combining them would "
+                "nest schedulers with nothing to gain — pick one "
+                "(processes for many units, batched for big grids)")
         self.spec = spec
         self.store = store if store is not None else ArtifactStore()
         self.executor = executor
         self.max_workers = max_workers
+        self.engine = engine
         # record each unit's telemetry (repro.trace) and store it as a
         # campaign artifact; the trace covers THIS run's interactions — a
         # resumed unit's already-persisted pairs are loaded, not re-measured,
@@ -172,7 +188,8 @@ class CampaignRunner:
             kw = {} if recorder is None else {"trace": recorder}
             try:
                 session = unit.build_session(
-                    out_dir=campaign.session_dir(unit.key), **kw)
+                    out_dir=campaign.session_dir(unit.key),
+                    engine=self.engine, **kw)
                 table = session.run(verbose=False)
                 wall = time.perf_counter() - t0
                 gt_acc.update(_ground_truth(session))

@@ -143,8 +143,8 @@ class UnitSpec:
         return f"{self.device.key}@{self.measure.key}"
 
     def build_session(self, out_dir: str | None = None,
-                      executor: str = "serial",
-                      trace=None) -> MeasurementSession:
+                      executor: str = "serial", trace=None,
+                      engine: str = "serial") -> MeasurementSession:
         device = self.device.create_device()
         return MeasurementSession(
             device, self.device.resolve_frequencies(device),
@@ -152,7 +152,7 @@ class UnitSpec:
                           executor=executor, out_dir=out_dir),
             backend=self.device.backend,
             backend_options=self.device.options_dict,
-            device_name=self.device.key, trace=trace)
+            device_name=self.device.key, trace=trace, engine=engine)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,439 @@
+"""Accelerator-native batched sweep engine: the whole (f_init, f_target)
+grid measured as a handful of vectorized dispatches.
+
+After PR 5 the campaign layer is process-parallel, but the measurement
+core still runs one ``measure_pair`` at a time: every pass pays ~200
+Python/numpy dispatches (16 scalar sync exchanges, the segment-eval
+rounds, detection, the confirm cumsums) on arrays whose math is over in
+microseconds.  On a one-core host no executor can win that back — the
+dispatch overhead IS the sweep.
+
+This engine runs every pair as a *lane* of one lock-stepped program:
+
+* each lane owns a freshly built, pair-seeded device
+  (``pair_seed(base_seed, f_init, f_target)`` — the PR-5 determinism
+  contract), so lanes never interact and lane order cannot matter;
+* per round (= one Alg. 2 pass per still-active lane) the scalar device
+  protocol — ``set_frequency``, ``launch_kernel``, ``usleep`` — runs
+  per lane through the *unmodified* device methods, keeping wake-up,
+  throttle and trajectory semantics identical by construction, while
+  every array stage is fused across lanes: the 16-exchange timer sync
+  becomes one (lanes, 16) program, the segment-wise cumsum wait
+  evaluation runs all lanes' cores as rows of one
+  :func:`repro.backends.vmapped_sim.eval_timestamps_lanes` call, and
+  phase-2 detection + the reverse-cumsum suffix confirm run on the
+  (lanes*cores, iters) stack without ever leaving numpy;
+* the Alg. 2 retry/RSE loop is a masked still-active-pairs iteration:
+  converged, power-throttled and retry-exhausted lanes drop out of the
+  stack, so stragglers keep iterating on ever-smaller dispatches.
+
+Bit-exactness contract: per lane, every RNG draw happens through that
+lane's own generator in exactly the serial order (one vectorized
+``uniform(0, j, 32)`` fills the same stream as 32 scalar sync draws),
+and every fused array op reduces/scans only within rows, so each pair's
+``PairMeasurement`` is bit-identical to ``run_pair_task`` on the same
+seed — serial, threaded, process and batched schedules all agree.  The
+per-pair path stays in the tree as the reference, exactly like
+``wait_impl="loop"`` and the analysis engine's ``impl="matrix"``.
+"""
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+from repro.core import stats as statsmod
+from repro.core.evaluation import MeasureConfig, PairMeasurement
+from repro.core.pairtask import PairTask, extract_ground_truth, pair_seed
+from repro.core.switching import detect_switch
+from repro.core.workload import WorkloadSpec
+
+_SYNC_EXCHANGES = 16          # synchronize_timers default
+_SYNC_PROC_S = 2e-6           # device-side turnaround (sync_exchange)
+_Z = 1.96                     # measure_switch_once defaults
+_TOL_FRAC = 0.02
+
+
+class _Lane:
+    """One pair's measurement state: its device plus the exact
+    ``measure_pair`` bookkeeping (latencies, running RSE, retries)."""
+
+    __slots__ = ("device", "f_init", "f_target", "target", "init_iter",
+                 "lo", "hi", "tol", "lat", "running", "retries", "offset",
+                 "t_s", "warm_h", "meas_h", "result")
+
+    def __init__(self, device, f_init: float, f_target: float, cal,
+                 k_sigma: float):
+        self.device = device
+        self.f_init = f_init
+        self.f_target = f_target
+        self.target = cal.baselines[f_target]
+        self.init_iter = cal.baselines[f_init].mean
+        self.lo, self.hi = statsmod.two_sigma_band(self.target, k_sigma)
+        self.tol = _TOL_FRAC * self.target.mean
+        self.lat: list[float] = []
+        self.running = statsmod.RunningStats()
+        self.retries = 0
+        self.offset = 0.0             # clock-sync offset, current pass
+        self.t_s = 0.0                # change-request time, current pass
+        self.warm_h = None
+        self.meas_h = None
+        self.result: tuple[PairMeasurement, dict] | None = None
+
+    def finish(self, status: str, rse: float) -> None:
+        pm = PairMeasurement(self.f_init, self.f_target,
+                             np.asarray(self.lat), status, self.retries,
+                             rse)
+        self.result = (pm, extract_ground_truth(self.device))
+
+
+def _require_batchable(device):
+    if not (hasattr(device, "_wait_draw") and hasattr(device, "_events")):
+        raise ValueError(
+            "the batched sweep engine drives SimulatedAccelerator-family "
+            f"devices; {type(device).__name__} exposes no split wait "
+            "protocol — use the serial engine for this backend")
+
+
+def _event_pads(lanes, handles):
+    """Per-lane frequency timelines, sliced to the events that can matter
+    for kernels starting at ``handle.start_dev`` (every core starts at or
+    after it) and right-padded with ``+inf``.  The slice keeps the padded
+    table a few columns wide even though device timelines grow over the
+    sweep — the serial path pays that growth on every lookup instead."""
+    tails = []
+    for lane, h in zip(lanes, handles):
+        dev = lane.device
+        i = max(bisect.bisect_right(dev._ev_t, h.start_dev) - 1, 0)
+        tails.append((dev._ev_t[i:], dev._ev_f[i:]))
+    width = max(len(tt) for tt, _ in tails) + 1
+    ev_t = np.full((width, len(tails)), np.inf)      # (events, lanes)
+    ev_f = np.ones((width, len(tails)))
+    for i, (tt, tf) in enumerate(tails):
+        ev_t[:len(tt), i] = tt
+        ev_f[:len(tt), i] = tf
+    return ev_t, ev_f
+
+
+def _batched_wait(lanes, handles, n_iters, base_iter_s, f_max,
+                  ends_only=False):
+    """All active lanes' ``wait()`` as one fused evaluation.  Per lane the
+    RNG draws come from the device's own :meth:`_wait_draw` (exact serial
+    stream); the segment-wise bounds evaluation crosses lanes.  Returns
+    the unquantized iteration-major (I + 1, L*C) boundary timestamps, or
+    ``None`` for ``ends_only`` (warm-up) waits, which skip materializing
+    boundaries nobody reads."""
+    from repro.backends.vmapped_sim import eval_timestamps_lanes
+    n_lanes = len(lanes)
+    n_cores = lanes[0].device.cfg.n_cores
+    t0 = np.empty(n_lanes * n_cores)
+    noise_t = np.empty((n_iters, n_lanes * n_cores))  # iteration-major
+    for i, (lane, h) in enumerate(zip(lanes, handles)):
+        lt0, ln = lane.device._wait_draw(h)
+        t0[i * n_cores:(i + 1) * n_cores] = lt0
+        noise_t[:, i * n_cores:(i + 1) * n_cores] = ln.T
+    ev_t, ev_f = _event_pads(lanes, handles)
+    lane_of_row = np.repeat(np.arange(n_lanes), n_cores)
+    out = eval_timestamps_lanes(
+        base_iter_s, t0, noise_t, lane_of_row, ev_t, ev_f, f_max,
+        ends_only=ends_only)
+    if ends_only:
+        bounds = None
+        ends = out.reshape(n_lanes, n_cores).max(axis=1)
+    else:
+        bounds = out                                  # (iters + 1, L*C)
+        ends = bounds[-1].reshape(n_lanes, n_cores).max(axis=1)
+    # per-lane completion: busy/activity marks + host clock catch-up,
+    # through the device's own finalize (max over one lane's cores only)
+    for i, lane in enumerate(lanes):
+        lane.device._wait_finalize(float(ends[i]))
+    return bounds
+
+
+def _batched_sync(lanes):
+    """The 16-exchange IEEE-1588 sync for every active lane at once.  One
+    ``uniform(0, j, 32)`` per lane fills the identical RNG stream as the
+    serial path's 32 scalar draws; the exchange arithmetic is elementwise
+    over lanes with the exact serial operation order, and best-of-n picks
+    the first minimum-RTT exchange like ``sync_from_exchanges``."""
+    dev0 = lanes[0].device
+    jitter = dev0.cfg.link_jitter_s
+    comm = dev0.model.comm_delay_s
+    off = dev0.cfg.clock_offset_s
+    drift = dev0.cfg.clock_drift
+    n_lanes = len(lanes)
+    jit = np.empty((n_lanes, 2 * _SYNC_EXCHANGES))
+    host = np.empty(n_lanes)
+    dev_t0 = np.empty(n_lanes)
+    for i, lane in enumerate(lanes):
+        jit[i] = lane.device.rng.uniform(0, jitter, 2 * _SYNC_EXCHANGES)
+        host[i] = lane.device._host_t
+        dev_t0[i] = lane.device._t0
+    offs = np.empty((n_lanes, _SYNC_EXCHANGES))
+    rtts = np.empty((n_lanes, _SYNC_EXCHANGES))
+    for k in range(_SYNC_EXCHANGES):
+        t1 = host
+        x = t1 + (comm + jit[:, 2 * k])                 # t1 + d1
+        t2 = x + off + drift * (x - dev_t0)
+        t3 = t2 + _SYNC_PROC_S
+        host = (x + _SYNC_PROC_S) + (comm + jit[:, 2 * k + 1])
+        t4 = host
+        rtts[:, k] = (t4 - t1) - (t3 - t2)
+        offs[:, k] = ((t2 - t1) + (t3 - t4)) / 2.0
+    best = np.argmin(rtts, axis=1)                      # first minimum
+    offset = offs[np.arange(n_lanes), best]
+    for i, lane in enumerate(lanes):
+        lane.device._host_t = host[i]
+        lane.offset = offset[i]
+
+
+def _lane_rows(lanes, n_cores, cache):
+    """Per-row detection constants (band edges, target stats, tolerance)
+    replicated core-wise, memoized on the identity of the active lane
+    list — in the steady state every round sees the same lanes, so the
+    ``np.repeat`` stack is built once per active-set change."""
+    key = tuple(map(id, lanes))
+    hit = cache.get("key")
+    if hit != key:
+        cache["key"] = key
+        cache["lo"] = np.repeat([lane.lo for lane in lanes], n_cores)
+        cache["hi"] = np.repeat([lane.hi for lane in lanes], n_cores)
+        cache["t_mean"] = np.repeat(
+            [lane.target.mean for lane in lanes], n_cores)
+        cache["t_se"] = np.repeat(
+            [lane.target.se for lane in lanes], n_cores)
+        cache["tol"] = np.repeat([lane.tol for lane in lanes], n_cores)
+    return cache
+
+
+def _pairwise_colsum(cols):
+    """``np.add.reduce`` over axis 1 of ``cols.T`` — i.e. numpy's pairwise
+    summation tree — computed column-wise on the iteration-major (n, R)
+    stack, so every partial is one contiguous R-wide add instead of R
+    short per-row loops.  Mirrors numpy's ``pairwise_sum``: sequential
+    below 8 terms, an 8-accumulator unrolled block up to 128, halving
+    recursion (rounded to a multiple of 8) above.  Bit-exactness against
+    the serial confirm's ``mean(axis=1)`` hinges on reproducing that tree
+    and is pinned by the batched-vs-serial identity tests."""
+    n = cols.shape[0]
+    if n < 8:
+        res = np.zeros(cols.shape[1])
+        for k in range(n):
+            res += cols[k]
+        return res
+    if n <= 128:
+        r8 = [cols[j].copy() for j in range(8)]
+        k = 8
+        while k + 8 <= n:
+            for j in range(8):
+                r8[j] += cols[k + j]
+            k += 8
+        res = ((r8[0] + r8[1]) + (r8[2] + r8[3])) \
+            + ((r8[4] + r8[5]) + (r8[6] + r8[7]))
+        while k < n:
+            res += cols[k]
+            k += 1
+        return res
+    n2 = (n // 2) - ((n // 2) % 8)
+    return _pairwise_colsum(cols[:n2]) + _pairwise_colsum(cols[n2:])
+
+
+def _batched_detect(lanes, bounds, t_s, mc: MeasureConfig, cache=None):
+    """Alg. 2 detection + suffix confirm fused over every active lane:
+    quantize once, band-match, then the reverse-cumsum suffix mean/std of
+    ``_confirm_vectorized`` on the iteration-major (I + 1, lanes*cores)
+    boundary stack.  All reductions/scans stay within columns (= one core
+    of one lane), so each lane's outcome is bit-identical to
+    ``detect_switch`` on its own pass.  Returns ``(viable, latency)``
+    arrays over lanes (latency valid where viable)."""
+    n_rows = bounds.shape[1]
+    n_lanes = len(lanes)
+    n_cores = n_rows // n_lanes
+    q = lanes[0].device.cfg.timer_resolution_s
+    qb = bounds
+    qb /= q                                             # quantize in place
+    np.floor(qb, out=qb)
+    qb *= q
+    starts, ends = qb[:-1], qb[1:]
+    n_iters = starts.shape[0]
+    if n_iters >= 128 and n_rows <= 512:
+        # few lanes, long kernels: the fused column-major path would be
+        # all dispatch (mirroring the eval fallback in vmapped_sim) — run
+        # the serial detector per lane on its native row-major view
+        viable = np.zeros(n_lanes, dtype=bool)
+        latency = np.full(n_lanes, -np.inf)
+        for i, lane in enumerate(lanes):
+            sl = slice(i * n_cores, (i + 1) * n_cores)
+            data = np.stack([starts[:, sl].T, ends[:, sl].T], axis=-1)
+            res = detect_switch(data, float(t_s[i]), lane.target,
+                                k_sigma=mc.k_sigma, z=_Z,
+                                tol_frac=_TOL_FRAC,
+                                min_confirm=mc.min_confirm)
+            if res is not None:
+                viable[i] = True
+                latency[i] = res.latency
+        return viable, latency
+    durs = ends - starts                                # (I, R)
+    t_s_row = np.repeat(t_s, n_cores)
+    c = _lane_rows(lanes, n_cores, cache if cache is not None else {})
+    in_band = durs >= c["lo"][None, :]
+    in_band &= durs <= c["hi"][None, :]
+    in_band &= starts >= t_s_row[None, :]
+    # first in-band hit per column without a short-axis argmax: once any
+    # iteration hits, `seen` stays True, so counting True rows gives
+    # n_iters - first_hit (and 0 where there is no hit at all)
+    seen = np.logical_or.accumulate(in_band, axis=0, out=in_band)
+    has_hit = seen[-1]
+    first_hit = n_iters - np.count_nonzero(seen, axis=0)
+
+    core_lat = np.full(n_rows, np.nan)
+    cand = has_hit & (n_iters - first_hit >= mc.min_confirm)
+    rows = np.flatnonzero(cand)
+    if rows.size:
+        # durs is a throwaway temp: center it in place (skipping the
+        # column gather entirely when every column is a candidate)
+        d = durs if rows.size == n_rows else durs[:, rows]
+        center = _pairwise_colsum(d) / n_iters          # mean(axis=1).T
+        d -= center[None, :]                            # cd, in place
+        i = first_hit[rows]
+        ir = n_iters - 1 - i                            # reversed index
+        # the reference reverse cumsums (cd[:, ::-1] scans), iteration-
+        # major and truncated to the rows the suffix picks can reach — a
+        # prefix scan never reads past its slice, so the kept entries are
+        # bit-identical to the full scan
+        mi = int(ir.max()) + 1
+        rev = d[::-1][:mi]
+        s1r = np.add.accumulate(rev, axis=0)
+        sq = np.square(rev)                             # (cd*cd) reversed
+        np.add.accumulate(sq, axis=0, out=sq)
+        rr = np.arange(rows.size)
+        n = (n_iters - i).astype(np.float64)
+        m = s1r[ir, rr] / n
+        mean = center + m
+        var = np.where(n > 1, (sq[ir, rr] - n * m * m)
+                       / np.maximum(n - 1, 1), 0.0)
+        se = np.sqrt(np.maximum(var, 0.0) / n + c["t_se"][rows] ** 2)
+        diff = mean - c["t_mean"][rows]
+        ok = ((diff - _Z * se <= 0.0) & (diff + _Z * se >= 0.0)) \
+            | (np.abs(diff) < c["tol"][rows])
+        sel = rows[ok]
+        core_lat[sel] = ends[i[ok], sel] - t_s_row[sel]
+
+    cl = core_lat.reshape(n_lanes, n_cores)
+    viable = ~np.isnan(cl).all(axis=1)
+    latency = np.where(np.isnan(cl), -np.inf, cl).max(axis=1)
+    return viable, latency
+
+
+def _after_pass(lane: _Lane, viable: bool, latency: float,
+                mc: MeasureConfig) -> None:
+    """One lane's ``measure_pair`` bookkeeping after a pass: retry budget,
+    throttle checks every 5 measurements (power -> skip pair; thermal ->
+    drop the newest 5 + cool-down), RSE-driven stopping.  Statement-level
+    mirror of the serial loop body."""
+    if not viable:
+        lane.retries += 1
+        if lane.retries > mc.max_retries:
+            lane.finish("undetectable", float("inf"))
+        return
+    lane.lat.append(latency)
+    lane.running.add(latency)
+    if len(lane.lat) % mc.throttle_check_every == 0:
+        flags = lane.device.throttle_reasons()
+        if "power" in flags:
+            lane.finish("power_throttled", float("inf"))
+            return
+        if "thermal" in flags:
+            for v in lane.lat[-mc.throttle_check_every:]:
+                lane.running.remove(v)
+            del lane.lat[-mc.throttle_check_every:]     # drop newest 5
+            lane.device.usleep(mc.cooldown_s)
+            return                                      # serial `continue`
+    if (len(lane.lat) >= mc.min_measurements
+            and len(lane.lat) % mc.rse_check_every == 0
+            and lane.running.rse() < mc.rse_target):
+        lane.finish("ok", lane.running.rse())
+        return
+    if len(lane.lat) >= mc.max_measurements:            # serial loop exit
+        lane.finish("ok", lane.running.rse())
+
+
+class BatchedSweepEngine:
+    """Measure a pair grid in lock-stepped batched rounds (module
+    docstring).  Construct once per sweep; :meth:`run` consumes a
+    :class:`~repro.core.pairtask.PairTask` (the same picklable spec the
+    serial/process executors use) plus the pair list."""
+
+    def __init__(self, task: PairTask):
+        self.task = task
+
+    def _build_lane(self, pair) -> _Lane:
+        from repro.backends import create_backend
+        f_init, f_target = pair
+        device = create_backend(
+            self.task.backend, **dict(self.task.options),
+            seed=pair_seed(self.task.base_seed, f_init, f_target))
+        _require_batchable(device)
+        return _Lane(device, f_init, f_target, self.task.cal,
+                     self.task.measure.k_sigma)
+
+    def run(self, pairs, on_result=None):
+        """Measure every pair; returns ``{pair: (PairMeasurement,
+        ground_truth)}``.  ``on_result(pair, (pm, gt))`` fires as each
+        lane completes (the session's persistence hook), like the
+        executors' completion callback."""
+        task = self.task
+        spec: WorkloadSpec = task.spec
+        mc: MeasureConfig = task.measure
+        results: dict = {}
+
+        def _collect(lane: _Lane) -> None:
+            pair = (lane.f_init, lane.f_target)
+            results[pair] = lane.result
+            if on_result is not None:
+                on_result(pair, lane.result)
+
+        lanes = [self._build_lane(p) for p in pairs]
+        for lane in lanes:                  # degenerate max_measurements=0
+            if len(lane.lat) >= mc.max_measurements:
+                lane.finish("ok", lane.running.rse())
+                _collect(lane)
+        active = [lane for lane in lanes if lane.result is None]
+
+        n_iters = spec.iters_per_kernel
+        warm_iters = spec.iters_per_kernel // 2
+        flops = spec.flops_per_iter
+        f_max = max(lanes[0].device.cfg.frequencies) if lanes else 0.0
+        det_cache: dict = {}
+        while active:
+            # --- one Alg. 2 pass for every still-active lane ---------- #
+            _batched_sync(active)
+            for lane in active:
+                lane.device.set_frequency(lane.f_init)
+                lane.warm_h = lane.device.launch_kernel(warm_iters, flops)
+            _batched_wait(active, [lane.warm_h for lane in active],
+                          warm_iters, flops, f_max,
+                          ends_only=True)               # warm-up: run only
+            for lane in active:
+                dev = lane.device
+                lane.meas_h = dev.launch_kernel(n_iters, flops)
+                dev.usleep(spec.delay_iters * lane.init_iter)
+                lane.t_s = dev.host_now() + lane.offset  # Alg.2 line 6
+                dev.set_frequency(lane.f_target)
+            bounds = _batched_wait(active,
+                                   [lane.meas_h for lane in active],
+                                   n_iters, flops, f_max)
+            viable, latency = _batched_detect(
+                active, bounds, np.array([lane.t_s for lane in active]), mc,
+                det_cache)
+            for i, lane in enumerate(active):
+                _after_pass(lane, bool(viable[i]), float(latency[i]), mc)
+                if lane.result is not None:
+                    _collect(lane)
+            active = [lane for lane in active if lane.result is None]
+        return results
+
+
+def run_batched_sweep(task: PairTask, pairs, *, on_result=None):
+    """Functional convenience over :class:`BatchedSweepEngine`."""
+    return BatchedSweepEngine(task).run(pairs, on_result=on_result)

@@ -24,6 +24,7 @@ class MeasureConfig:
     cooldown_s: float = 10.0
     max_retries: int = 50            # bound on Alg.2 GOTO loops per pass
     k_sigma: float = 2.0
+    min_confirm: int = 64            # suffix length the confirm step needs
 
 
 @dataclasses.dataclass
@@ -61,7 +62,8 @@ def measure_pair(device, f_init: float, f_target: float, cal,
     retries = 0
     while len(lat) < mc.max_measurements:
         res = measure_switch_once(device, f_init, f_target, cal, spec,
-                                  k_sigma=mc.k_sigma)
+                                  k_sigma=mc.k_sigma,
+                                  min_confirm=mc.min_confirm)
         if res is None:
             retries += 1
             if retries > mc.max_retries:

@@ -85,16 +85,57 @@ class SessionConfig:
 
 class MeasurementSession:
     """Owns one measurement campaign against one device (or one fleet of
-    independent identical devices when thread-parallel)."""
+    independent identical devices when thread-parallel).
+
+    ``engine`` picks how phase-2/3 pair measurements execute; how it
+    combines with the other scheduling knobs:
+
+    ================  ==========================  =======================
+    combination       ``engine="serial"``         ``engine="batched"``
+    ================  ==========================  =======================
+    executor serial   per-pair loop (reference)   lock-stepped lane grid
+    executor threads  per-pair, thread pool       ValueError (the engine
+    executor procs    per-pair, process pool      is one fused program —
+                                                  there is nothing left
+                                                  to farm out)
+    trace=...         shared-device path, traced  ValueError (a trace is
+                                                  one device's stream;
+                                                  lanes would interleave)
+    explicit device   shared-device path          ValueError (lanes need
+    / hw backend                                  the registry factory +
+                                                  the simulator's split
+                                                  wait protocol)
+    ================  ==========================  =======================
+
+    Every supported combination lands on bit-identical per-pair tables:
+    pairs are measured on devices seeded by ``pair_seed(base_seed,
+    f_init, f_target)`` regardless of schedule (PR-5 contract, extended
+    to the batched engine by :mod:`repro.core.batched_sweep`)."""
 
     def __init__(self, device=None, frequencies=None,
                  cfg: SessionConfig | None = None, *,
                  backend: str | None = None, backend_options: dict | None = None,
                  device_factory=None, device_name: str | None = None,
                  device_index: int = 0, hostname: str = "node0",
-                 trace=None):
+                 trace=None, engine: str = "serial"):
         if device is None and backend is None:
             backend = "simulated"
+        if engine not in ("serial", "batched"):
+            raise ValueError(
+                f"unknown engine {engine!r}: expected 'serial' or 'batched'")
+        if engine == "batched" and trace is not None:
+            raise ValueError(
+                "trace= records ONE device's interaction stream; the "
+                "batched engine interleaves every pair's device in one "
+                "lock-stepped program, so the combination is unrecordable "
+                "— use engine='serial' when tracing (see the class "
+                "docstring's combination matrix)")
+        if engine == "batched" and backend is None:
+            raise ValueError(
+                "engine='batched' measures each pair on a freshly built "
+                "pair-seeded device, so it needs a registry backend "
+                "(backend=...), not a bare device instance")
+        self.engine = engine
         self.cfg = cfg if cfg is not None else SessionConfig()
         self._backend = backend
         self._backend_options = dict(backend_options or {})
@@ -214,6 +255,24 @@ class MeasurementSession:
                   f"{self.cfg.out_dir}, {len(todo)} to measure")
         executor = get_executor(self.cfg.executor, self.cfg.max_workers)
         pair_scoped = self.pair_scoped()
+        if self.engine == "batched":
+            if not pair_scoped:
+                raise ValueError(
+                    "engine='batched' needs a virtual registry backend "
+                    "(e.g. 'simulated', 'vmapped-sim'); this session's "
+                    "device cannot be rebuilt per pair")
+            from repro.backends import get_backend
+            if not get_backend(self._backend).batchable:
+                raise ValueError(
+                    f"backend {self._backend!r} does not expose the split "
+                    "wait protocol the batched engine fuses over; use "
+                    "engine='serial' (registry backends opt in with "
+                    "batchable=True)")
+            if self.cfg.executor != "serial":
+                raise ValueError(
+                    "engine='batched' is one fused lock-stepped program; "
+                    f"executor={self.cfg.executor!r} has nothing to "
+                    "schedule — drop the executor or use engine='serial'")
         if pair_scoped:
             # every pair measured on a freshly built, pair-seeded device;
             # the task is plain data, so any executor (including process
@@ -260,7 +319,14 @@ class MeasurementSession:
                       f"best={pr.best_case*1e3:.2f}ms "
                       f"clusters={pr.n_clusters}")
 
-        map_pairs_with_callback(executor, fn, todo, on_result)
+        if self.engine == "batched":
+            # pair_scoped is guaranteed above, so `task` exists: the
+            # batched engine consumes the same picklable spec the
+            # executors do, with the same completion callback
+            from repro.core.batched_sweep import run_batched_sweep
+            run_batched_sweep(task, todo, on_result=on_result)
+        else:
+            map_pairs_with_callback(executor, fn, todo, on_result)
         table = LatencyTable(self.device_name, self.device_index,
                              self.hostname)
         for p in pairs:

@@ -20,6 +20,7 @@ frequency-event history is known.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 
 import numpy as np
@@ -65,8 +66,13 @@ class SimulatedAccelerator:
         idle = cfg.idle_freq if cfg.idle_freq is not None else min(cfg.frequencies)
         self._idle_freq = idle
         self._set_freq = idle
-        # committed frequency timeline: sorted [(device_time, freq)]
+        self._freq_set = frozenset(cfg.frequencies)
+        # committed frequency timeline: sorted [(device_time, freq)], with
+        # parallel times/freqs lists so lookups bisect and batch padding
+        # slices without rebuilding arrays or unpacking tuples
         self._events: list[tuple[float, float]] = [(-np.inf, idle)]
+        self._ev_t: list[float] = [-np.inf]
+        self._ev_f: list[float] = [idle]
         self._busy_until_dev = -np.inf
         self._last_activity_dev = -np.inf
         self._seq = 0
@@ -112,18 +118,23 @@ class SimulatedAccelerator:
     # frequency control
     # ------------------------------------------------------------------ #
     def _freq_at(self, t_dev: float) -> float:
-        times = [e[0] for e in self._events]
-        i = int(np.searchsorted(times, t_dev, side="right")) - 1
+        i = bisect.bisect_right(self._ev_t, t_dev) - 1
         return self._events[max(0, i)][1]
 
     def _commit(self, t_dev: float, freq: float) -> None:
-        # drop any scheduled events after t_dev (a new command overrides)
-        self._events = [e for e in self._events if e[0] <= t_dev]
+        # drop any scheduled events after t_dev (a new command overrides);
+        # the common case appends past the end and prunes nothing
+        ev_t = self._ev_t
+        if t_dev < ev_t[-1]:
+            i = bisect.bisect_right(ev_t, t_dev)
+            del self._events[i:], ev_t[i:], self._ev_f[i:]
         self._events.append((t_dev, freq))
+        ev_t.append(t_dev)
+        self._ev_f.append(freq)
 
     def set_frequency(self, mhz: float) -> None:
         """Issue the (async) frequency-change command from the host."""
-        if mhz not in self.cfg.frequencies:
+        if mhz not in self._freq_set:
             raise ValueError(f"unsupported frequency {mhz}")
         arrive_dev = self._dev_time(self._host_t) + self.model.comm_delay_s
         f_from = self._set_freq
@@ -172,18 +183,43 @@ class SimulatedAccelerator:
         self._seq += 1
         return h
 
+    def _wait_draw(self, h: KernelHandle) -> tuple[np.ndarray, np.ndarray]:
+        """Consume this kernel's measurement-noise draws: per-core start
+        skew and per-iteration noise (with driver-event spikes applied).
+        Factored out of :meth:`wait` so batched schedulers
+        (:mod:`repro.core.batched_sweep`) replicate the exact RNG stream
+        per lane while evaluating many devices' timestamps in one numpy
+        program."""
+        c = self.cfg
+        n, it = c.n_cores, h.n_iters
+        t0 = self.rng.uniform(0, c.core_skew_s, n)
+        t0 += h.start_dev
+        noise = self.rng.lognormal(0.0, c.iter_noise_sigma, (n, it))
+        spikes = self.rng.random((n, it)) < c.outlier_prob
+        # driver-event spikes, sparse: masked in-place multiply (same bits
+        # as fancy-index assignment, no gather/scatter copies)
+        np.multiply(noise, c.outlier_scale, out=noise, where=spikes)
+        return t0, noise
+
+    def _wait_finalize(self, end_dev: float) -> None:
+        """Commit a finished kernel's end time: device busy/activity marks
+        plus the host clock blocking until completion.  The second half of
+        the :meth:`wait` split (see :meth:`_wait_draw`)."""
+        c = self.cfg
+        self._busy_until_dev = end_dev
+        self._last_activity_dev = end_dev
+        # host blocks until completion
+        host_end = end_dev - c.clock_offset_s - c.clock_drift * (self._host_t - self._t0)
+        self._host_t = max(self._host_t, host_end)
+
     def wait(self, h: KernelHandle) -> np.ndarray:
         """Block until the kernel finishes; returns device timestamps
         (n_cores, n_iters, 2) [start, end], timer-quantized."""
         c = self.cfg
-        n, it = c.n_cores, h.n_iters
         f_max = max(c.frequencies)
-        t0 = np.full(n, h.start_dev) + self.rng.uniform(0, c.core_skew_s, n)
-        noise = self.rng.lognormal(0.0, c.iter_noise_sigma, (n, it))
-        spikes = self.rng.random((n, it)) < c.outlier_prob
-        noise[spikes] *= c.outlier_scale       # driver-event spikes, sparse
-        ev_t = np.array([e[0] for e in self._events])
-        ev_f = np.array([e[1] for e in self._events])
+        t0, noise = self._wait_draw(h)
+        ev_t = np.array(self._ev_t)
+        ev_f = np.array(self._ev_f)
         if c.wait_impl == "loop":
             bounds = self._eval_timestamps_loop(
                 h.base_iter_s, t0, noise, ev_t, ev_f, f_max)
@@ -192,12 +228,7 @@ class SimulatedAccelerator:
                 h.base_iter_s, t0, noise, ev_t, ev_f, f_max)
         # iteration i runs [bounds[:, i], bounds[:, i+1]]
         starts, ends = bounds[:, :-1], bounds[:, 1:]
-        end_dev = float(bounds[:, -1].max())
-        self._busy_until_dev = end_dev
-        self._last_activity_dev = end_dev
-        # host blocks until completion
-        host_end = end_dev - c.clock_offset_s - c.clock_drift * (self._host_t - self._t0)
-        self._host_t = max(self._host_t, host_end)
+        self._wait_finalize(float(bounds[:, -1].max()))
         q = c.timer_resolution_s
         out = np.stack([starts, ends], axis=-1)
         out /= q                               # quantize in place

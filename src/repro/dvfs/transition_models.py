@@ -19,13 +19,17 @@ known model and demand the pipeline recover it).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 
 import numpy as np
 
 
+@functools.lru_cache(maxsize=None)
 def _pair_hash(a: float, b: float, salt: int = 0) -> float:
-    """Deterministic uniform [0,1) per (from,to) pair."""
+    """Deterministic uniform [0,1) per (from,to) pair.  Cached: the hash is
+    pure and a sweep recomputes the same few thousand pairs on every one of
+    its ~10^5 transition samples."""
     h = hashlib.sha256(f"{a:.1f}->{b:.1f}|{salt}".encode()).digest()
     return int.from_bytes(h[:8], "little") / 2 ** 64
 

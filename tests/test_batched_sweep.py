@@ -1,0 +1,254 @@
+"""Batched sweep engine: bit-identity against the serial per-pair path
+across every measurement status, resumable batched sessions, the
+engine/executor/trace combination guards, and the numeric helpers whose
+bit-exactness the engine rests on."""
+import numpy as np
+import pytest
+
+from repro.backends import create_backend
+from repro.backends.registry import register_backend
+from repro.backends.vmapped_sim import eval_timestamps_lanes
+from repro.core import stats as statsmod
+from repro.core.batched_sweep import _pairwise_colsum, run_batched_sweep
+from repro.core.calibration import calibrate, valid_pairs
+from repro.core.evaluation import MeasureConfig
+from repro.core.pairtask import PairTask, run_pair_task
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
+from repro.core.workload import WorkloadSpec
+from repro.campaign.scheduler import CampaignRunner
+from repro.dvfs.device_model import SimulatedAccelerator
+from repro.dvfs.transition_models import make_device
+from repro.trace.analyze import table_digest
+
+SPEC = WorkloadSpec(iters_per_kernel=16, flops_per_iter=128e-3,
+                    delay_iters=3, confirm_iters=10)
+FREQS = [210.0, 705.0, 1410.0]
+
+
+def _mc(**kw):
+    base = dict(min_measurements=8, max_measurements=24, rse_check_every=8,
+                rse_target=0.0, min_confirm=8, max_retries=100)
+    base.update(kw)
+    return MeasureConfig(**base)
+
+
+def _grid(mc, **devopts):
+    opts = {"kind": "a100", "seed": 11, **devopts}
+    dev = create_backend("vmapped-sim", **opts)
+    cal = calibrate(dev, FREQS, SPEC)
+    pairs = valid_pairs(cal)
+    task = PairTask.make("vmapped-sim", opts, cal, SPEC, mc)
+    return task, pairs
+
+
+def _assert_identical(task, pairs):
+    """Run both engines over the same grid; every per-pair field must be
+    bit-equal.  Returns the (shared) statuses for shape assertions."""
+    serial = {p: run_pair_task(task, p) for p in pairs}
+    batched = run_batched_sweep(task, pairs)
+    assert set(batched) == set(pairs)
+    for p in pairs:
+        pm_s, gt_s = serial[p]
+        pm_b, gt_b = batched[p]
+        assert pm_s.status == pm_b.status, p
+        assert pm_s.retries == pm_b.retries, p
+        assert np.array_equal(pm_s.latencies, pm_b.latencies), p
+        assert (pm_s.rse == pm_b.rse
+                or (np.isinf(pm_s.rse) and np.isinf(pm_b.rse))), p
+        assert repr(gt_s) == repr(gt_b), p
+    return {p: batched[p][0].status for p in pairs}
+
+
+# ---------------------------------------------------------------------- #
+# bit-identity across statuses
+# ---------------------------------------------------------------------- #
+
+def test_bit_identity_all_ok():
+    task, pairs = _grid(_mc())
+    statuses = _assert_identical(task, pairs)
+    assert len(pairs) == 6
+    assert set(statuses.values()) == {"ok"}
+
+
+def test_bit_identity_power_throttled():
+    """set_frequency(1410) arms the power throttle, so every pair touching
+    1410 MHz must bail with power_throttled — in both engines, at the
+    same pass."""
+    task, pairs = _grid(_mc(), power_throttle_freqs=(1410.0,))
+    statuses = _assert_identical(task, pairs)
+    assert statuses[(210.0, 705.0)] == "ok"
+    assert all(s == "power_throttled" for (fi, ft), s in statuses.items()
+               if 1410.0 in (fi, ft))
+
+
+def test_bit_identity_undetectable():
+    """An impossible confirmation suffix makes every pass GOTO-retry until
+    max_retries trips; retry counts and the undetectable verdict must
+    match pass-for-pass."""
+    task, pairs = _grid(_mc(min_confirm=10**6, max_retries=2))
+    statuses = _assert_identical(task, pairs)
+    assert set(statuses.values()) == {"undetectable"}
+
+
+def test_bit_identity_thermal_rollback():
+    """Thermal flags drop the newest throttle_check_every measurements and
+    cool down; the rollback (the only caller of RunningStats.remove) must
+    fire and both engines must still agree bit-for-bit."""
+    task, pairs = _grid(_mc(cooldown_s=1e-3), thermal_throttle_prob=0.3)
+    removes = [0]
+    orig = statsmod.RunningStats.remove
+
+    def counting(self, v):
+        removes[0] += 1
+        return orig(self, v)
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(statsmod.RunningStats, "remove", counting)
+        statuses = _assert_identical(task, pairs)
+    assert removes[0] > 0                       # rollback path exercised
+    assert set(statuses.values()) == {"ok"}
+
+
+# ---------------------------------------------------------------------- #
+# session integration: resume + parity
+# ---------------------------------------------------------------------- #
+
+def _session(out_dir=None, engine="serial", executor="serial",
+             backend="vmapped-sim", trace=None):
+    return MeasurementSession(
+        frequencies=FREQS,
+        cfg=SessionConfig(
+            latest=LatestConfig(measure=_mc(min_measurements=4,
+                                            max_measurements=6,
+                                            rse_check_every=4)),
+            executor=executor, out_dir=out_dir),
+        backend=backend,
+        backend_options={"kind": "a100", "seed": 2, "n_cores": 6},
+        engine=engine, trace=trace)
+
+
+def test_batched_session_resumes_from_disk(tmp_path, monkeypatch):
+    out = str(tmp_path / "sweep")
+    subset = [(210.0, 1410.0), (1410.0, 210.0)]
+
+    import repro.core.batched_sweep as bs
+    swept = []
+    real = bs.run_batched_sweep
+
+    def spy(task, pairs, *, on_result=None):
+        swept.append(list(pairs))
+        return real(task, pairs, on_result=on_result)
+
+    monkeypatch.setattr(bs, "run_batched_sweep", spy)
+
+    partial = _session(out_dir=out, engine="batched").run(pair_subset=subset)
+    assert set(partial.pairs) == set(subset)
+
+    # "crash", then a fresh batched session over the same state dir: the
+    # persisted pairs are loaded, only the remaining four enter the engine
+    full = _session(out_dir=out, engine="batched").run()
+    assert len(full.pairs) == 6
+    assert swept == [subset, [p for p in full.pairs if p not in subset]]
+    for p in subset:
+        assert np.array_equal(full.pairs[p].latencies,
+                              partial.pairs[p].latencies)
+
+    # and the resumed batched table equals a fresh serial sweep bit-for-bit
+    serial = _session(engine="serial").run()
+    assert table_digest(full) == table_digest(serial)
+
+
+# ---------------------------------------------------------------------- #
+# combination guards
+# ---------------------------------------------------------------------- #
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        _session(engine="fused")
+
+
+def test_trace_with_batched_engine_rejected():
+    with pytest.raises(ValueError, match="trace"):
+        _session(engine="batched", trace=object())
+
+
+def test_explicit_device_with_batched_engine_rejected():
+    dev = make_device("a100", seed=0, n_cores=4)
+    with pytest.raises(ValueError, match="freshly built"):
+        MeasurementSession(dev, FREQS, engine="batched")
+
+
+def test_threaded_executor_with_batched_engine_rejected():
+    with pytest.raises(ValueError, match="executor"):
+        _session(engine="batched", executor="threads").run()
+
+
+def test_non_batchable_backend_rejected():
+    @register_backend("sim-nobatch-test", description="guard-test dummy",
+                      virtual=True, batchable=False)
+    def _factory(kind="a100", *, seed=0, unit_seed=0, n_cores=None,
+                 **overrides):
+        return make_device(kind, seed=seed, unit_seed=unit_seed,
+                           n_cores=n_cores, **overrides)
+
+    with pytest.raises(ValueError, match="split wait protocol"):
+        _session(engine="batched", backend="sim-nobatch-test").run()
+
+
+def test_campaign_processes_with_batched_engine_rejected():
+    with pytest.raises(ValueError, match="pick one"):
+        CampaignRunner(None, executor="processes", engine="batched")
+
+
+# ---------------------------------------------------------------------- #
+# numeric helpers the identity contract rests on
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n", [1, 2, 5, 7, 8, 9, 15, 16, 24, 64, 100,
+                               127, 128, 129, 300, 1000])
+def test_pairwise_colsum_matches_numpy_mean(n):
+    """_pairwise_colsum must reproduce numpy's pairwise-summation tree
+    bitwise — the batched confirm's mean must equal the serial
+    mean(axis=1) exactly, not just approximately.  The serial detector
+    reduces a C-contiguous last axis (numpy's pairwise fast path), so
+    that layout is the reference; strided reductions sum differently."""
+    rng = np.random.default_rng(n)
+    cols = rng.lognormal(0.0, 1.0, (n, 5))
+    ours = _pairwise_colsum(cols) / n
+    ref = np.mean(np.ascontiguousarray(cols.T), axis=1)
+    assert np.array_equal(ours, ref)
+
+
+@pytest.mark.parametrize("n_iters", [8, 200])
+def test_eval_timestamps_lanes_matches_serial(n_iters):
+    """Both evaluation regimes (iteration-major loop for short wide
+    batches, per-lane windowed fallback for tall skinny ones) must equal
+    the single-device serial evaluator bitwise, full bounds and
+    ends_only alike."""
+    rng = np.random.default_rng(7)
+    base, f_max, cores = 1e-3, 1500.0, 3
+    timelines = [([0.0], [300.0]),
+                 ([0.0, 0.004, 0.009], [1500.0, 700.0, 1200.0])]
+    width = max(len(t) for t, _ in timelines) + 1
+    ev_t_pad = np.full((width, len(timelines)), np.inf)
+    ev_f_pad = np.ones((width, len(timelines)))
+    for i, (tt, tf) in enumerate(timelines):
+        ev_t_pad[:len(tt), i] = tt
+        ev_f_pad[:len(tf), i] = tf
+    lane_of_row = np.repeat(np.arange(len(timelines)), cores)
+    r = lane_of_row.size
+    t0 = rng.uniform(0, 1e-4, r)
+    noise_t = rng.lognormal(0.0, 0.05, (n_iters, r))
+
+    got = eval_timestamps_lanes(base, t0, noise_t, lane_of_row,
+                                ev_t_pad, ev_f_pad, f_max)
+    ends = eval_timestamps_lanes(base, t0, noise_t, lane_of_row,
+                                 ev_t_pad, ev_f_pad, f_max, ends_only=True)
+    for i, (tt, tf) in enumerate(timelines):
+        cols = np.flatnonzero(lane_of_row == i)
+        ref = SimulatedAccelerator._eval_timestamps_vectorized(
+            base, t0[cols], np.ascontiguousarray(noise_t[:, cols].T),
+            np.asarray(tt), np.asarray(tf), f_max)
+        assert np.array_equal(got[:, cols], ref.T)
+        assert np.array_equal(ends[cols], ref[:, -1])

@@ -155,11 +155,11 @@ def test_failed_unit_is_retried_then_isolated(tmp_path, monkeypatch):
     import repro.campaign.scheduler as sched
     orig = sched.UnitSpec.build_session
 
-    def flaky(self, out_dir=None, executor="serial"):
+    def flaky(self, out_dir=None, executor="serial", **kw):
         if self.device.key == "rtx6000":
             calls["n"] += 1
             raise RuntimeError("board on fire")
-        return orig(self, out_dir=out_dir, executor=executor)
+        return orig(self, out_dir=out_dir, executor=executor, **kw)
 
     monkeypatch.setattr(sched.UnitSpec, "build_session", flaky)
     result = CampaignRunner(spec, store).run()
