@@ -1,0 +1,235 @@
+"""Fleet-monitor benchmark: ingest throughput + drift-detection delay.
+
+Three campaigns of the same simulated unit feed one
+:class:`~repro.monitor.service.MonitorService` baseline:
+
+* **baseline** — measured with ``trace=True``; its tables are what the
+  monitor watches.
+* **stationary** — identical unit physics, different measurement seed.
+  Replaying its stream against the baseline must raise ZERO alerts (the
+  false-positive gate) and times the ingest path (events/sec).
+* **drifted** — run through the process scheduler with a
+  :class:`~repro.campaign.workqueue.FaultPlan` ``drift_after_pairs``
+  injection: after two measured pairs the unit's live transition model is
+  silently scaled 4x.  Replaying its stream must alert within the
+  documented sample budget, only on pairs the batch differ
+  (``diff_campaigns``) also flags on the same tables, and a second replay
+  must reproduce bit-identical alert artifacts.
+
+Writes ``BENCH_monitor.json`` rows plus a ``monitor-smoke.json`` manifest
+(campaign id, trace directories, flagged pairs) that CI's
+``monitor-smoke`` job feeds to ``python -m repro.monitor replay``.
+
+  PYTHONPATH=src python -m benchmarks.monitor_ingest [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import time
+
+# Every alert must land within this many samples of the pair's drifted
+# stream starting — the acceptance budget the README documents.  The
+# monitor needs min_window=4 samples before a confirm may run, so the
+# floor is 4; 8 leaves headroom for a noisy first window without letting
+# detection drag a whole second sweep.
+DETECT_BUDGET_SAMPLES = 8
+DRIFT_SCALE = 4.0
+DRIFT_AFTER_PAIRS = 2
+
+
+def unit_spec(name: str, *, seed: int, n_freqs: int, max_measurements: int):
+    """One vmapped-sim gh200 unit; ``seed`` varies only the measurement
+    noise — unit physics (unit_seed) stay fixed across all campaigns."""
+    from repro.campaign import CampaignSpec, DeviceSpec, MeasureSpec
+    measure = MeasureSpec(key="fast", min_measurements=6,
+                          max_measurements=max_measurements,
+                          rse_check_every=6)
+    dev = DeviceSpec.make("gh200", "vmapped-sim",
+                          {"kind": "gh200", "n_cores": 6, "seed": seed,
+                           "unit_seed": 0}, n_freqs=n_freqs)
+    return CampaignSpec(name, devices=(dev,), measures=(measure,))
+
+
+def _run(spec, store, **kw):
+    from repro.campaign import CampaignRunner
+    result = CampaignRunner(spec, store, trace=True, **kw).run(verbose=False)
+    if not result.ok:
+        raise AssertionError(
+            f"{spec.name} failed: {[(o.key, o.error) for o in result.failed()]}")
+    return result
+
+
+def _timed_replay(baseline_campaign, trace, *, window, heartbeat_timeout_s):
+    """Fresh monitor, one trace replayed; returns (service, alerts, wall_s)."""
+    from repro.monitor import DriftConfig, MonitorConfig, MonitorService
+    service = MonitorService(
+        baseline_campaign,
+        MonitorConfig(drift=DriftConfig(window=window),
+                      heartbeat_timeout_s=heartbeat_timeout_s))
+    t0 = time.perf_counter()
+    alerts = service.replay_trace(trace)
+    return service, alerts, time.perf_counter() - t0
+
+
+def run_monitor_bench(*, n_freqs: int, max_measurements: int,
+                      store_root: str, manifest_out: str | None = None,
+                      fresh: bool = True):
+    """Returns (rows, manifest) — rows feed BENCH_monitor.json."""
+    from repro.campaign import ArtifactStore, diff_campaigns
+    from repro.campaign.workqueue import FaultPlan, fault_marker_path
+
+    if fresh:
+        shutil.rmtree(store_root, ignore_errors=True)
+    store = ArtifactStore(store_root)
+
+    shape = dict(n_freqs=n_freqs, max_measurements=max_measurements)
+    base_spec = unit_spec("monitor-baseline", seed=0, **shape)
+    unit_key = base_spec.units()[0].key
+    baseline = _run(base_spec, store)
+
+    stationary = _run(unit_spec("monitor-stationary", seed=1, **shape), store)
+    drift_spec = unit_spec("monitor-drifted", seed=2, **shape)
+    drifted = _run(
+        drift_spec, store, executor="processes", max_workers=1,
+        fault_plan=FaultPlan.make(drift_after_pairs={
+            unit_key: (DRIFT_AFTER_PAIRS, DRIFT_SCALE)}))
+    marker = fault_marker_path(drifted.campaign, unit_key, "drift")
+    if not os.path.exists(marker):
+        raise AssertionError(
+            f"drift injection never fired (missing {marker}) — the "
+            "detection numbers below would prove nothing")
+
+    # stale detection is stream-relative; a single replayed device never
+    # goes silent against itself, but keep the timeout out of the way
+    hb = 1e9
+    window = 32
+
+    # -- false-positive gate + ingest throughput (stationary stream) ----
+    flat_trace = stationary.campaign.load_trace(unit_key)
+    service, false_alerts, wall_flat = _timed_replay(
+        baseline.campaign, flat_trace, window=window, heartbeat_timeout_s=hb)
+    if false_alerts:
+        raise AssertionError(
+            "stationary replay raised alerts (false positives): "
+            f"{[doc['kind'] for _, _, doc in false_alerts]}")
+    flat_diff = diff_campaigns(baseline.campaign, stationary.campaign)
+    if not flat_diff.clean:
+        raise AssertionError(
+            "batch differ flagged the stationary campaign — the two "
+            "measurement seeds are not drift-free; pick different seeds")
+    flat_status = service.status()["devices"][service.devices[0]]
+    n_events = flat_status["events"]
+
+    # -- must-detect gate (drifted stream) ------------------------------
+    drift_trace = drifted.campaign.load_trace(unit_key)
+    service_d, alerts, wall_drift = _timed_replay(
+        baseline.campaign, drift_trace, window=window, heartbeat_timeout_s=hb)
+    drift_alerts = [doc for _, _, doc in alerts if doc["kind"] == "drift"]
+    if not drift_alerts:
+        raise AssertionError("injected 4x drift raised no alert")
+    delay = min(doc["sample_index"] for doc in drift_alerts)
+    if delay > DETECT_BUDGET_SAMPLES:
+        raise AssertionError(
+            f"detection took {delay} samples "
+            f"(budget {DETECT_BUDGET_SAMPLES})")
+
+    # -- batch agreement: every streamed alert pair is also flagged by
+    # diff_campaigns on the full tables (same rule, batch-wise) ---------
+    batch = diff_campaigns(baseline.campaign, drifted.campaign)
+    flagged = {(d.f_init, d.f_target) for d in batch.flagged()}
+    streamed = {(doc["f_init"], doc["f_target"]) for doc in drift_alerts}
+    if not streamed <= flagged:
+        raise AssertionError(
+            f"streaming alerted pairs {sorted(streamed - flagged)} the "
+            "batch differ does not flag — the verdicts diverged")
+
+    # -- determinism: re-replay reproduces bit-identical artifacts ------
+    _, alerts2, _ = _timed_replay(
+        baseline.campaign, drift_trace, window=window, heartbeat_timeout_s=hb)
+    ids, ids2 = [a for a, _, _ in alerts], [a for a, _, _ in alerts2]
+    if ids != ids2:
+        raise AssertionError(
+            f"re-replay changed the alert ids: {ids} vs {ids2}")
+
+    n_events_d = service_d.status()["devices"][service_d.devices[0]]["events"]
+    rate = n_events / wall_flat if wall_flat > 0 else float("inf")
+    rows = [
+        ("monitor_ingest", wall_flat / max(n_events, 1) * 1e6,
+         f"events={n_events} events_per_s={rate:.0f} "
+         f"passes={flat_status['passes']} false_alerts=0"),
+        ("monitor_detect", wall_drift / max(n_events_d, 1) * 1e6,
+         f"detect_delay_samples={delay} budget={DETECT_BUDGET_SAMPLES} "
+         f"alerts={len(drift_alerts)} flagged_pairs={len(flagged)} "
+         f"batch_agree=1 replay_bit_identical=1"),
+    ]
+    manifest = {
+        "store": store_root,
+        "baseline": baseline.campaign.campaign_id,
+        "stationary": stationary.campaign.campaign_id,
+        "drifted": drifted.campaign.campaign_id,
+        "unit_key": unit_key,
+        "no_drift_trace": stationary.campaign.trace_path(unit_key, "session"),
+        "drift_trace": drifted.campaign.trace_path(unit_key, "session"),
+        "flagged_pairs": sorted(flagged),
+        "detect_delay_samples": delay,
+        "detect_budget_samples": DETECT_BUDGET_SAMPLES,
+    }
+    if manifest_out:
+        os.makedirs(os.path.dirname(manifest_out) or ".", exist_ok=True)
+        with open(manifest_out, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+            f.write("\n")
+    return rows, manifest
+
+
+def bench_monitor():
+    """benchmarks.run entry point -> BENCH_monitor.json."""
+    from repro.core.paths import results_dir
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    shape = (dict(n_freqs=3, max_measurements=8) if smoke
+             else dict(n_freqs=4, max_measurements=10))
+    rows, _ = run_monitor_bench(
+        store_root=results_dir("monitor-bench"),
+        manifest_out=os.path.join(results_dir("bench"),
+                                  "monitor-smoke.json"), **shape)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (3 freqs, 8 measurements)")
+    ap.add_argument("--store-root", default=None,
+                    help="scratch store root (default: "
+                         "$REPRO_RESULTS_DIR/monitor-bench)")
+    ap.add_argument("--manifest-out", default=None,
+                    help="write the monitor-smoke.json manifest here "
+                         "(default: $REPRO_RESULTS_DIR/bench/)")
+    args = ap.parse_args(argv)
+
+    from repro.core.paths import results_dir
+    shape = (dict(n_freqs=3, max_measurements=8) if args.smoke
+             else dict(n_freqs=4, max_measurements=10))
+    rows, manifest = run_monitor_bench(
+        store_root=args.store_root or results_dir("monitor-bench"),
+        manifest_out=args.manifest_out or os.path.join(
+            results_dir("bench"), "monitor-smoke.json"), **shape)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    from benchmarks.run import _emit_json
+    _emit_json(results_dir("bench"), "monitor", rows,
+               sum(us for _, us, _ in rows) / 1e6)
+    print(f"manifest: baseline={manifest['baseline']} "
+          f"detect_delay={manifest['detect_delay_samples']} "
+          f"(budget {manifest['detect_budget_samples']})", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -51,6 +51,7 @@ def main() -> None:
                                          bench_microbench_kernel,
                                          bench_ssd_kernel,
                                          bench_xla_attention_paths)
+    from benchmarks.monitor_ingest import bench_monitor
     from benchmarks.paper_tables import (bench_dbscan_adaptive,
                                          bench_fig3_heatmaps,
                                          bench_fig4_asymmetry,
@@ -69,6 +70,7 @@ def main() -> None:
         bench_analysis,              # sorted-window analysis engine
         bench_campaign,              # process-parallel fleet scaling
         bench_trace,                 # telemetry recorder overhead (<5% bar)
+        bench_monitor,               # fleet monitor ingest + detection delay
         bench_phase1_two_sigma,      # §V-A
         bench_dbscan_adaptive,       # Alg. 3
         bench_table2_summary,        # Table II (+ ground-truth recovery)

@@ -1,17 +1,24 @@
-"""Multi-device measurement campaign, end to end and fully offline.
+"""Fleet measurement + live drift detection, end to end and fully offline.
 
 Reproduces the paper's cross-GPU finding — switching latency varies by
-ORDERS of magnitude across devices — by declaring one campaign over three
-simulated accelerators with deliberately different ground-truth transition
-models (A100-like: fast+asymmetric; GH200-like: target-dominated with bad
-targets; RTX6000-like: erratic), then:
+ORDERS of magnitude across devices — and then closes the loop the paper
+motivates: once a fleet's tables are measured, a monitor can watch the
+LIVE telemetry streams and name a changed unit without re-running any
+campaign.
 
-1. runs it through the scheduler into the content-addressed artifact store
-   (re-running this script resumes from the store instead of re-measuring);
-2. prints the cross-device Table-II-style report from the aggregation layer;
-3. measures a "next hardware generation" campaign (same fleet, one device's
-   unit_seed changed = a different physical unit) and runs the regression
-   detector against the first campaign.
+1. measure a baseline campaign over three simulated accelerators with
+   deliberately different ground-truth transition models (A100-like:
+   fast+asymmetric; GH200-like: target-dominated; RTX6000-like: erratic)
+   through the scheduler into the content-addressed artifact store
+   (re-running this script resumes from the store);
+2. print the cross-device Table-II-style report;
+3. bring up the NEXT generation of the fleet as live devices: same a100
+   and gh200 units, but the rtx6000 was physically swapped (different
+   unit_seed).  Each device runs behind a TracedBackend whose recorder
+   streams every event into one MonitorService via a live tap — the
+   monitor reconstructs switch passes, learns calibration baselines from
+   the bytes on the wire, runs sequential drift tests against the stored
+   campaign tables, and names the swapped unit from its stream alone.
 
   PYTHONPATH=src python examples/campaign_multi_device.py
 
@@ -19,31 +26,34 @@ Equivalent CLI round-trip:
 
   PYTHONPATH=src python -m repro.campaign run spec.json
   PYTHONPATH=src python -m repro.campaign report <campaign-id>
-  PYTHONPATH=src python -m repro.campaign diff <id-a> <id-b>
+  PYTHONPATH=src python -m repro.monitor replay <campaign-id> <trace-dir>
 """
+from repro.backends import create_backend
 from repro.campaign import (ArtifactStore, CampaignSpec, DeviceSpec,
-                            MeasureSpec, diff_campaigns, diff_markdown,
-                            report_markdown, run_campaign)
+                            MeasureSpec, report_markdown, run_campaign)
+from repro.core.session import MeasurementSession, SessionConfig
+from repro.monitor import MonitorConfig, MonitorService, alert_summary
+from repro.trace import TracedBackend, TraceRecorder
 
 FAST = MeasureSpec(key="fast", min_measurements=6, max_measurements=8,
                    rse_check_every=6)
+FLEET = (("a100", "a100"), ("gh200", "gh200"), ("rtx6000", "rtx6000"))
 
 
-def fleet_spec(name: str, rtx_unit_seed: int = 0) -> CampaignSpec:
-    def dev(key, kind, unit_seed=0):
-        return DeviceSpec.make(key, "vmapped-sim",
-                               {"kind": kind, "n_cores": 6, "seed": 0,
-                                "unit_seed": unit_seed}, n_freqs=3)
+def fleet_spec(name: str) -> CampaignSpec:
     return CampaignSpec(
         name=name,
-        devices=(dev("a100", "a100"), dev("gh200", "gh200"),
-                 dev("rtx6000", "rtx6000", unit_seed=rtx_unit_seed)),
+        devices=tuple(
+            DeviceSpec.make(key, "vmapped-sim",
+                            {"kind": kind, "n_cores": 6, "seed": 0,
+                             "unit_seed": 0}, n_freqs=3)
+            for key, kind in FLEET),
         measures=(FAST,))
 
 
 store = ArtifactStore()    # $REPRO_RESULTS_DIR/campaigns
 
-# -- 1) measure the fleet (resumes if this script already ran) -----------
+# -- 1) measure the baseline fleet (resumes if this script already ran) --
 spec = fleet_spec("three-gpus")
 print(f"running campaign {spec.campaign_id()} "
       f"({len(spec.units())} units)...")
@@ -54,22 +64,42 @@ assert result.ok, [o.error for o in result.failed()]
 print()
 print(report_markdown(result.campaign))
 
-# -- 3) next generation of the fleet: the RTX unit was swapped ----------
-spec2 = fleet_spec("three-gpus-gen2", rtx_unit_seed=5)
-print(f"running follow-up campaign {spec2.campaign_id()} "
-      "(same fleet, swapped rtx6000 unit)...")
-result2 = run_campaign(spec2, store, verbose=True)
-assert result2.ok, [o.error for o in result2.failed()]
+# -- 3) gen2 fleet, live: the rtx6000 unit was swapped -------------------
+# Devices are built directly (no campaign, no stored tables on this side):
+# everything the monitor learns about gen2 comes from its event streams.
+print("\nbringing up the gen2 fleet under the monitor "
+      "(rtx6000 unit swapped)...")
+# (the sessions run one after another, so earlier devices fall silent in
+# stream time while later ones advance the clock — that's an artifact of
+# sequential simulation, not real silence, so stale detection is parked)
+monitor = MonitorService(result.campaign,
+                         MonitorConfig(heartbeat_timeout_s=1e9))
+for key, kind in FLEET:
+    unit_seed = 5 if key == "rtx6000" else 0     # the swap
+    dev = create_backend("vmapped-sim", kind=kind, n_cores=6, seed=1,
+                         unit_seed=unit_seed)
+    recorder = TraceRecorder()
+    traced = TracedBackend(dev, recorder)
+    monitor.attach_recorder(key, recorder)        # live tap, pre-session
+    session = MeasurementSession(
+        traced, DeviceSpec.make(key, n_freqs=3).resolve_frequencies(dev),
+        SessionConfig(latest=FAST.to_latest_config()),
+        device_name=key)
+    session.run(verbose=False)
+    st = monitor.status()["devices"][key]
+    print(f"  {key}: {st['events']} events, {st['passes']} passes, "
+          f"{st['pairs_watched']} pair(s) watched, "
+          f"{st['alerts']} alert(s)")
 
-diff = diff_campaigns(result.campaign, result2.campaign)
-print()
-print(diff_markdown(diff))
-flagged = diff.flagged()
-print(f"\n{len(flagged)} pair(s) drifted — every one on the swapped unit:"
-      if flagged else "\nno drift detected")
-for d in flagged:
-    print(f"  {d.unit_key} {d.f_init:.0f}->{d.f_target:.0f} MHz: "
-          f"{d.worst_a * 1e3:.1f} -> {d.worst_b * 1e3:.1f} ms "
-          f"({d.rel_delta:+.0%}, p={d.p_value:.3g})")
-assert all(d.unit_key.startswith("rtx6000") for d in flagged), (
+drift_alerts = [doc for _, _, doc in monitor.alerts if doc["kind"] == "drift"]
+print(f"\n{len(drift_alerts)} drift alert(s) — every one on the swapped "
+      "unit, named from its stream alone:")
+for doc in drift_alerts:
+    print(f"  {alert_summary(doc)}")
+assert drift_alerts, "the swapped unit must be detected"
+assert all(doc["device"] == "rtx6000" for doc in drift_alerts), (
     "only the swapped unit should drift")
+stored = result.campaign.list_alerts()
+assert list(stored) == ["rtx6000@fast"], stored
+print(f"\nalert artifacts stored under campaign {result.campaign.campaign_id}"
+      f": {stored}")

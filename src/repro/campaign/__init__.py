@@ -9,7 +9,8 @@ from repro.campaign.scheduler import (CampaignResult, CampaignRunner,
 from repro.campaign.aggregate import (comparison_markdown, comparison_rows,
                                       report_markdown, unit_summaries)
 from repro.campaign.regression import (CampaignDiff, DiffConfig, PairDrift,
-                                       diff_campaigns, diff_markdown)
+                                       diff_campaigns, diff_markdown,
+                                       diff_to_dict, pair_drift)
 
 __all__ = [
     "CampaignSpec", "DeviceSpec", "MeasureSpec", "UnitSpec",
@@ -18,5 +19,5 @@ __all__ = [
     "comparison_markdown", "comparison_rows", "report_markdown",
     "unit_summaries",
     "CampaignDiff", "DiffConfig", "PairDrift", "diff_campaigns",
-    "diff_markdown",
+    "diff_markdown", "diff_to_dict", "pair_drift",
 ]

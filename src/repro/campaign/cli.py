@@ -4,7 +4,8 @@
     ls                 list campaigns in the store
     report CID         cross-device markdown report (Table II analogue)
     diff   CID_A CID_B flag pairs whose clean latency distribution drifted
-                       (exit code 1 when any pair is flagged -> CI gate)
+                       (exit code 1 when any pair is flagged -> CI gate;
+                       --json for the machine-readable CampaignDiff)
 
 The store root defaults to ``$REPRO_RESULTS_DIR/campaigns`` (or
 ``results/campaigns``); every command takes ``--store`` to override.
@@ -68,9 +69,11 @@ def cmd_ls(args) -> int:
         print(f"no campaigns under {store.root}")
         return 0
     for r in rows:
-        traces = store.load(r["campaign_id"]).list_traces()
-        n_traces = sum(len(v) for v in traces.values())
-        extra = f"  {n_traces} trace(s)" if n_traces else ""
+        campaign = store.load(r["campaign_id"])
+        n_traces = sum(len(v) for v in campaign.list_traces().values())
+        n_alerts = sum(len(v) for v in campaign.list_alerts().values())
+        extra = (f"  {n_traces} trace(s)" if n_traces else "") + \
+                (f"  {n_alerts} ALERT(S)" if n_alerts else "")
         print(f"{r['campaign_id']}  {r['units_done']}/{r['units_total']} "
               f"units  {r['name']}{extra}")
     return 0
@@ -83,11 +86,18 @@ def cmd_report(args) -> int:
 
 
 def cmd_diff(args) -> int:
+    import json
+
+    from repro.campaign.regression import diff_to_dict
     store = _store(args)
     diff = diff_campaigns(
         store.load(args.reference), store.load(args.candidate),
         DiffConfig(worst_delta_threshold=args.threshold, alpha=args.alpha))
-    _emit(diff_markdown(diff), args.out)
+    if args.json:
+        _emit(json.dumps(diff_to_dict(diff), indent=1, sort_keys=True),
+              args.out)
+    else:
+        _emit(diff_markdown(diff), args.out)
     return 0 if diff.clean else 1
 
 
@@ -156,6 +166,8 @@ def build_parser() -> argparse.ArgumentParser:
                    help="relative worst-case delta to flag")
     p.add_argument("--alpha", type=float, default=DiffConfig.alpha,
                    help="Mann-Whitney significance level")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable CampaignDiff instead of markdown")
     p.add_argument("--out", default=None, help="write to file")
     p.set_defaults(fn=cmd_diff)
     return ap

@@ -26,6 +26,7 @@ that the engine is O(n log n).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.campaign.store import Campaign
 from repro.core.latency_table import analyse_pair
@@ -83,6 +84,32 @@ def _comparable_pairs(table, reanalyse: bool = False) -> dict:
     return pairs
 
 
+def pair_drift(unit_key: str, f_init: float, f_target: float,
+               ra, rb, cfg: DiffConfig | None = None) -> PairDrift:
+    """The single drift verdict shared by the batch differ and the fleet
+    monitor's streaming confirm gate: compare candidate :class:`PairResult`
+    ``rb`` against reference ``ra`` with the worst-delta AND Mann-Whitney
+    rule.  Keeping one implementation is what guarantees that a streaming
+    alert and ``diff_campaigns`` agree on the same data by construction."""
+    if cfg is None:
+        cfg = DiffConfig()
+    if ra.worst_case > 0:
+        rel = (rb.worst_case - ra.worst_case) / ra.worst_case
+    else:                     # sub-timer-resolution reference samples
+        rel = float("inf") if rb.worst_case > 0 else 0.0
+    underpowered = (ra.clean.size < cfg.min_samples
+                    or rb.clean.size < cfg.min_samples)
+    if underpowered:
+        p = float("nan")
+        shifted = True
+    else:
+        _, p = mann_whitney_u(ra.clean, rb.clean)
+        shifted = p < cfg.alpha
+    flagged = abs(rel) > cfg.worst_delta_threshold and shifted
+    return PairDrift(unit_key, f_init, f_target, ra.worst_case,
+                     rb.worst_case, rel, p, flagged)
+
+
 def diff_campaigns(a: Campaign, b: Campaign,
                    cfg: DiffConfig | None = None) -> CampaignDiff:
     """Diff ``b`` (candidate) against ``a`` (reference)."""
@@ -109,23 +136,35 @@ def diff_campaigns(a: Campaign, b: Campaign,
         only_a.extend((key, fi, ft) for fi, ft in sorted(set(pa) - set(pb)))
         only_b.extend((key, fi, ft) for fi, ft in sorted(set(pb) - set(pa)))
         for (fi, ft) in sorted(set(pa) & set(pb)):
-            ra, rb = pa[(fi, ft)], pb[(fi, ft)]
-            if ra.worst_case > 0:
-                rel = (rb.worst_case - ra.worst_case) / ra.worst_case
-            else:                 # sub-timer-resolution reference samples
-                rel = float("inf") if rb.worst_case > 0 else 0.0
-            underpowered = (ra.clean.size < cfg.min_samples
-                            or rb.clean.size < cfg.min_samples)
-            if underpowered:
-                p = float("nan")
-                shifted = True
-            else:
-                _, p = mann_whitney_u(ra.clean, rb.clean)
-                shifted = p < cfg.alpha
-            flagged = abs(rel) > cfg.worst_delta_threshold and shifted
-            drifts.append(PairDrift(key, fi, ft, ra.worst_case,
-                                    rb.worst_case, rel, p, flagged))
+            drifts.append(pair_drift(key, fi, ft, pa[(fi, ft)],
+                                     pb[(fi, ft)], cfg))
     return CampaignDiff(a.campaign_id, b.campaign_id, drifts, only_a, only_b)
+
+
+def diff_to_dict(diff: CampaignDiff) -> dict:
+    """Machine-readable CampaignDiff (``campaign diff --json``): per-pair
+    deltas, U-test p-values and verdicts, so tooling can assert on drift
+    results without scraping the markdown table.  NaN p-values (the
+    underpowered delta-decides-alone rule) serialize as None."""
+    return {
+        "campaign_a": diff.campaign_a,
+        "campaign_b": diff.campaign_b,
+        "clean": diff.clean,
+        "n_pairs": len(diff.drifts),
+        "n_flagged": len(diff.flagged()),
+        "drifts": [
+            {"unit_key": d.unit_key, "f_init": d.f_init,
+             "f_target": d.f_target, "worst_a_s": d.worst_a,
+             "worst_b_s": d.worst_b,
+             # non-finite floats have no strict-JSON encoding: null them
+             "rel_delta": (d.rel_delta if math.isfinite(d.rel_delta)
+                           else None),
+             "p_value": None if d.p_value != d.p_value else d.p_value,
+             "flagged": d.flagged}
+            for d in diff.drifts],
+        "only_in_a": [list(t) for t in diff.only_in_a],
+        "only_in_b": [list(t) for t in diff.only_in_b],
+    }
 
 
 def diff_markdown(diff: CampaignDiff) -> str:

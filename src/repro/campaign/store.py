@@ -217,27 +217,77 @@ class Campaign:
             trace = trace.finish()
         return trace.save(self.trace_path(unit_key, name))
 
-    def list_traces(self, unit_key: str | None = None) -> dict[str, list[str]]:
-        """unit_key -> sorted trace names (all units when key is None)."""
-        from repro.trace.schema import HEADER_FILE
+    def _scan_units(self, subdir: str, valid,
+                    unit_key: str | None = None) -> dict[str, list[str]]:
+        """unit_key -> sorted entry names under ``units/<key>/<subdir>``
+        passing ``valid(dir, name)`` — the one directory walk behind both
+        :meth:`list_traces` and :meth:`list_alerts`."""
+        units_root = os.path.join(self.dir, _UNITS)
         units = ([unit_key] if unit_key is not None else
-                 sorted(os.listdir(os.path.join(self.dir, _UNITS)))
-                 if os.path.isdir(os.path.join(self.dir, _UNITS)) else [])
+                 sorted(os.listdir(units_root))
+                 if os.path.isdir(units_root) else [])
         out: dict[str, list[str]] = {}
         for key in units:
-            tdir = self.traces_dir(key)
-            if not os.path.isdir(tdir):
+            d = os.path.join(self.unit_dir(key), subdir)
+            if not os.path.isdir(d):
                 continue
-            names = sorted(
-                n for n in os.listdir(tdir)
-                if os.path.exists(os.path.join(tdir, n, HEADER_FILE)))
+            names = sorted(n for n in os.listdir(d) if valid(d, n))
             if names:
                 out[key] = names
         return out
 
+    def list_traces(self, unit_key: str | None = None) -> dict[str, list[str]]:
+        """unit_key -> sorted trace names (all units when key is None)."""
+        from repro.trace.schema import HEADER_FILE
+        return self._scan_units(
+            "traces",
+            lambda d, n: os.path.exists(os.path.join(d, n, HEADER_FILE)),
+            unit_key)
+
     def load_trace(self, unit_key: str, name: str = "session"):
         from repro.trace.recorder import Trace
         return Trace.load(self.trace_path(unit_key, name))
+
+    # -------------------------------------------------------------- #
+    # drift alerts (repro.monitor): content-addressed JSON artifacts —
+    # the id is the hash of the canonical document bytes, so a replayed
+    # detection scenario reproduces identical files, and re-saving an
+    # alert is a no-op rather than a duplicate
+    # -------------------------------------------------------------- #
+    def alerts_dir(self, unit_key: str) -> str:
+        return os.path.join(self.unit_dir(unit_key), "alerts")
+
+    def alert_path(self, unit_key: str, alert_id: str) -> str:
+        return os.path.join(self.alerts_dir(unit_key), f"{alert_id}.json")
+
+    def save_alert(self, unit_key: str, doc: dict) -> str:
+        """Persist one alert document; returns its content-addressed id.
+        ``doc`` must be JSON-serializable with only finite floats (alert
+        builders own that invariant — determinism is the point)."""
+        import hashlib
+        body = json.dumps(doc, indent=1, sort_keys=True,
+                          allow_nan=False) + "\n"
+        alert_id = hashlib.sha256(body.encode()).hexdigest()[:24]
+        path = self.alert_path(unit_key, alert_id)
+        if not os.path.exists(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with atomic_replace(path) as tmp:
+                with open(tmp, "w") as f:
+                    f.write(body)
+        return alert_id
+
+    def list_alerts(self, unit_key: str | None = None) -> dict[str, list[str]]:
+        """unit_key -> sorted alert ids (all units when key is None)."""
+        return {k: [n[:-len(".json")] for n in names]
+                for k, names in self._scan_units(
+                    "alerts",
+                    lambda d, n: (n.endswith(".json")
+                                  and os.path.isfile(os.path.join(d, n))),
+                    unit_key).items()}
+
+    def load_alert(self, unit_key: str, alert_id: str) -> dict:
+        with open(self.alert_path(unit_key, alert_id)) as f:
+            return json.load(f)
 
 
 class ArtifactStore:

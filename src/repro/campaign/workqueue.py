@@ -59,7 +59,7 @@ _CRASH_EXIT = 43                    # injected-crash exit code (tests/CI)
 class FaultPlan:
     """Deterministic fault injection, applied inside workers.
 
-    Three fault shapes, keyed by unit:
+    Four fault shapes, keyed by unit:
 
     * ``crash_after_pairs``: number of measured pairs after which the
       worker hard-exits (``os._exit`` — no cleanup, like a real
@@ -67,26 +67,41 @@ class FaultPlan:
     * ``stall_s``: seconds the worker sleeps *silently* before starting
       the unit — no heartbeats, so the driver's hang detection fires;
     * ``slow_pairs_s``: seconds slept after each measured pair, *with*
-      heartbeats — a live straggler, the speculation path's target.
+      heartbeats — a live straggler, the speculation path's target;
+    * ``drift_after_pairs``: after N measured pairs, the unit's live
+      device gets its transition model wrapped in a
+      :class:`~repro.dvfs.transition_models.ShiftedTransitionModel` —
+      switching latency silently departs the baseline mid-stream, the
+      fleet monitor's detection target.  Values are ``(n_pairs, scale)``
+      or ``(n_pairs, scale, f_init, f_target)`` (drift one pair only).
+      Drift requires the traced shared-device path (``trace=True``):
+      pair-scoped schedules rebuild a fresh device per pair, so a
+      mid-unit model mutation would never be observed.
 
     Each fault fires once per unit: the first attempt trips it and drops
     a marker file in the unit directory, so the requeued (or speculated)
-    attempt runs clean.  Markers double as the test/CI evidence that the
-    recovery path (not a lucky clean run) produced the result.
+    attempt runs clean.  (Drift is not a failure — its attempt completes
+    normally — but the marker still proves the injection actually fired.)
+    Markers double as the test/CI evidence that the recovery path (not a
+    lucky clean run) produced the result.
     """
 
     crash_after_pairs: tuple = ()       # sorted ((unit_key, n), ...)
     stall_s: tuple = ()                 # sorted ((unit_key, seconds), ...)
     slow_pairs_s: tuple = ()            # sorted ((unit_key, seconds), ...)
+    drift_after_pairs: tuple = ()       # sorted ((unit_key, spec_tuple), ...)
 
     @staticmethod
     def make(crash_after_pairs: dict | None = None,
              stall_s: dict | None = None,
-             slow_pairs_s: dict | None = None) -> "FaultPlan":
+             slow_pairs_s: dict | None = None,
+             drift_after_pairs: dict | None = None) -> "FaultPlan":
         return FaultPlan(
             tuple(sorted((crash_after_pairs or {}).items())),
             tuple(sorted((stall_s or {}).items())),
-            tuple(sorted((slow_pairs_s or {}).items())))
+            tuple(sorted((slow_pairs_s or {}).items())),
+            tuple(sorted((k, tuple(v))
+                         for k, v in (drift_after_pairs or {}).items())))
 
     def crash_for(self, unit_key: str):
         return dict(self.crash_after_pairs).get(unit_key)
@@ -97,10 +112,19 @@ class FaultPlan:
     def slow_for(self, unit_key: str):
         return dict(self.slow_pairs_s).get(unit_key)
 
+    def drift_for(self, unit_key: str):
+        """``(n_pairs, scale, f_init | None, f_target | None)`` or None."""
+        spec = dict(self.drift_after_pairs).get(unit_key)
+        if spec is None:
+            return None
+        n, scale, *pair = spec
+        fi, ft = pair if pair else (None, None)
+        return int(n), float(scale), fi, ft
+
     @property
     def empty(self) -> bool:
         return not (self.crash_after_pairs or self.stall_s
-                    or self.slow_pairs_s)
+                    or self.slow_pairs_s or self.drift_after_pairs)
 
 
 def fault_marker_path(campaign: Campaign, unit_key: str, kind: str) -> str:
@@ -122,14 +146,17 @@ def _trip_once(campaign: Campaign, unit_key: str, kind: str) -> bool:
 class _BeatingSerial(SerialExecutor):
     """Worker-side session executor: serial in-order measurement (the
     determinism contract) that emits one heartbeat per measured pair and
-    hosts the injected crash/slowdown hooks."""
+    hosts the injected crash/slowdown/drift hooks."""
 
     def __init__(self, beat, crash_after=None, on_crash=None,
-                 sleep_between_s=None):
+                 sleep_between_s=None, drift_after=None, on_drift=None):
         self.beat = beat
         self.crash_after = crash_after
         self.on_crash = on_crash
         self.sleep_between_s = sleep_between_s
+        self.drift_after = drift_after
+        self.on_drift = on_drift       # set post-construction (needs the
+                                       # session's live device)
 
     def map_pairs(self, fn, pairs, on_result=None):
         out = []
@@ -145,10 +172,29 @@ class _BeatingSerial(SerialExecutor):
                     # must find the measured pairs on disk (mid-unit, not
                     # before-unit, crash semantics)
                     os._exit(_CRASH_EXIT)
+            if self.drift_after is not None and i + 1 >= self.drift_after \
+                    and self.on_drift is not None:
+                self.on_drift()        # idempotent; every later pair runs
+                                       # on the shifted model
             if self.sleep_between_s:
                 time.sleep(self.sleep_between_s)    # injected straggler:
                 self.beat()                         # slow but alive
         return out
+
+
+def activate_drift(session, scale: float, f_init=None, f_target=None) -> None:
+    """Wrap the session's live device model in a
+    :class:`~repro.dvfs.transition_models.ShiftedTransitionModel` — every
+    transition sampled from here on is drifted.  Only meaningful on the
+    shared-device path (``trace=...`` forces it); idempotent."""
+    from repro.dvfs.transition_models import ShiftedTransitionModel
+    dev = session.device
+    dev = getattr(dev, "device", dev)         # unwrap TracedBackend
+    if isinstance(dev.model, ShiftedTransitionModel):
+        return
+    only_pair = (None if f_init is None
+                 else (float(f_init), float(f_target)))
+    dev.model = ShiftedTransitionModel(dev.model, scale, only_pair)
 
 
 # ------------------------------------------------------------------ #
@@ -186,12 +232,20 @@ def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
                                                    "slow"):
                 slow = None                 # only the first attempt drags
             crash_after = fault_plan.crash_for(unit_key)
+            drift = fault_plan.drift_for(unit_key)
+            if drift is not None and not trace:
+                raise ValueError(
+                    "FaultPlan drift injection needs the traced "
+                    "shared-device path (trace=True): pair-scoped "
+                    "schedules rebuild a fresh device per pair, so a "
+                    "mid-unit model shift would never be observed")
             executor = _BeatingSerial(
                 lambda: result_q.put(("beat", worker_id)),
                 crash_after=crash_after,
                 on_crash=(lambda: _trip_once(campaign, unit_key, "crash"))
                 if crash_after is not None else None,
-                sleep_between_s=slow)
+                sleep_between_s=slow,
+                drift_after=drift[0] if drift is not None else None)
             recorder = None
             kw = {}
             if trace:
@@ -203,6 +257,15 @@ def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
             session = unit.build_session(
                 out_dir=campaign.session_dir(unit_key), executor=executor,
                 **kw)
+            if drift is not None:
+                _, scale, dr_fi, dr_ft = drift
+
+                def _drift() -> None:
+                    # marker = CI evidence the injection fired; activation
+                    # itself is idempotent, so re-running is harmless
+                    _trip_once(campaign, unit_key, "drift")
+                    activate_drift(session, scale, dr_fi, dr_ft)
+                executor.on_drift = _drift
             table = session.run(verbose=False)
             gt = (session.ground_truth()
                   if hasattr(session, "ground_truth") else {})

@@ -138,6 +138,92 @@ class RunningStats:
 
 
 # ---------------------------------------------------------------------- #
+# sequential change detection (the fleet monitor's per-pair drift tests)
+# ---------------------------------------------------------------------- #
+class Cusum:
+    """Two-sided CUSUM over standardized residuals.
+
+    Feed ``z = (x - mean0) / sigma0``; the statistic accumulates excess
+    drift beyond the ``k`` allowance in either direction and trips once it
+    exceeds ``h``.  With ``k = 0.5`` and ``h = 5`` the detector reacts to a
+    sustained one-sigma shift within a handful of samples while a
+    stationary stream's statistic keeps resetting toward zero."""
+
+    __slots__ = ("k", "h", "pos", "neg")
+
+    def __init__(self, k: float = 0.5, h: float = 5.0):
+        self.k = float(k)
+        self.h = float(h)
+        self.pos = 0.0
+        self.neg = 0.0
+
+    def update(self, z: float) -> float:
+        z = float(z)
+        self.pos = max(0.0, self.pos + z - self.k)
+        self.neg = max(0.0, self.neg - z - self.k)
+        return self.score
+
+    @property
+    def score(self) -> float:
+        return max(self.pos, self.neg)
+
+    @property
+    def tripped(self) -> bool:
+        return self.score > self.h
+
+    def reset(self) -> None:
+        self.pos = self.neg = 0.0
+
+
+class PageHinkley:
+    """Two-sided Page-Hinkley test over standardized residuals.
+
+    Tracks the cumulative deviation of the stream from its own running
+    mean minus a ``delta`` allowance; the statistic is the distance from
+    the cumulative sum to its running extremum, tripping at ``lam``.
+    Complements :class:`Cusum`: PH's self-centering running mean catches
+    slow ramps that stay inside CUSUM's per-sample allowance."""
+
+    __slots__ = ("delta", "lam", "n", "_mean", "_up", "_up_min",
+                 "_down", "_down_max")
+
+    def __init__(self, delta: float = 0.05, lam: float = 5.0):
+        self.delta = float(delta)
+        self.lam = float(lam)
+        self.n = 0
+        self._mean = 0.0
+        self._up = 0.0          # cumulative (z - mean - delta)
+        self._up_min = 0.0
+        self._down = 0.0        # cumulative (z - mean + delta)
+        self._down_max = 0.0
+
+    def update(self, z: float) -> float:
+        z = float(z)
+        self.n += 1
+        self._mean += (z - self._mean) / self.n
+        self._up += z - self._mean - self.delta
+        self._up_min = min(self._up_min, self._up)
+        self._down += z - self._mean + self.delta
+        self._down_max = max(self._down_max, self._down)
+        return self.score
+
+    @property
+    def score(self) -> float:
+        if self.n == 0:
+            return 0.0
+        return max(self._up - self._up_min, self._down_max - self._down)
+
+    @property
+    def tripped(self) -> bool:
+        return self.score > self.lam
+
+    def reset(self) -> None:
+        self.n = 0
+        self._mean = self._up = self._up_min = 0.0
+        self._down = self._down_max = 0.0
+
+
+# ---------------------------------------------------------------------- #
 # two-sample machinery for campaign regression detection
 # ---------------------------------------------------------------------- #
 def _ranks_and_tie_counts(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

@@ -125,6 +125,52 @@ class RTXQuadro6000Like(TransitionModel):
         return [(latency, f_to)]
 
 
+class ShiftedTransitionModel:
+    """Drift-injection wrapper: delegates to ``inner`` but scales sampled
+    transition latencies by ``scale`` — for every pair, or (with
+    ``only_pair``) for exactly one ``(f_init, f_target)`` transition.
+
+    Installing this on a live device's ``model`` mid-stream simulates a
+    unit whose switching behavior departs its campaign baseline (aging
+    silicon, firmware regression, a swapped board): the ground-truth
+    history keeps recording the scaled truth, so detection pipelines are
+    checked against what the simulator actually did.  Built for
+    :class:`repro.campaign.workqueue.FaultPlan` drift injection; the
+    fleet monitor's CI smoke is the consumer."""
+
+    def __init__(self, inner, scale: float,
+                 only_pair: tuple[float, float] | None = None):
+        self.inner = inner
+        self.scale = float(scale)
+        self.only_pair = (None if only_pair is None else
+                          (float(only_pair[0]), float(only_pair[1])))
+
+    def _factor(self, f_from: float, f_to: float) -> float:
+        if self.only_pair is not None and \
+                (float(f_from), float(f_to)) != self.only_pair:
+            return 1.0
+        return self.scale
+
+    @property
+    def name(self) -> str:
+        return f"{self.inner.name}+drift"
+
+    def base_latency(self, f_from: float, f_to: float) -> float:
+        return self.inner.base_latency(f_from, f_to) \
+            * self._factor(f_from, f_to)
+
+    def sample_latency(self, f_from: float, f_to: float, rng) -> float:
+        return float(self.inner.sample_latency(f_from, f_to, rng)
+                     * self._factor(f_from, f_to))
+
+    def trajectory(self, f_from: float, f_to: float, latency: float, rng):
+        return self.inner.trajectory(f_from, f_to, latency, rng)
+
+    def __getattr__(self, attr):
+        # comm_delay_s, wakeup_s, unit_seed, ... — untouched passthrough
+        return getattr(self.inner, attr)
+
+
 _MODELS = {"a100": A100Like, "gh200": GH200Like, "rtx6000": RTXQuadro6000Like}
 
 # frequency ranges per Table I (MHz): (min, max, step)

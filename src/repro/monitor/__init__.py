@@ -1,0 +1,26 @@
+"""Fleet monitor: always-on streaming drift detection over live trace
+event streams, judged against a stored campaign baseline.
+
+    DeviceStream                  events -> latency estimates (ingest)
+    PairMonitor / DriftConfig     sequential drift tests     (drift)
+    MonitorService                fleet service: streams, heartbeats,
+                                  alert artifacts              (service)
+    MetricsRegistry               counters/gauges/histograms  (metrics)
+    drift_alert_doc / alert_summary   alert documents          (alerts)
+
+CLI: ``python -m repro.monitor {status,watch,replay}``.
+"""
+from repro.monitor.alerts import alert_summary, drift_alert_doc, stale_alert_doc
+from repro.monitor.drift import DriftConfig, DriftEvent, PairMonitor
+from repro.monitor.ingest import DeviceStream, PassEstimate, fit_baseline
+from repro.monitor.metrics import (Counter, Gauge, Histogram,
+                                   MetricsRegistry, start_http_server)
+from repro.monitor.service import MonitorConfig, MonitorService
+
+__all__ = [
+    "alert_summary", "drift_alert_doc", "stale_alert_doc",
+    "DriftConfig", "DriftEvent", "PairMonitor",
+    "DeviceStream", "PassEstimate", "fit_baseline",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "start_http_server",
+    "MonitorConfig", "MonitorService",
+]

@@ -1,0 +1,96 @@
+"""Alert documents: the monitor's durable, content-addressed artifacts.
+
+An alert is a plain JSON document persisted through
+:meth:`repro.campaign.store.Campaign.save_alert` under the *baseline*
+campaign's unit directory (``units/<key>/alerts/<id>.json``) — the
+campaign whose table the fleet is being judged against is where the
+evidence of departure belongs.  The id is the sha256 of the canonical
+bytes, so replaying a recorded stream reproduces bit-identical files
+(the CI determinism gate); every timestamp inside comes from the trace's
+own timeline, never the wall clock.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.monitor.drift import DriftEvent
+
+DRIFT = "drift"
+STALE_DEVICE = "stale-device"
+
+
+def _finite(v: float) -> float:
+    v = float(v)
+    if not math.isfinite(v):
+        raise ValueError(f"alert documents must be strict JSON: got {v!r}")
+    return v
+
+
+def drift_alert_doc(event: DriftEvent, campaign_id: str,
+                    device: str) -> dict:
+    """Canonical document for one confirmed pair drift: the verdict, the
+    offending window's samples, and the baseline stats it was judged
+    against — everything an operator (or a batch re-check with
+    ``diff_campaigns``) needs, with no reach-back into monitor state."""
+    d = event.drift
+    return {
+        "kind": DRIFT,
+        "campaign_id": campaign_id,
+        "unit_key": event.unit_key,
+        "device": device,
+        "f_init": _finite(event.f_init),
+        "f_target": _finite(event.f_target),
+        "sample_index": int(event.sample_index),
+        "t_stream": _finite(event.t_stream),
+        "scores": {"cusum": _finite(event.cusum_score),
+                   "page_hinkley": _finite(event.ph_score)},
+        "verdict": {
+            "worst_baseline_s": _finite(d.worst_a),
+            "worst_window_s": _finite(d.worst_b),
+            "rel_delta": _finite(d.rel_delta),
+            # NaN = underpowered baseline, delta decided alone (the batch
+            # differ's fallback); null like diff_to_dict
+            "p_value": None if d.p_value != d.p_value else _finite(d.p_value),
+            "flagged": bool(d.flagged),
+        },
+        "window": {"samples_s": [_finite(v) for v in event.window],
+                   "clean_s": [_finite(v) for v in event.window_clean]},
+        "baseline": {"worst_s": _finite(event.baseline_worst),
+                     "mean_s": _finite(event.baseline_mean),
+                     "n_clean": int(event.baseline_n)},
+    }
+
+
+def stale_alert_doc(device: str, unit_key: str, last_event_t: float,
+                    now_t: float, timeout_s: float,
+                    campaign_id: str) -> dict:
+    """A device whose stream went silent past the heartbeat timeout —
+    raised once per silence (the service de-duplicates), timestamps on
+    the stream's own timeline."""
+    return {
+        "kind": STALE_DEVICE,
+        "campaign_id": campaign_id,
+        "unit_key": unit_key,
+        "device": device,
+        "last_event_t": _finite(last_event_t),
+        "now_t": _finite(now_t),
+        "silent_s": _finite(now_t - last_event_t),
+        "timeout_s": _finite(timeout_s),
+    }
+
+
+def alert_summary(doc: dict) -> str:
+    """One human line per alert (``monitor status`` / ``replay``)."""
+    if doc.get("kind") == DRIFT:
+        v = doc["verdict"]
+        p = "-" if v["p_value"] is None else f"{v['p_value']:.3g}"
+        return (f"DRIFT {doc['unit_key']} "
+                f"{doc['f_init']:.0f}->{doc['f_target']:.0f} MHz: "
+                f"worst {v['worst_baseline_s'] * 1e3:.2f} -> "
+                f"{v['worst_window_s'] * 1e3:.2f} ms "
+                f"({v['rel_delta']:+.1%}, p={p}, "
+                f"sample {doc['sample_index']})")
+    if doc.get("kind") == STALE_DEVICE:
+        return (f"STALE {doc['device']} ({doc['unit_key']}): silent "
+                f"{doc['silent_s']:.1f}s > {doc['timeout_s']:.1f}s timeout")
+    return f"UNKNOWN alert kind {doc.get('kind')!r}"

@@ -1,0 +1,188 @@
+"""`python -m repro.monitor` — the fleet monitor's command surface.
+
+    status CID           alert + trace inventory of a campaign's units
+    watch  CID           poll the store, print alerts as they appear
+    replay CID TRACE...  drive the monitor from recorded event streams
+                         (a trace directory or a unit key whose trace is
+                         stored in the campaign); exit 1 with
+                         --fail-on-alert when any alert fires — the CI
+                         false-positive / must-detect gate
+
+The store root defaults to ``$REPRO_RESULTS_DIR/campaigns`` (or
+``results/campaigns``); every command takes ``--store`` to override.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.campaign.store import ArtifactStore
+from repro.cliutil import emit as _emit
+from repro.monitor.alerts import alert_summary
+from repro.monitor.drift import DriftConfig
+from repro.monitor.service import MonitorConfig, MonitorService
+
+
+def _store(args) -> ArtifactStore:
+    return ArtifactStore(args.store)
+
+
+def _load_trace(campaign, ref: str):
+    """A trace positional: a trace directory path, or a unit key whose
+    stored session trace the campaign holds."""
+    from repro.trace.recorder import Trace
+    if os.path.isdir(ref):
+        return Trace.load(ref), None
+    if campaign.list_traces(ref).get(ref):
+        return campaign.load_trace(ref), ref
+    raise FileNotFoundError(
+        f"{ref!r} is neither a trace directory nor a unit with a stored "
+        f"trace in campaign {campaign.campaign_id}")
+
+
+def _campaign_alerts(campaign) -> list[tuple[str, str, dict]]:
+    return [(aid, unit, campaign.load_alert(unit, aid))
+            for unit, ids in sorted(campaign.list_alerts().items())
+            for aid in ids]
+
+
+def cmd_status(args) -> int:
+    campaign = _store(args).load(args.campaign)
+    alerts = _campaign_alerts(campaign)
+    if args.json:
+        print(json.dumps({
+            "campaign_id": campaign.campaign_id,
+            "n_alerts": len(alerts),
+            "alerts": [{"id": aid, "unit_key": unit, **doc}
+                       for aid, unit, doc in alerts],
+        }, indent=1, sort_keys=True))
+        return 0
+    traces = campaign.list_traces()
+    by_unit = campaign.list_alerts()
+    print(f"campaign {campaign.campaign_id}: "
+          f"{len(campaign.done_units())} finished unit(s), "
+          f"{len(alerts)} alert(s)")
+    for unit in campaign.done_units():
+        n_tr = len(traces.get(unit, []))
+        n_al = len(by_unit.get(unit, []))
+        flag = "  ALERTS" if n_al else ""
+        print(f"  {unit}: {n_tr} trace(s), {n_al} alert(s){flag}")
+    for aid, unit, doc in alerts:
+        print(f"  [{aid[:12]}] {alert_summary(doc)}")
+    return 0
+
+
+def cmd_watch(args) -> int:
+    campaign = _store(args).load(args.campaign)
+    seen = {aid for aid, _, _ in _campaign_alerts(campaign)}
+    print(f"watching campaign {campaign.campaign_id} "
+          f"({len(seen)} existing alert(s); poll every {args.interval}s)")
+    rounds = 0
+    while args.rounds <= 0 or rounds < args.rounds:
+        rounds += 1
+        for aid, unit, doc in _campaign_alerts(campaign):
+            if aid in seen:
+                continue
+            seen.add(aid)
+            print(f"[{aid[:12]}] {alert_summary(doc)}", flush=True)
+        if args.rounds <= 0 or rounds < args.rounds:
+            time.sleep(args.interval)
+    return 0
+
+
+def cmd_replay(args) -> int:
+    campaign = _store(args).load(args.campaign)
+    drift = DriftConfig(window=args.window, cooldown=args.cooldown)
+    service = MonitorService(campaign, MonitorConfig(
+        drift=drift, heartbeat_timeout_s=args.heartbeat_timeout))
+    raised: list[tuple[str, str, dict]] = []
+    for ref in args.traces:
+        trace, unit_key = _load_trace(campaign, ref)
+        raised += service.replay_trace(trace, device=args.device,
+                                       unit_key=args.unit or unit_key)
+    status = service.status()
+    if args.metrics_out:
+        service.metrics.write_snapshot(args.metrics_out)
+    if args.prom_out:
+        _emit(service.metrics.render_prometheus().rstrip("\n"),
+              args.prom_out)
+    if args.json:
+        print(json.dumps({
+            **status,
+            "alerts": [{"id": aid, "unit_key": unit, **doc}
+                       for aid, unit, doc in raised],
+        }, indent=1, sort_keys=True))
+    else:
+        for name, d in status["devices"].items():
+            print(f"{name} ({d['unit_key']}): {d['events']} events, "
+                  f"{d['passes']} passes, {d['pairs_watched']} pair(s) "
+                  f"watched, {d['alerts']} alert(s)"
+                  + (", STALE" if d["stale"] else ""))
+        for aid, _, doc in raised:
+            print(f"[{aid[:12]}] {alert_summary(doc)}")
+        print(f"{len(raised)} alert(s) raised")
+    return 1 if (args.fail_on_alert and raised) else 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.monitor",
+        description="Fleet monitor: streaming drift detection, alerts, "
+                    "live status")
+    ap.add_argument("--store", default=None,
+                    help="artifact store root (default: "
+                         "$REPRO_RESULTS_DIR/campaigns)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("status", help="alert + trace inventory per unit")
+    p.add_argument("campaign", help="campaign id (or unique prefix)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable output")
+    p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("watch", help="poll the store, print new alerts")
+    p.add_argument("campaign", help="campaign id (or unique prefix)")
+    p.add_argument("--interval", type=float, default=2.0,
+                   help="poll period (s)")
+    p.add_argument("--rounds", type=int, default=0,
+                   help="stop after N polls (0 = forever)")
+    p.set_defaults(fn=cmd_watch)
+
+    p = sub.add_parser("replay",
+                       help="drive the monitor from recorded streams")
+    p.add_argument("campaign", help="baseline campaign id (or prefix)")
+    p.add_argument("traces", nargs="+",
+                   help="trace directory path(s) or unit key(s) with a "
+                        "stored campaign trace")
+    p.add_argument("--device", default=None,
+                   help="stream name (default: the trace's device_name)")
+    p.add_argument("--unit", default=None,
+                   help="baseline unit key (default: resolve from the "
+                        "device name)")
+    p.add_argument("--window", type=int, default=DriftConfig.window,
+                   help="drift sliding-window capacity")
+    p.add_argument("--cooldown", type=int, default=DriftConfig.cooldown,
+                   help="samples suppressed after an alert")
+    p.add_argument("--heartbeat-timeout", type=float, default=30.0,
+                   help="stream-time silence before a stale-device alert")
+    p.add_argument("--fail-on-alert", action="store_true",
+                   help="exit 1 when any alert fires (CI gate)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable status + alerts")
+    p.add_argument("--metrics-out", default=None,
+                   help="write a JSON metrics snapshot")
+    p.add_argument("--prom-out", default=None,
+                   help="write the Prometheus text exposition")
+    p.set_defaults(fn=cmd_replay)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,190 @@
+"""Per-(device, pair) sequential drift detection against a campaign
+baseline.
+
+Each :class:`PairMonitor` watches ONE (unit, f_init, f_target) stream of
+switching-latency samples (the online estimator's finals) and answers
+"has this pair departed its baseline?" in two stages:
+
+1. **trigger** — cheap sequential tests every sample: two-sided CUSUM and
+   Page-Hinkley (:mod:`repro.core.stats`) over residuals standardized
+   against the baseline's clean distribution.  Latency windows are
+   multi-modal and outlier-ridden (Figs. 5-6), so the detectors run over
+   the DBSCAN-*cleaned* sliding window — the same
+   :func:`~repro.core.latency_table.analyse_pair` split the campaign
+   analysis uses — recomputed per observation (the window is <= 64
+   samples; the engine is O(w log w)).  The raw window's running
+   mean/std/RSE come from :class:`~repro.core.stats.RunningStats` with
+   O(1) add/remove on eviction.
+2. **confirm** — a trigger alone never alerts.  The candidate window is
+   re-analysed and judged by :func:`repro.campaign.regression.pair_drift`
+   — the *identical* worst-delta + Mann-Whitney rule ``diff_campaigns``
+   applies batch-wise — so streaming and batch verdicts agree on the same
+   data by construction.  The monitor additionally requires a *powered
+   window* (>= ``min_samples`` clean samples of evidence): the batch
+   differ's "underpowered -> delta decides alone" fallback is fine for a
+   human-reviewed diff but would let a 2-sample window page an operator.
+   The baseline side is taken as stored — when the campaign kept fewer
+   clean samples than ``min_samples``, the delta rule decides for the
+   monitor as it would for ``diff_campaigns``, but against the *larger*
+   ``unpowered_delta`` threshold: without a powered two-sample test a
+   worst-case-only comparison must clear a much wider margin before it
+   pages anyone (a human-reviewed batch diff can afford the lower bar).
+   Every alert the monitor raises is therefore also flagged by
+   ``diff_campaigns`` on the same data; the reverse holds whenever the
+   batch verdict was test-backed.
+
+After an alert the window and detectors reset and a cooldown suppresses
+re-alerting while the pair's stream refills.  A failed confirm changes
+nothing: the evidence window keeps accumulating and the confirm re-runs
+on the next sample — at <= 64-sample windows the confirm costs the same
+O(w log w) as the trigger, so there is nothing to debounce.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.campaign.regression import DiffConfig, pair_drift
+from repro.core import stats
+from repro.core.latency_table import PairResult, analyse_pair
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Tuning for one monitor's drift tests (shared across pairs)."""
+    window: int = 32              # sliding-window capacity (raw samples)
+    min_window: int = 4           # samples before a confirm may run
+    cusum_k: float = 0.5          # CUSUM per-sample allowance (sigmas)
+    cusum_h: float = 5.0          # CUSUM trip threshold
+    ph_delta: float = 0.05        # Page-Hinkley allowance
+    ph_lambda: float = 5.0        # Page-Hinkley trip threshold
+    cooldown: int = 8             # samples suppressed after an alert
+    sigma_floor_frac: float = 0.02  # baseline sigma floor (x mean): a
+                                    # degenerate tight baseline must not
+                                    # turn timer jitter into huge z-scores
+    unpowered_delta: float = 0.75   # |rel delta| needed to confirm when
+                                    # the baseline is too small for the
+                                    # Mann-Whitney test to run
+    diff: DiffConfig = DiffConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One confirmed departure of a pair from its baseline."""
+    unit_key: str
+    f_init: float
+    f_target: float
+    sample_index: int             # pair samples seen when the alert fired
+    t_stream: float               # stream timestamp of the deciding sample
+    cusum_score: float
+    ph_score: float
+    drift: object                 # the confirming PairDrift verdict
+    window: tuple                 # offending window's raw samples (s)
+    window_clean: tuple           # its DBSCAN-clean subset
+    baseline_worst: float
+    baseline_mean: float
+    baseline_n: int
+
+
+class PairMonitor:
+    """Streaming drift test for one (unit, f_init, f_target) pair."""
+
+    def __init__(self, unit_key: str, f_init: float, f_target: float,
+                 baseline: PairResult, cfg: DriftConfig | None = None):
+        self.cfg = cfg or DriftConfig()
+        self.unit_key = unit_key
+        self.f_init = float(f_init)
+        self.f_target = float(f_target)
+        self.baseline = baseline
+        base = np.asarray(baseline.clean, dtype=np.float64)
+        self._base_mean = float(base.mean()) if base.size else 0.0
+        sigma = float(base.std(ddof=1)) if base.size > 1 else 0.0
+        self._base_sigma = max(
+            sigma, self.cfg.sigma_floor_frac * abs(self._base_mean), 1e-12)
+        self._window: list[float] = []
+        self._running = stats.RunningStats()   # raw window, O(1) add/remove
+        self.n_seen = 0                        # pair samples ever observed
+        self._cooldown = 0
+        self.cusum_score = 0.0
+        self.ph_score = 0.0
+
+    # ------------------------------------------------------------ #
+    @property
+    def window_size(self) -> int:
+        return len(self._window)
+
+    @property
+    def window_mean(self) -> float:
+        return self._running.mean
+
+    @property
+    def score(self) -> float:
+        """Max of the two detector statistics — the drift-score gauge."""
+        return max(self.cusum_score, self.ph_score)
+
+    def _clean_window(self) -> np.ndarray:
+        pr = analyse_pair(self.f_init, self.f_target,
+                          np.asarray(self._window), with_silhouette=False)
+        return pr.clean
+
+    def _rescore(self) -> bool:
+        """Recompute CUSUM + PH over the cleaned window's standardized
+        residuals (deterministic: the detectors are pure functions of the
+        window's clean subset, immune to eviction-order effects)."""
+        clean = self._clean_window()
+        cusum = stats.Cusum(self.cfg.cusum_k, self.cfg.cusum_h)
+        ph = stats.PageHinkley(self.cfg.ph_delta, self.cfg.ph_lambda)
+        for v in clean:
+            z = (float(v) - self._base_mean) / self._base_sigma
+            cusum.update(z)
+            ph.update(z)
+        self.cusum_score = cusum.score
+        self.ph_score = ph.score
+        return cusum.tripped or ph.tripped
+
+    def _reset_window(self) -> None:
+        self.cusum_score = self.ph_score = 0.0
+        self._window.clear()
+        self._running = stats.RunningStats()
+
+    # ------------------------------------------------------------ #
+    def observe(self, latency_s: float,
+                t_stream: float = 0.0) -> DriftEvent | None:
+        """One final latency estimate for this pair; returns a confirmed
+        :class:`DriftEvent` or None."""
+        self.n_seen += 1
+        self._window.append(float(latency_s))
+        self._running.add(float(latency_s))
+        if len(self._window) > self.cfg.window:
+            self._running.remove(self._window.pop(0))
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return None
+        tripped = self._rescore()
+        if not tripped or len(self._window) < self.cfg.min_window:
+            return None
+        candidate = analyse_pair(self.f_init, self.f_target,
+                                 np.asarray(self._window),
+                                 with_silhouette=False)
+        verdict = pair_drift(self.unit_key, self.f_init, self.f_target,
+                             self.baseline, candidate, self.cfg.diff)
+        powered_window = candidate.clean.size >= self.cfg.diff.min_samples
+        test_ran = verdict.p_value == verdict.p_value      # not NaN
+        confirmed = verdict.flagged and powered_window and (
+            test_ran or abs(verdict.rel_delta) > self.cfg.unpowered_delta)
+        if confirmed:
+            event = DriftEvent(
+                self.unit_key, self.f_init, self.f_target,
+                sample_index=self.n_seen, t_stream=float(t_stream),
+                cusum_score=self.cusum_score, ph_score=self.ph_score,
+                drift=verdict,
+                window=tuple(self._window),
+                window_clean=tuple(float(v) for v in candidate.clean),
+                baseline_worst=self.baseline.worst_case,
+                baseline_mean=self._base_mean,
+                baseline_n=int(self.baseline.clean.size))
+            self._reset_window()
+            self._cooldown = self.cfg.cooldown
+            return event
+        return None

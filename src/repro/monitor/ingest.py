@@ -1,0 +1,134 @@
+"""Per-device stream ingestion: raw trace events in, latency estimates out.
+
+A :class:`DeviceStream` consumes ONE device's event stream — live, via
+:meth:`repro.trace.recorder.TraceRecorder.add_tap`, or offline from a
+stored trace replayed event by event — and turns it into per-pair
+switching-latency estimates:
+
+* switch passes are reconstructed push-style by the same
+  :class:`~repro.trace.analyze.SwitchPassAssembler` the offline analyzer
+  uses, so live ingestion and ``trace analyze`` see identical passes;
+* each completed pass streams through
+  :func:`repro.trace.online.stream_pass` (Alg. 2 as a state machine)
+  against the *learned* target baseline, yielding the final estimate the
+  drift tests consume;
+* baselines are learned from the stream itself: every uncrossed kernel
+  (no ``set_frequency`` between its launch and wait) refits the current
+  frequency's :class:`~repro.core.stats.FreqStats` with calibration's
+  exact recipe — per-iteration durations, top-0.5% trim
+  (:func:`repro.core.calibration.calibrate`), last kernel wins.  After
+  the recorded session's calibration phase the learned table therefore
+  *equals* the session's own ``cal.baselines``, with no side channel:
+  the monitor needs nothing but the bytes on the wire.
+
+The stream never buffers events — state is the assembler, one FreqStats
+per seen frequency, and counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import stats
+from repro.trace import schema
+from repro.trace.analyze import SwitchPassAssembler
+from repro.trace.online import stream_pass
+
+
+@dataclasses.dataclass(frozen=True)
+class PassEstimate:
+    """One reconstructed switch pass's online estimate."""
+    device: str
+    f_init: float
+    f_target: float
+    t_host: float               # stream timestamp of the completing WAIT
+    t_s: float                  # change request, accelerator timeline
+    latency_s: float | None     # None: no viable core (Alg. 2 GOTO)
+    n_provisional: int
+
+
+def fit_baseline(data: np.ndarray, freq_mhz: float) -> stats.FreqStats:
+    """Calibration's baseline recipe over one kernel's (cores, iters, 2)
+    timestamps: per-iteration durations, top-0.5% driver-spike trim."""
+    iters = np.diff(data, axis=-1)[..., 0].ravel()
+    trimmed = iters[iters <= np.quantile(iters, 0.995)]
+    return stats.mean_std(trimmed, freq_mhz=freq_mhz)
+
+
+class DeviceStream:
+    """Event-stream -> estimate pipeline for one device."""
+
+    def __init__(self, name: str, *, k_sigma: float = 2.0):
+        self.name = name
+        self.k_sigma = float(k_sigma)
+        self.asm = SwitchPassAssembler()
+        self.baselines: dict[float, stats.FreqStats] = {}
+        self.n_events = 0
+        self.n_passes = 0               # switch passes reconstructed
+        self.n_skipped = 0              # passes before their baseline existed
+        self.n_rejected = 0             # passes with no viable core
+        self.n_provisional = 0          # provisional estimates emitted
+        self.last_t: float | None = None    # newest stream timestamp seen
+        self._launch_freq: float | None = None
+
+    def feed(self, kind: int, t_host: float, cols, data=None,
+             extra=None) -> PassEstimate | None:
+        """One event (the tap signature); returns the pass estimate when
+        this event completed a switch pass, else None."""
+        self.n_events += 1
+        t_host = float(t_host)
+        if self.last_t is None or t_host > self.last_t:
+            self.last_t = t_host
+        if kind == schema.LAUNCH:
+            self._launch_freq = self.asm.current_freq
+        sp = self.asm.feed(kind, cols, data)
+        if kind == schema.BATCH:
+            # calibration warm-up burst: its LAST kernel is the baseline
+            if data is not None and self.asm.current_freq is not None:
+                self.baselines[self.asm.current_freq] = fit_baseline(
+                    np.asarray(data)[-1], self.asm.current_freq)
+            return None
+        if kind != schema.WAIT:
+            return None
+        if sp is None:
+            # an uncrossed kernel ran wholly at one frequency: baseline
+            # food — unless a set_frequency landed mid-kernel without
+            # arming a pass (no sync yet), which would poison the fit
+            freq = self.asm.current_freq
+            if data is not None and freq is not None \
+                    and self._launch_freq == freq:
+                self.baselines[freq] = fit_baseline(np.asarray(data), freq)
+            return None
+        self.n_passes += 1
+        target = self.baselines.get(sp.f_target)
+        if target is None:
+            self.n_skipped += 1
+            return None
+        final, provisional = stream_pass(sp.data, sp.t_s, target,
+                                         k_sigma=self.k_sigma)
+        self.n_provisional += len(provisional)
+        if final is None:
+            self.n_rejected += 1
+        return PassEstimate(
+            self.name, sp.f_init, sp.f_target, t_host, sp.t_s,
+            None if final is None else float(final.latency),
+            len(provisional))
+
+    def tap(self):
+        """Adapter matching :meth:`TraceRecorder.add_tap`'s callback
+        signature exactly (drops the return value — live attachment goes
+        through a service that reads estimates via :meth:`feed`)."""
+        def _fn(kind, t_host, cols, data, extra):
+            self.feed(kind, t_host, cols, data, extra)
+        return _fn
+
+
+def replay_events(trace) -> "iter":
+    """Yield ``(kind, t_host, cols, data, extra)`` tap tuples for every
+    event of a stored trace — the offline twin of a live tap subscription
+    (:func:`repro.trace.analyze.trace_event_data` rebuilds each payload)."""
+    from repro.trace.analyze import trace_event_data
+    for i in range(trace.n_events):
+        yield (int(trace.kinds[i]), float(trace.t_host[i]), trace.cols[i],
+               trace_event_data(trace, i), trace.extras.get(i))

@@ -1,0 +1,194 @@
+"""Self-contained metrics registry for the fleet monitor: counters,
+gauges and histograms with label support, rendered as a Prometheus-style
+text exposition and as JSON snapshots.
+
+No client library dependency: the monitor must run in the same minimal
+environment as the measurement stack.  Rendering is deterministic (metric
+and label series sorted), so two replays of the same stream produce
+byte-identical expositions — the same contract the alert artifacts obey.
+
+An optional stdlib exporter (:func:`start_http_server`) serves the text
+format on ``/metrics`` and the snapshot on ``/metrics.json`` from a
+daemon thread, for live deployments; offline replay never needs it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+
+def _fmt_labels(labels: tuple) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    return "{" + inner + "}"
+
+
+def _label_key(labels: dict | None) -> tuple:
+    return tuple(sorted((str(k), str(v))
+                        for k, v in (labels or {}).items()))
+
+
+class _Metric:
+    def __init__(self, name: str, help_text: str, kind: str):
+        self.name = name
+        self.help = help_text
+        self.kind = kind
+        self.series: dict[tuple, float] = {}
+
+    def _render_series(self) -> list[str]:
+        return [f"{self.name}{_fmt_labels(k)} {v:.17g}"
+                for k, v in sorted(self.series.items())]
+
+    def render(self) -> list[str]:
+        return [f"# HELP {self.name} {self.help}",
+                f"# TYPE {self.name} {self.kind}"] + self._render_series()
+
+    def snapshot(self):
+        return {_fmt_labels(k) or "": v for k, v in sorted(self.series.items())}
+
+
+class Counter(_Metric):
+    """Monotone accumulator (events ingested, alerts raised...)."""
+
+    def __init__(self, name: str, help_text: str):
+        super().__init__(name, help_text, "counter")
+
+    def inc(self, n: float = 1.0, **labels) -> None:
+        k = _label_key(labels)
+        self.series[k] = self.series.get(k, 0.0) + n
+
+    def value(self, **labels) -> float:
+        return self.series.get(_label_key(labels), 0.0)
+
+
+class Gauge(_Metric):
+    """Last-value metric (drift score, window size, ingest lag...)."""
+
+    def __init__(self, name: str, help_text: str):
+        super().__init__(name, help_text, "gauge")
+
+    def set(self, v: float, **labels) -> None:
+        self.series[_label_key(labels)] = float(v)
+
+    def value(self, **labels) -> float:
+        return self.series.get(_label_key(labels), 0.0)
+
+
+class Histogram(_Metric):
+    """Fixed-bucket cumulative histogram (per-pair latency estimates)."""
+
+    def __init__(self, name: str, help_text: str, buckets: tuple):
+        super().__init__(name, help_text, "histogram")
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        self._counts: dict[tuple, list[int]] = {}
+        self._sums: dict[tuple, float] = {}
+
+    def observe(self, v: float, **labels) -> None:
+        k = _label_key(labels)
+        counts = self._counts.setdefault(k, [0] * (len(self.buckets) + 1))
+        self._sums[k] = self._sums.get(k, 0.0) + float(v)
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                counts[i] += 1
+                return
+        counts[-1] += 1
+
+    def _render_series(self) -> list[str]:
+        out = []
+        for k in sorted(self._counts):
+            counts = self._counts[k]
+            cum = 0
+            for i, b in enumerate(self.buckets):
+                cum += counts[i]
+                lab = _fmt_labels(k + (("le", f"{b:g}"),))
+                out.append(f"{self.name}_bucket{lab} {cum}")
+            cum += counts[-1]
+            out.append(f'{self.name}_bucket{_fmt_labels(k + (("le", "+Inf"),))}'
+                       f" {cum}")
+            out.append(f"{self.name}_sum{_fmt_labels(k)} "
+                       f"{self._sums[k]:.17g}")
+            out.append(f"{self.name}_count{_fmt_labels(k)} {cum}")
+        return out
+
+    def snapshot(self):
+        return {_fmt_labels(k) or "": {
+            "count": sum(c), "sum": self._sums[k],
+            "buckets": dict(zip([f"{b:g}" for b in self.buckets] + ["+Inf"],
+                                c))}
+            for k, c in sorted(self._counts.items())}
+
+
+class MetricsRegistry:
+    """One monitor's metric namespace; iteration order is registration
+    order, rendering is fully sorted within each metric."""
+
+    def __init__(self):
+        self._metrics: dict[str, _Metric] = {}
+
+    def counter(self, name: str, help_text: str) -> Counter:
+        return self._get(name, lambda: Counter(name, help_text))
+
+    def gauge(self, name: str, help_text: str) -> Gauge:
+        return self._get(name, lambda: Gauge(name, help_text))
+
+    def histogram(self, name: str, help_text: str,
+                  buckets: tuple) -> Histogram:
+        return self._get(name, lambda: Histogram(name, help_text, buckets))
+
+    def _get(self, name: str, make):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = make()
+        return m
+
+    def render_prometheus(self) -> str:
+        lines: list[str] = []
+        for name in self._metrics:
+            lines.extend(self._metrics[name].render())
+        return "\n".join(lines) + "\n"
+
+    def snapshot(self) -> dict:
+        return {name: m.snapshot() for name, m in self._metrics.items()}
+
+    def write_snapshot(self, path: str) -> None:
+        """Periodic JSON snapshot (atomic replace, sorted keys)."""
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.snapshot(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+
+def start_http_server(registry: MetricsRegistry, port: int = 0,
+                      host: str = "127.0.0.1"):
+    """Serve ``/metrics`` (text) and ``/metrics.json`` from a daemon
+    thread; returns the live ``HTTPServer`` (``server_port`` tells the
+    caller which ephemeral port ``port=0`` landed on)."""
+    from http.server import BaseHTTPRequestHandler, HTTPServer
+
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 — stdlib handler interface
+            if self.path.startswith("/metrics.json"):
+                body = json.dumps(registry.snapshot(), indent=1,
+                                  sort_keys=True).encode()
+                ctype = "application/json"
+            elif self.path.startswith("/metrics"):
+                body = registry.render_prometheus().encode()
+                ctype = "text/plain; version=0.0.4"
+            else:
+                self.send_error(404)
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):      # keep the monitor's stdout clean
+            pass
+
+    server = HTTPServer((host, port), _Handler)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    return server

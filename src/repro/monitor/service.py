@@ -1,0 +1,267 @@
+"""The fleet monitor: many device streams, one campaign baseline, alerts.
+
+:class:`MonitorService` is the always-on piece: it ingests live trace
+event streams from any number of devices concurrently (each via a
+:class:`~repro.monitor.ingest.DeviceStream`), maintains per-(device,
+f_init, f_target) sequential drift tests
+(:class:`~repro.monitor.drift.PairMonitor`) against a *stored* campaign's
+measured tables — resolved exactly as :meth:`Governor.from_campaign`
+resolves them, so the monitor watches the same table the governor is
+running on — and persists every confirmed departure as a
+content-addressed alert artifact in that campaign's store.
+
+Time is the stream's own: the service clock is the max ``t_host`` seen
+across all attached devices, which drives a
+:class:`~repro.runtime.fault_tolerance.HeartbeatMonitor` so a device
+that goes silent while its peers advance raises a ``stale-device``
+alert — live and in replay alike (replay just advances the clock from
+the recorded timestamps, which is why alert artifacts are bit-for-bit
+reproducible).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.monitor import alerts as alertdoc
+from repro.monitor.drift import DriftConfig, PairMonitor
+from repro.monitor.ingest import DeviceStream, replay_events
+from repro.monitor.metrics import MetricsRegistry
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+_LATENCY_BUCKETS = (1e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorConfig:
+    drift: DriftConfig = DriftConfig()
+    k_sigma: float = 2.0                # online detection band (Alg. 2)
+    heartbeat_timeout_s: float = 30.0   # stream-time silence -> stale
+
+
+class _DeviceState:
+    __slots__ = ("stream", "unit_key", "table", "monitors", "n_alerts",
+                 "stale")
+
+    def __init__(self, stream: DeviceStream, unit_key: str, table):
+        self.stream = stream
+        self.unit_key = unit_key
+        self.table = table              # baseline LatencyTable
+        self.monitors: dict = {}        # (fi, ft) -> PairMonitor | None
+        self.n_alerts = 0
+        self.stale = False
+
+
+class MonitorService:
+    """Streaming drift detection for a fleet against one campaign."""
+
+    def __init__(self, campaign, cfg: MonitorConfig | None = None,
+                 registry: MetricsRegistry | None = None):
+        if isinstance(campaign, str):
+            from repro.campaign.store import ArtifactStore
+            campaign = ArtifactStore().load(campaign)
+        self.campaign = campaign
+        self.cfg = cfg or MonitorConfig()
+        self._devices: dict[str, _DeviceState] = {}
+        self._now = 0.0                 # stream clock: max t_host seen
+        self.heartbeat = HeartbeatMonitor(
+            timeout_s=self.cfg.heartbeat_timeout_s, clock=lambda: self._now)
+        self.alerts: list[tuple[str, str, dict]] = []  # (id, unit_key, doc)
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        m = self.metrics
+        self.m_events = m.counter(
+            "monitor_events_total", "Trace events ingested")
+        self.m_passes = m.counter(
+            "monitor_passes_total", "Switch passes reconstructed")
+        self.m_estimates = m.counter(
+            "monitor_estimates_total",
+            "Latency estimates emitted (kind=provisional|final)")
+        self.m_alerts = m.counter(
+            "monitor_alerts_total", "Alerts raised (kind=drift|stale-device)")
+        self.m_score = m.gauge(
+            "monitor_drift_score", "Current detector score per watched pair")
+        self.m_lag = m.gauge(
+            "monitor_ingest_lag_s",
+            "Stream time since the device's last event")
+        self.m_latency = m.histogram(
+            "monitor_latency_seconds", "Final switching-latency estimates",
+            buckets=_LATENCY_BUCKETS)
+
+    # -------------------------------------------------------------- #
+    # attachment
+    # -------------------------------------------------------------- #
+    def _resolve_unit(self, device: str, unit_key: str | None) -> str:
+        """Unit key for a device's baseline table — the exact resolution
+        rule Governor.from_campaign applies (a full unit key, or a device
+        key matching exactly one finished unit)."""
+        done = self.campaign.done_units()
+        key = unit_key or device
+        if key in done:
+            return key
+        matches = [k for k in done if k.split("@", 1)[0] == key]
+        if len(matches) != 1:
+            raise KeyError(
+                f"device {key!r} matches {matches or 'no'} finished unit(s) "
+                f"of campaign {self.campaign.campaign_id} (have: {done}); "
+                "pass an explicit unit_key")
+        return matches[0]
+
+    def attach(self, device: str, unit_key: str | None = None) -> None:
+        """Start monitoring one device's stream against its baseline
+        table; idempotent (re-attach keeps existing stream state)."""
+        if device in self._devices:
+            return
+        key = self._resolve_unit(device, unit_key)
+        table = self.campaign.load_table(key)
+        self._devices[device] = _DeviceState(
+            DeviceStream(device, k_sigma=self.cfg.k_sigma), key, table)
+        self.heartbeat.register(device)
+
+    def attach_recorder(self, device: str, recorder,
+                        unit_key: str | None = None):
+        """Live attachment: subscribe to a :class:`TraceRecorder`'s event
+        taps.  Returns the tap function (pass it to ``remove_tap`` to
+        detach)."""
+        self.attach(device, unit_key)
+
+        def _tap(kind, t_host, cols, data, extra):
+            self.handle_event(device, kind, t_host, cols, data, extra)
+
+        recorder.add_tap(_tap)
+        return _tap
+
+    @property
+    def devices(self) -> list[str]:
+        return sorted(self._devices)
+
+    # -------------------------------------------------------------- #
+    # ingestion
+    # -------------------------------------------------------------- #
+    def handle_event(self, device: str, kind, t_host, cols, data=None,
+                     extra=None) -> list[tuple[str, str, dict]]:
+        """One raw event from ``device``; returns alerts raised by it."""
+        st = self._devices[device]
+        self.m_events.inc(device=device)
+        before = len(self.alerts)
+        prev_passes = st.stream.n_passes
+        est = st.stream.feed(kind, t_host, cols, data, extra)
+        if st.stream.n_passes > prev_passes:
+            self.m_passes.inc(device=device)
+        t = st.stream.last_t
+        if t is not None:
+            if t > self._now:
+                self._now = t
+            # beat with the SERVICE clock, not the device's own timeline:
+            # devices record independent host clocks, so a device whose
+            # timeline merely lags its peers is alive (events are
+            # arriving) — silence means no events while the fleet's
+            # stream time advances
+            self.heartbeat.beat(device, self._now)
+            st.stale = False            # a live event ends any silence
+        if est is not None:
+            self.m_estimates.inc(est.n_provisional,
+                                 device=device, kind="provisional")
+            if est.latency_s is not None:
+                self.m_estimates.inc(device=device, kind="final")
+                self.m_latency.observe(est.latency_s, device=device)
+                self._observe(st, device, est)
+        self._check_stale()
+        return self.alerts[before:]
+
+    def _pair_monitor(self, st: _DeviceState, fi: float,
+                      ft: float) -> PairMonitor | None:
+        key = (fi, ft)
+        if key not in st.monitors:
+            pr = st.table.pairs.get(key)
+            if pr is None or pr.status != "ok" or not pr.clean.size:
+                st.monitors[key] = None      # pair has no usable baseline
+            else:
+                st.monitors[key] = PairMonitor(st.unit_key, fi, ft, pr,
+                                               self.cfg.drift)
+        return st.monitors[key]
+
+    def _observe(self, st: _DeviceState, device: str, est) -> None:
+        mon = self._pair_monitor(st, est.f_init, est.f_target)
+        if mon is None:
+            return
+        event = mon.observe(est.latency_s, t_stream=est.t_host)
+        pair = f"{est.f_init:.0f}->{est.f_target:.0f}"
+        self.m_score.set(mon.score, device=device, pair=pair)
+        if event is not None:
+            doc = alertdoc.drift_alert_doc(event, self.campaign.campaign_id,
+                                           device)
+            self._raise_alert(st, doc)
+
+    def _raise_alert(self, st: _DeviceState, doc: dict) -> None:
+        alert_id = self.campaign.save_alert(st.unit_key, doc)
+        self.alerts.append((alert_id, st.unit_key, doc))
+        st.n_alerts += 1
+        self.m_alerts.inc(kind=doc["kind"], device=doc["device"])
+
+    def _check_stale(self) -> None:
+        for device in self._devices:
+            last = self.heartbeat.last.get(device)
+            if last is not None:
+                self.m_lag.set(max(0.0, self._now - last), device=device)
+        for device in self.heartbeat.dead():
+            st = self._devices.get(device)
+            if st is None or st.stale:
+                continue                # already alerted for this silence
+            st.stale = True
+            doc = alertdoc.stale_alert_doc(
+                device, st.unit_key, float(self.heartbeat.last[device]),
+                self._now, self.cfg.heartbeat_timeout_s,
+                self.campaign.campaign_id)
+            self._raise_alert(st, doc)
+
+    # -------------------------------------------------------------- #
+    # offline replay
+    # -------------------------------------------------------------- #
+    def replay_trace(self, trace, device: str | None = None,
+                     unit_key: str | None = None
+                     ) -> list[tuple[str, str, dict]]:
+        """Drive the monitor from a recorded trace's event stream — the
+        exact events a live tap would have delivered.  Returns the alerts
+        this replay raised (content-addressing makes re-replays
+        byte-identical and the saves idempotent)."""
+        if device is None:
+            device = trace.meta.get("sweep", {}).get("device_name", "trace")
+        self.attach(device, unit_key)
+        before = len(self.alerts)
+        for ev in replay_events(trace):
+            self.handle_event(device, *ev)
+        return self.alerts[before:]
+
+    # -------------------------------------------------------------- #
+    # status
+    # -------------------------------------------------------------- #
+    def status(self) -> dict:
+        """Live snapshot for the CLI: per-device ingest counters, watched
+        pairs, current worst drift score, and alert totals."""
+        devices = {}
+        for name in sorted(self._devices):
+            st = self._devices[name]
+            s = st.stream
+            worst_pair, worst_score = None, 0.0
+            for (fi, ft), mon in st.monitors.items():
+                if mon is not None and mon.score >= worst_score:
+                    worst_pair, worst_score = f"{fi:.0f}->{ft:.0f}", mon.score
+            devices[name] = {
+                "unit_key": st.unit_key,
+                "events": s.n_events,
+                "passes": s.n_passes,
+                "skipped": s.n_skipped,
+                "rejected": s.n_rejected,
+                "provisional": s.n_provisional,
+                "baselines": len(s.baselines),
+                "pairs_watched": sum(1 for m in st.monitors.values()
+                                     if m is not None),
+                "alerts": st.n_alerts,
+                "stale": st.stale,
+                "last_t": s.last_t,
+                "max_score": worst_score,
+                "max_score_pair": worst_pair,
+            }
+        return {"campaign_id": self.campaign.campaign_id,
+                "now": self._now,
+                "n_alerts": len(self.alerts),
+                "devices": devices}

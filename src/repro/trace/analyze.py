@@ -104,56 +104,92 @@ class SwitchPassTrace:
     wait_event: int             # index of the WAIT event in the trace
 
 
-def iter_switch_passes(trace: Trace):
-    """Yield every :class:`SwitchPassTrace` in stream order.
+class SwitchPassAssembler:
+    """Push-based switch-pass reconstruction: feed events one at a time
+    (live, from a :meth:`TraceRecorder.add_tap` subscription, or offline
+    from a stored trace) and get a :class:`SwitchPassTrace` back whenever
+    one completes.
 
     A switch pass is a ``set_frequency`` issued between a kernel's launch
     and its wait, preceded by a ``host_now`` read (Alg. 2's t_s); the
     accelerator-timeline mapping comes from the most recent run of
     ``sync_exchange`` events, re-estimated with the identical best-of-n
     rule the live run used."""
-    sync_group: list[tuple] = []
-    sync = None
-    cur_freq: float | None = None
-    last_host_now: float | None = None
-    open_seq: int | None = None          # most recent un-waited launch
-    armed: tuple[float, float, float, int] | None = None
-    for i in range(trace.n_events):
-        kind = int(trace.kinds[i])
+
+    def __init__(self):
+        self._sync_group: list[tuple] = []
+        self._sync = None
+        self.current_freq: float | None = None   # last committed frequency
+        self._last_host_now: float | None = None
+        self._open_seq: int | None = None        # most recent un-waited launch
+        self._armed: tuple[float, float, float, int] | None = None
+
+    def feed(self, kind: int, cols, data=None,
+             index: int = -1) -> SwitchPassTrace | None:
+        """One event: ``cols`` is the c0..c3 row; ``data`` is the WAIT
+        timestamp payload / SYNC_BATCH ``(n, 4)`` exchange array when the
+        event carries one.  Returns the completed pass, if any."""
         if kind == schema.SYNC_EXCHANGE:
-            sync_group.append(tuple(float(v) for v in trace.cols[i]))
-            continue
+            self._sync_group.append(tuple(float(v) for v in cols[:4]))
+            return None
         if kind == schema.SYNC_BATCH:
-            n, _, _, off = trace.cols[i]
-            rows = trace.payload[int(off):int(off) + 2 * int(n)]
-            sync_group.extend(
-                tuple(float(v) for v in rows[2 * j:2 * j + 2].ravel())
-                for j in range(int(n)))
-            continue
-        if sync_group:
-            sync = sync_from_exchanges(sync_group)
-            sync_group = []
+            rows = np.asarray(data, dtype=np.float64).reshape(-1, 4)
+            self._sync_group.extend(tuple(float(v) for v in row)
+                                    for row in rows)
+            return None
+        if self._sync_group:
+            self._sync = sync_from_exchanges(self._sync_group)
+            self._sync_group = []
         if kind == schema.HOST_NOW:
-            last_host_now = float(trace.cols[i, 0])
+            self._last_host_now = float(cols[0])
         elif kind == schema.SET_FREQUENCY:
-            mhz = float(trace.cols[i, 0])
-            if (open_seq is not None and cur_freq is not None
-                    and last_host_now is not None and sync is not None):
-                armed = (cur_freq, mhz, sync.host_to_acc(last_host_now),
-                         open_seq)
-            cur_freq = mhz
+            mhz = float(cols[0])
+            if (self._open_seq is not None and self.current_freq is not None
+                    and self._last_host_now is not None
+                    and self._sync is not None):
+                self._armed = (self.current_freq, mhz,
+                               self._sync.host_to_acc(self._last_host_now),
+                               self._open_seq)
+            self.current_freq = mhz
         elif kind == schema.LAUNCH:
-            open_seq = int(trace.cols[i, 2])
-            armed = None                 # a new launch invalidates any arm
+            self._open_seq = int(cols[2])
+            self._armed = None           # a new launch invalidates any arm
         elif kind == schema.WAIT:
-            seq = int(trace.cols[i, 0])
+            seq = int(cols[0])
+            armed = self._armed
+            if self._open_seq == seq:
+                self._open_seq = None
+            self._armed = None
             if armed is not None and armed[3] == seq:
                 f_init, f_target, t_s, _ = armed
-                yield SwitchPassTrace(f_init, f_target, t_s,
-                                      trace.wait_payload(i), i)
-            if open_seq == seq:
-                open_seq = None
-            armed = None
+                return SwitchPassTrace(f_init, f_target, t_s,
+                                       np.asarray(data), index)
+        return None
+
+
+def trace_event_data(trace: Trace, i: int):
+    """The payload array event ``i`` carries (what a live tap would have
+    seen as ``data``), or None for payload-less kinds."""
+    kind = int(trace.kinds[i])
+    if kind == schema.WAIT:
+        return trace.wait_payload(i)
+    if kind == schema.BATCH:
+        return trace.batch_payload(i)
+    if kind == schema.SYNC_BATCH:
+        n, off = int(trace.cols[i, 0]), int(trace.cols[i, 3])
+        return trace.payload[off:off + 2 * n].reshape(n, 4)
+    return None
+
+
+def iter_switch_passes(trace: Trace):
+    """Yield every :class:`SwitchPassTrace` in stream order (the offline
+    driver over :class:`SwitchPassAssembler`)."""
+    asm = SwitchPassAssembler()
+    for i in range(trace.n_events):
+        sp = asm.feed(int(trace.kinds[i]), trace.cols[i],
+                      trace_event_data(trace, i), index=i)
+        if sp is not None:
+            yield sp
 
 
 # ---------------------------------------------------------------------- #

@@ -230,6 +230,26 @@ class TraceRecorder:
         self._tick_buf: np.ndarray | None = None   # reused encode scratch
         self._dur_buf: np.ndarray | None = None    # reused duration scratch
         self._pending_sync: list[tuple] = []       # current sync round
+        self._taps: list = []                      # live event subscribers
+
+    # stream taps ---------------------------------------------------- #
+    def add_tap(self, fn) -> None:
+        """Subscribe ``fn(kind, t_host, cols, data, extra)`` to every event
+        as it is recorded — the live-streaming hook the fleet monitor
+        attaches to.  ``cols`` is the event's c0..c3 tuple; ``data`` is the
+        timestamp payload for WAIT/BATCH events and the ``(n, 4)`` exchange
+        array for SYNC_BATCH, else None.  Taps see exactly the event stream
+        a saved trace would replay (sync rounds arrive folded, on flush).
+        Taps must not mutate ``data``: it may be the device's live buffer."""
+        self._taps.append(fn)
+
+    def remove_tap(self, fn) -> None:
+        self._taps.remove(fn)
+
+    def _emit_tap(self, kind: int, t_host: float, c: tuple,
+                  data=None, extra: dict | None = None) -> None:
+        for fn in self._taps:
+            fn(kind, t_host, c, data, extra)
 
     @property
     def n_events(self) -> int:
@@ -252,8 +272,9 @@ class TraceRecorder:
             self._f64.prefault(2 * raw_samples + 4 * sync_exchanges)
 
     def record(self, kind: int, t_host: float, c: tuple = _NAN4,
-               extra: dict | None = None) -> int:
-        """Append one event; returns its index."""
+               extra: dict | None = None, tap_data=None) -> int:
+        """Append one event; returns its index.  ``tap_data`` is forwarded
+        to stream taps (payload carriers pass their timestamp array)."""
         if self._pending_sync:
             self._flush_sync()
         i = len(self._kinds)
@@ -262,6 +283,8 @@ class TraceRecorder:
         self._cols.append(c)
         if extra:
             self._extras[i] = extra
+        if self._taps:
+            self._emit_tap(kind, t_host, c, tap_data, extra)
         return i
 
     # sync rounds -------------------------------------------------- #
@@ -285,6 +308,9 @@ class TraceRecorder:
         self._kinds.append(schema.SYNC_BATCH)
         self._t_host.append(float(pend[-1][3]))         # t4 of the last one
         self._cols.append((float(len(pend)), math.nan, math.nan, float(off)))
+        if self._taps:
+            self._emit_tap(schema.SYNC_BATCH, self._t_host[-1],
+                           self._cols[-1], arr)
 
     def _encode_compact(self, data: np.ndarray) -> _PayloadDesc | None:
         """Compact tick encoding, or None when ``data`` doesn't prove (on a
@@ -384,7 +410,8 @@ class TraceRecorder:
         off = self._payload_rows
         self._payloads.append(desc)
         self._payload_rows += desc.rows
-        return self.record(kind, t_host, (*c_prefix, float(off)))
+        return self.record(kind, t_host, (*c_prefix, float(off)),
+                           tap_data=data)
 
     # annotation hooks ---------------------------------------------- #
     def record_plan(self, t_host: float, f_from: float, f_to: float,

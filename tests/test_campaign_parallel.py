@@ -177,3 +177,77 @@ def test_speculative_duplicate_discarded_when_original_wins(tmp_path):
     assert result.ok
     ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
     _assert_tables_bit_identical(ref, result)
+
+
+def test_fault_plan_drift_spec_parsing():
+    fp = FaultPlan.make(drift_after_pairs={"a": (2, 4.0),
+                                           "b": (1, 3.0, 210.0, 705.0)})
+    assert not fp.empty
+    assert fp.drift_for("a") == (2, 4.0, None, None)
+    assert fp.drift_for("b") == (1, 3.0, 210.0, 705.0)
+    assert fp.drift_for("c") is None
+
+
+def test_activate_drift_wraps_the_live_model_idempotently():
+    from repro.backends import create_backend
+    from repro.campaign.workqueue import activate_drift
+    from repro.dvfs.transition_models import ShiftedTransitionModel
+
+    class _Session:
+        pass
+
+    s = _Session()
+    s.device = create_backend("simulated", n_cores=2, seed=0)
+    base = s.device.model
+    activate_drift(s, 4.0, 210.0, 705.0)
+    model = s.device.model
+    assert isinstance(model, ShiftedTransitionModel)
+    assert model.inner is base
+    assert model.only_pair == (210.0, 705.0)
+    activate_drift(s, 4.0, 210.0, 705.0)     # second trip: no re-wrap
+    assert s.device.model is model
+
+
+def test_drift_injection_refuses_untraced_schedules(tmp_path):
+    """Without the traced shared-device path a mid-unit model shift would
+    never be observed; the worker must fail loudly, not measure garbage."""
+    spec = _fleet(1, retries=1)
+    key = spec.units()[0].key
+    result = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "bad")), executor="processes",
+        max_workers=1,
+        fault_plan=FaultPlan.make(drift_after_pairs={key: (1, 4.0)})).run()
+    assert not result.ok
+    assert "trace" in result.outcomes[key].error
+
+
+def test_drift_injection_departs_baseline_mid_unit(tmp_path):
+    """FaultPlan drift through the process scheduler: the marker proves
+    the injection fired, the run still completes, and the batch differ
+    flags the drifted tail of the sweep against an uninjected twin."""
+    from repro.campaign import diff_campaigns
+
+    spec = _fleet(1)
+    key = spec.units()[0].key
+    clean = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "clean")), executor="processes",
+        max_workers=1, trace=True).run()
+    assert clean.ok
+
+    drifted = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "drift")), executor="processes",
+        max_workers=1, trace=True,
+        fault_plan=FaultPlan.make(
+            drift_after_pairs={key: (2, 4.0)})).run()
+    assert drifted.ok, [(o.key, o.error) for o in drifted.failed()]
+    assert os.path.exists(
+        fault_marker_path(drifted.campaign, key, "drift"))
+    # drift is not a fault: nothing crashed, nothing was requeued
+    assert drifted.stats.get("crashed_workers", 0) == 0
+
+    diff = diff_campaigns(clean.campaign, drifted.campaign)
+    flagged = diff.flagged()
+    n_pairs = len(clean.campaign.load_table(key).pairs)
+    assert flagged, "a 4x latency scale must be visible to the differ"
+    # the two pairs measured before activation stayed on-baseline
+    assert len(flagged) < n_pairs

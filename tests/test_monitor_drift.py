@@ -1,0 +1,155 @@
+"""Streaming drift detection: sequential triggers (CUSUM, Page-Hinkley),
+the batch-rule confirm gate, cooldown, and the unpowered-baseline delta
+floor.  Synthetic streams only — service/ingest integration lives in
+test_monitor_service.py / test_monitor_ingest.py."""
+import numpy as np
+
+from repro.core.latency_table import analyse_pair
+from repro.core.stats import Cusum, PageHinkley
+from repro.monitor import DriftConfig, PairMonitor
+
+BASE_MEAN, BASE_STD = 15e-3, 0.4e-3
+
+
+def _baseline(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    pr = analyse_pair(705.0, 210.0, rng.normal(BASE_MEAN, BASE_STD, n),
+                      with_silhouette=False)
+    assert pr.status == "ok" and pr.clean.size
+    return pr
+
+
+def _monitor(baseline=None, **cfg_kw):
+    return PairMonitor("u0@fast", 705.0, 210.0,
+                       baseline if baseline is not None else _baseline(),
+                       DriftConfig(**cfg_kw))
+
+
+# ------------------------------------------------------------------ #
+# detectors
+# ------------------------------------------------------------------ #
+def test_cusum_quiet_on_stationary_trips_on_shift():
+    rng = np.random.default_rng(2)
+    c = Cusum(k=0.5, h=5.0)
+    for z in rng.normal(0.0, 1.0, 300):
+        c.update(z)
+        assert not c.tripped
+    # sustained 1.5-sigma shift: excess over the allowance is 1.0/sample,
+    # so the statistic crosses h=5 within a handful of samples
+    steps = 0
+    while not c.tripped:
+        c.update(1.5)
+        steps += 1
+    assert steps <= 8
+    c.reset()
+    assert c.score == 0.0 and not c.tripped
+
+
+def test_cusum_is_two_sided():
+    c = Cusum(k=0.5, h=5.0)
+    for _ in range(10):
+        c.update(-1.5)                    # latency IMPROVED — still drift
+    assert c.tripped
+
+
+def test_page_hinkley_catches_mean_shift_after_history():
+    """PH self-centers on the stream's running mean, so it fires on a
+    level change the history makes visible (the shape CUSUM's fixed
+    allowance can blur on slow ramps)."""
+    ph = PageHinkley(delta=0.05, lam=5.0)
+    for _ in range(30):
+        ph.update(0.0)
+    assert not ph.tripped
+    for _ in range(30):
+        ph.update(1.0)
+    assert ph.tripped
+
+
+# ------------------------------------------------------------------ #
+# PairMonitor: confirm gate + lifecycle
+# ------------------------------------------------------------------ #
+def test_stationary_stream_never_alerts():
+    mon = _monitor()
+    rng = np.random.default_rng(5)
+    for i, v in enumerate(rng.normal(BASE_MEAN, BASE_STD, 80)):
+        assert mon.observe(float(v), t_stream=float(i)) is None
+    assert mon.n_seen == 80
+
+
+def test_shift_detected_within_budget_with_batch_backed_verdict():
+    mon = _monitor()
+    rng = np.random.default_rng(6)
+    event = None
+    for i, v in enumerate(rng.normal(3 * BASE_MEAN, BASE_STD, 16)):
+        event = mon.observe(float(v), t_stream=10.0 + i)
+        if event is not None:
+            break
+    assert event is not None, "3x shift never confirmed"
+    assert event.sample_index <= 8        # the documented budget
+    assert event.unit_key == "u0@fast"
+    assert (event.f_init, event.f_target) == (705.0, 210.0)
+    assert event.t_stream == 10.0 + event.sample_index - 1
+    # the confirming verdict is the batch rule's own object: flagged,
+    # test-backed (powered on both sides), with the right magnitude
+    assert event.drift.flagged
+    assert event.drift.p_value == event.drift.p_value        # ran, not NaN
+    assert event.drift.rel_delta > 1.0
+    assert len(event.window_clean) >= DriftConfig().diff.min_samples
+    assert event.baseline_n == mon.baseline.clean.size
+
+
+def test_cooldown_suppresses_then_rearms():
+    cfg_cooldown = 6
+    mon = _monitor(cooldown=cfg_cooldown)
+    rng = np.random.default_rng(7)
+    shifted = rng.normal(3 * BASE_MEAN, BASE_STD, 60)
+    events = [i for i, v in enumerate(shifted)
+              if mon.observe(float(v)) is not None]
+    assert len(events) >= 2, "monitor never re-armed after cooldown"
+    # the reset window keeps refilling during the cooldown, so the
+    # earliest legal re-alert is cooldown + 1 samples after the last one
+    gap = events[1] - events[0]
+    assert gap > cfg_cooldown
+
+
+def test_window_eviction_keeps_detection_alive():
+    """A long stationary prefix must not blind the monitor: the sliding
+    window evicts old samples, so a late shift still confirms."""
+    mon = _monitor(window=16)
+    rng = np.random.default_rng(8)
+    for v in rng.normal(BASE_MEAN, BASE_STD, 100):
+        assert mon.observe(float(v)) is None
+    event = None
+    for v in rng.normal(3 * BASE_MEAN, BASE_STD, 32):
+        event = mon.observe(float(v))
+        if event is not None:
+            break
+    assert event is not None
+    assert len(event.window) <= 16
+
+
+def test_unpowered_baseline_needs_the_wide_delta_floor():
+    """With a baseline too small for the Mann-Whitney test the batch rule
+    lets the 20% delta decide alone; the monitor demands the much wider
+    unpowered_delta margin before paging anyone."""
+    small = analyse_pair(
+        705.0, 210.0,
+        np.random.default_rng(9).normal(BASE_MEAN, BASE_STD, 3),
+        with_silhouette=False)
+    assert small.clean.size < DriftConfig().diff.min_samples
+    rng = np.random.default_rng(10)
+
+    mod = _monitor(baseline=small)
+    for v in rng.normal(1.4 * BASE_MEAN, BASE_STD, 40):
+        assert mod.observe(float(v)) is None, (
+            "a +40% shift on an untestable baseline must not alert")
+
+    big = _monitor(baseline=small)
+    event = None
+    for v in rng.normal(3 * BASE_MEAN, BASE_STD, 16):
+        event = big.observe(float(v))
+        if event is not None:
+            break
+    assert event is not None, "a 3x shift must clear the delta floor"
+    assert event.drift.p_value != event.drift.p_value        # NaN: no test
+    assert abs(event.drift.rel_delta) > DriftConfig().unpowered_delta

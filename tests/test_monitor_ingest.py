@@ -1,0 +1,140 @@
+"""Stream ingestion parity: a DeviceStream fed the raw event stream must
+learn exactly what the session itself knows — calibration baselines bit
+for bit, pass estimates identical to the offline analyzer — and a live
+tap must be indistinguishable from replaying the stored trace."""
+import numpy as np
+import pytest
+
+from repro.backends import create_backend
+from repro.core.calibration import calibrate
+from repro.core.switching import measure_switch_once
+from repro.core.workload import WorkloadSpec
+from repro.monitor import DeviceStream
+from repro.monitor.ingest import replay_events
+from repro.trace import TracedBackend, TraceRecorder
+from repro.trace.analyze import iter_switch_passes
+from repro.trace.online import stream_pass
+
+FREQS = [210.0, 705.0, 1410.0]
+SPEC = WorkloadSpec(iters_per_kernel=900, flops_per_iter=40e-6,
+                    delay_iters=250, confirm_iters=300)
+
+
+@pytest.fixture(scope="module")
+def recorded():
+    """A calibrated sweep (one pass per ordered pair) recorded with a
+    live DeviceStream tap attached from the first event."""
+    rec = TraceRecorder()
+    live = DeviceStream("dev0")
+    rec.add_tap(live.tap())
+    device = TracedBackend(create_backend("simulated", n_cores=4, seed=3),
+                           rec)
+    cal = calibrate(device, FREQS, SPEC)
+    n_pairs = 0
+    for fi in FREQS:
+        for ft in FREQS:
+            if fi != ft:
+                measure_switch_once(device, fi, ft, cal, SPEC)
+                n_pairs += 1
+    return cal, live, rec.finish(), n_pairs
+
+
+def _replayed(trace):
+    stream = DeviceStream("dev0")
+    estimates = [est for ev in replay_events(trace)
+                 if (est := stream.feed(*ev)) is not None]
+    return stream, estimates
+
+
+def test_baselines_learned_from_the_wire_bit_match_calibration(recorded):
+    cal, live, _, _ = recorded
+    assert set(live.baselines) == set(cal.baselines)
+    for f, learned in live.baselines.items():
+        ref = cal.baselines[f]
+        assert learned.mean == ref.mean
+        assert learned.std == ref.std
+        assert learned.n == ref.n
+
+
+def test_live_tap_equals_offline_replay(recorded):
+    """The tap sees exactly what the stored trace replays: every counter
+    and every learned baseline agree between the two paths."""
+    _, live, trace, n_pairs = recorded
+    replay, estimates = _replayed(trace)
+    assert live.n_events == replay.n_events == trace.n_events
+    assert live.n_passes == replay.n_passes == n_pairs
+    assert live.n_skipped == replay.n_skipped == 0
+    assert live.n_rejected == replay.n_rejected
+    assert live.n_provisional == replay.n_provisional
+    assert live.last_t == replay.last_t
+    assert len(estimates) == n_pairs
+    for f, b in live.baselines.items():
+        rb = replay.baselines[f]
+        assert (b.mean, b.std, b.n) == (rb.mean, rb.std, rb.n)
+
+
+def test_streamed_estimates_match_offline_analyzer(recorded):
+    """Each streamed estimate equals stream_pass run on the offline
+    analyzer's reconstruction of the same pass against the session's own
+    calibration baselines (which the stream only learned from events)."""
+    cal, _, trace, _ = recorded
+    _, estimates = _replayed(trace)
+    passes = list(iter_switch_passes(trace))
+    assert len(estimates) == len(passes)
+    for est, sp in zip(estimates, passes):
+        assert (est.f_init, est.f_target) == (sp.f_init, sp.f_target)
+        assert est.t_s == sp.t_s
+        final, provisional = stream_pass(sp.data, sp.t_s,
+                                         cal.baselines[sp.f_target])
+        if final is None:
+            assert est.latency_s is None
+        else:
+            assert est.latency_s == float(final.latency)
+        assert est.n_provisional == len(provisional)
+        assert est.device == "dev0"
+
+
+def test_mid_stream_attachment_skips_until_baseline_known():
+    """A stream attached after calibration has no baseline for early
+    passes: they are counted as skipped, never guessed at."""
+    rec = TraceRecorder()
+    device = TracedBackend(create_backend("simulated", n_cores=4, seed=4),
+                           rec)
+    cal = calibrate(device, FREQS[:2], SPEC)
+    n_cal_events = rec.n_events
+    measure_switch_once(device, FREQS[0], FREQS[1], cal, SPEC)
+    trace = rec.finish()
+    stream = DeviceStream("late")
+    # drop the whole calibration prefix (where baselines come from):
+    # attach right before the measured pass
+    events = list(replay_events(trace))
+    estimates = [est for ev in events[n_cal_events:]
+                 if (est := stream.feed(*ev)) is not None]
+    assert stream.n_passes >= 1
+    assert stream.n_skipped >= 1
+    assert estimates == []
+
+
+def test_replay_events_is_the_tap_stream():
+    """replay_events yields tuples in the exact tap signature order with
+    native python types for kind/timestamp."""
+    rec = TraceRecorder()
+    seen = []
+    rec.add_tap(lambda *ev: seen.append(ev))
+    device = TracedBackend(create_backend("simulated", n_cores=4, seed=5),
+                           rec)
+    device.set_frequency(FREQS[0])
+    trace = rec.finish()
+    replayed = list(replay_events(trace))
+    assert len(replayed) == len(seen) == trace.n_events
+    for (k, t, cols, data, extra), (lk, lt, lcols, ldata, lextra) in zip(
+            replayed, seen):
+        assert isinstance(k, int) and isinstance(t, float)
+        assert (k, t) == (int(lk), float(lt))
+        assert np.array_equal(np.asarray(cols, dtype=np.float64),
+                              np.asarray(lcols, dtype=np.float64),
+                              equal_nan=True)
+        if ldata is None:
+            assert data is None
+        else:
+            assert np.array_equal(data, ldata)

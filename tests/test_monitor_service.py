@@ -1,0 +1,169 @@
+"""MonitorService end to end: a stored campaign baseline, live taps and
+trace replays, drift alerts persisted as deterministic artifacts, stale
+device detection on the shared stream clock, and the CLI surface."""
+import json
+
+import pytest
+
+from repro.backends import create_backend
+from repro.campaign import (ArtifactStore, CampaignSpec, DeviceSpec,
+                            MeasureSpec, run_campaign)
+from repro.core.session import MeasurementSession, SessionConfig
+from repro.dvfs.transition_models import ShiftedTransitionModel
+from repro.monitor import MonitorConfig, MonitorService
+from repro.monitor.ingest import replay_events
+from repro.trace import TracedBackend, TraceRecorder
+
+FAST = MeasureSpec(key="fast", min_measurements=6, max_measurements=8,
+                   rse_check_every=6)
+KINDS = {"d0": "gh200", "d1": "a100"}
+QUIET = 1e9          # parks stale detection where it is not under test
+
+
+def _quiet_cfg():
+    return MonitorConfig(heartbeat_timeout_s=QUIET)
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    """A traced two-device baseline campaign the whole module monitors."""
+    spec = CampaignSpec(
+        "monitor-svc",
+        devices=tuple(
+            DeviceSpec.make(key, "vmapped-sim",
+                            {"kind": kind, "n_cores": 6, "seed": 0,
+                             "unit_seed": 0}, n_freqs=2)
+            for key, kind in KINDS.items()),
+        measures=(FAST,))
+    store = ArtifactStore(str(tmp_path_factory.mktemp("svc-store")))
+    result = run_campaign(spec, store, trace=True)
+    assert result.ok, [o.error for o in result.failed()]
+    return result.campaign
+
+
+def _gen2_session(key: str, *, drift_scale: float | None,
+                  monitor: MonitorService | None):
+    """A live gen2 device (new measurement seed, same unit physics),
+    optionally drifted, optionally tapped into ``monitor``; returns the
+    finished recorder's trace."""
+    dev = create_backend("vmapped-sim", kind=KINDS[key], n_cores=6, seed=1,
+                         unit_seed=0)
+    if drift_scale is not None:
+        dev.model = ShiftedTransitionModel(dev.model, drift_scale)
+    recorder = TraceRecorder()
+    traced = TracedBackend(dev, recorder)
+    if monitor is not None:
+        monitor.attach_recorder(key, recorder)
+    session = MeasurementSession(
+        traced, DeviceSpec.make(key, n_freqs=2).resolve_frequencies(dev),
+        SessionConfig(latest=FAST.to_latest_config()), device_name=key)
+    session.run(verbose=False)
+    return recorder.finish()
+
+
+def test_replaying_the_baselines_own_stream_stays_silent(baseline):
+    service = MonitorService(baseline, _quiet_cfg())
+    for key in KINDS:
+        raised = service.replay_trace(baseline.load_trace(f"{key}@fast"),
+                                      device=key)
+        assert raised == []
+    status = service.status()
+    assert status["campaign_id"] == baseline.campaign_id
+    assert status["n_alerts"] == 0
+    for key in KINDS:
+        d = status["devices"][key]
+        assert d["unit_key"] == f"{key}@fast"
+        assert d["events"] > 0 and d["passes"] > 0
+        assert d["pairs_watched"] >= 1
+        assert not d["stale"]
+
+
+def test_stationary_gen2_stream_raises_no_false_alerts(baseline):
+    service = MonitorService(baseline, _quiet_cfg())
+    _gen2_session("d0", drift_scale=None, monitor=service)
+    assert service.alerts == []
+
+
+def test_drifted_device_alerts_live_and_replay_is_bit_identical(baseline):
+    service = MonitorService(baseline, _quiet_cfg())
+    trace = _gen2_session("d1", drift_scale=4.0, monitor=service)
+    drift = [(aid, unit, doc) for aid, unit, doc in service.alerts
+             if doc["kind"] == "drift"]
+    assert drift, "a 4x transition-model shift must be detected live"
+    assert all(unit == "d1@fast" for _, unit, _ in drift)
+    assert all(doc["device"] == "d1" for _, _, doc in drift)
+    budget = 8
+    assert min(doc["sample_index"] for _, _, doc in drift) <= budget
+    # every alert is a stored, content-addressed artifact...
+    stored = baseline.list_alerts()["d1@fast"]
+    assert {aid for aid, _, _ in drift} <= set(stored)
+    for aid, unit, doc in drift:
+        assert baseline.load_alert(unit, aid) == doc
+    # ...and replaying the recorded stream reproduces the alerts bit for
+    # bit (same ids), with the store save idempotent
+    replay = MonitorService(baseline, _quiet_cfg())
+    raised = replay.replay_trace(trace, device="d1")
+    assert [aid for aid, _, _ in raised] == [aid for aid, _, _ in
+                                             service.alerts]
+    assert baseline.list_alerts()["d1@fast"] == stored
+
+
+def test_silent_device_goes_stale_once_then_revives(baseline):
+    t0 = baseline.load_trace("d0@fast")
+    t1 = baseline.load_trace("d1@fast")
+    ev0, ev1 = list(replay_events(t0)), list(replay_events(t1))
+    cut = len(ev1) // 3
+    # timeout: d1 falls silent at its cut while d0's stream keeps the
+    # service clock advancing well past it
+    span = ev0[-1][1] - ev1[cut][1]
+    assert span > 0
+    service = MonitorService(
+        baseline, MonitorConfig(heartbeat_timeout_s=span / 4))
+    service.attach("d0")
+    service.attach("d1")
+    for ev in ev1[:cut]:
+        service.handle_event("d1", *ev)
+    for ev in ev0:
+        service.handle_event("d0", *ev)
+    stale = [doc for _, _, doc in service.alerts
+             if doc["kind"] == "stale-device"]
+    assert len(stale) == 1, "one silence must raise exactly one alert"
+    assert stale[0]["device"] == "d1"
+    assert stale[0]["silent_s"] >= span / 4
+    assert service.status()["devices"]["d1"]["stale"]
+    assert not service.status()["devices"]["d0"]["stale"]
+    # the device comes back: the stale latch clears, no duplicate alert
+    for ev in ev1[cut:]:
+        service.handle_event("d1", *ev)
+    assert not service.status()["devices"]["d1"]["stale"]
+    assert len([doc for _, _, doc in service.alerts
+                if doc["kind"] == "stale-device"]) == 1
+
+
+def test_unit_resolution_matches_governor_rule(baseline):
+    service = MonitorService(baseline, _quiet_cfg())
+    service.attach("d0")                       # device-prefix resolution
+    assert service.status()["devices"]["d0"]["unit_key"] == "d0@fast"
+    service.attach("other", unit_key="d1@fast")   # explicit unit key
+    assert service.status()["devices"]["other"]["unit_key"] == "d1@fast"
+    with pytest.raises(KeyError):
+        MonitorService(baseline, _quiet_cfg()).attach("nonexistent")
+
+
+def test_cli_status_and_replay(baseline, capsys):
+    from repro.monitor.cli import main
+    root = baseline.dir.rsplit("/", 1)[0]
+    cid = baseline.campaign_id
+
+    assert main(["--store", root, "status", cid, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["campaign_id"] == cid
+
+    # replaying the baseline's own stored trace (unit-key reference) must
+    # stay silent even under the CI gate flag
+    rc = main(["--store", root, "replay", cid, "d0@fast",
+               "--fail-on-alert", "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert out["alerts"] == []
+    assert out["devices"]["d0"]["passes"] > 0

@@ -75,3 +75,36 @@ def test_welch_symmetry(mu, sigma, n):
     a = stats.mean_std(rng.normal(mu, sigma, n))
     b = stats.mean_std(rng.normal(mu * 1.5, sigma, n))
     assert stats.welch_t_test(a, b) == pytest.approx(-stats.welch_t_test(b, a))
+
+
+@given(st.lists(st.floats(1e-6, 1e-2), min_size=2, max_size=64),
+       st.data())
+@settings(max_examples=100, deadline=None)
+def test_running_stats_matches_recompute_through_removals(vals, data):
+    """The monitor's sliding window leans on RunningStats.remove: after any
+    interleaving of adds and removals the O(1) accumulator must agree with
+    a from-scratch recompute over the surviving samples to 1e-12 relative
+    (the shifted-sums design exists precisely so near-constant latency
+    windows don't cancel catastrophically)."""
+    rs = stats.RunningStats()
+    window = []
+    for v in vals:
+        rs.add(v)
+        window.append(v)
+        if len(window) > 1 and data.draw(st.booleans()):
+            victim = window.pop(data.draw(
+                st.integers(0, len(window) - 1)))
+            rs.remove(victim)
+        if not window:
+            continue
+        arr = np.asarray(window)
+        mean = arr.mean()
+        assert rs.n == len(window)
+        assert rs.mean == pytest.approx(mean, rel=1e-12, abs=1e-300)
+        if len(window) >= 2:
+            std = arr.std(ddof=1)
+            assert rs.std == pytest.approx(std, rel=1e-12, abs=1e-12)
+            if mean != 0:
+                assert rs.rse() == pytest.approx(
+                    std / np.sqrt(len(window)) / abs(mean),
+                    rel=1e-12, abs=1e-12)
