@@ -1,0 +1,222 @@
+"""Cluster dispatch benchmark: multi-node campaigns under chaos.
+
+Runs the same simulated fleet three ways — serial (the paper's
+single-host shape), ``--executor processes`` (the in-host work queue),
+and ``--executor cluster`` (simulated nodes over the chaos-injectable
+transport with all store traffic retry-wrapped) — into separate stores,
+verifies the cluster store is **bit-identical** to serial via the
+campaign content digest, and records two numbers in
+``BENCH_cluster.json``:
+
+* **dispatch overhead**: cluster wall time relative to the process
+  executor on the identical fleet — what the transport hop, the remote
+  store round trips, and the driver loop cost on top of plain process
+  dispatch;
+* **recovery time**: with ``--inject-crash``, the scheduler's
+  ``recovery_s`` stat — worker-loss detection to the requeued unit's
+  completion (the resumed attempt restarts from the store's uploaded
+  pair files, so this bounds the blast radius of losing a node).
+
+CI's ``distributed-smoke`` job runs ``--smoke --inject-crash
+--inject-partition``: a node dies two pairs into a unit AND the driver's
+store link partitions for a window of operations; the campaign must
+still complete within the attempt budget with the merged store
+bit-identical to serial.
+
+  PYTHONPATH=src python -m benchmarks.cluster_dispatch [--smoke]
+      [--nodes N] [--inject-crash] [--inject-partition] [--units N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import time
+
+_KIND = "gh200"
+_FREQS = (345.0, 1155.0, 1980.0)
+
+
+def fleet_spec(n_units: int, *, n_cores: int, max_measurements: int,
+               retries: int = 3):
+    from repro.campaign import CampaignSpec, DeviceSpec, MeasureSpec
+    measure = MeasureSpec(key="fast", min_measurements=4,
+                          max_measurements=max_measurements,
+                          rse_check_every=4)
+    devices = tuple(
+        DeviceSpec.make(f"u{i:02d}-{_KIND}", "simulated",
+                        {"kind": _KIND, "n_cores": n_cores, "seed": i},
+                        frequencies=_FREQS)
+        for i in range(n_units))
+    return CampaignSpec("cluster-dispatch", devices=devices,
+                        measures=(measure,), retries=retries)
+
+
+def crash_unit_key(spec) -> str:
+    return spec.units()[0].key
+
+
+def run_cluster_bench(*, n_units: int, n_cores: int, max_measurements: int,
+                      nodes: int, inject_crash: bool, inject_partition: bool,
+                      store_root: str, verbose: bool = False):
+    """Serial reference, process baseline, cluster candidate; returns
+    (rows, cluster stats, metrics)."""
+    from repro.campaign import ArtifactStore, CampaignRunner
+    from repro.campaign.workqueue import FaultPlan, fault_marker_path
+
+    spec = fleet_spec(n_units, n_cores=n_cores,
+                      max_measurements=max_measurements)
+    roots = {name: os.path.join(store_root, name)
+             for name in ("serial", "processes", "cluster")}
+    for r in roots.values():            # fresh stores: measure, not resume
+        shutil.rmtree(r, ignore_errors=True)
+
+    t0 = time.perf_counter()
+    ref = CampaignRunner(spec, ArtifactStore(roots["serial"])).run(
+        verbose=verbose)
+    t_serial = time.perf_counter() - t0
+    if not ref.ok:
+        raise AssertionError(f"serial reference failed: "
+                             f"{[(o.key, o.error) for o in ref.failed()]}")
+
+    t0 = time.perf_counter()
+    proc = CampaignRunner(spec, ArtifactStore(roots["processes"]),
+                          executor="processes", max_workers=nodes).run(
+        verbose=verbose)
+    t_proc = time.perf_counter() - t0
+    if not proc.ok:
+        raise AssertionError(f"process baseline failed: "
+                             f"{[(o.key, o.error) for o in proc.failed()]}")
+
+    faults = {}
+    if inject_crash:
+        faults["node_crash_after_pairs"] = {crash_unit_key(spec): 2}
+    if inject_partition:
+        # the driver's first marks ride, then a window of its store ops
+        # fails until the retries spend it — heals within one backoff cycle
+        faults["store_partition"] = (2, 4)
+    plan = FaultPlan.make(**faults) if faults else None
+
+    t0 = time.perf_counter()
+    cand = CampaignRunner(spec, ArtifactStore(roots["cluster"]),
+                          executor="cluster", max_workers=nodes,
+                          fault_plan=plan).run(verbose=verbose)
+    t_cluster = time.perf_counter() - t0
+    if not cand.ok:
+        raise AssertionError(f"cluster campaign failed: "
+                             f"{[(o.key, o.error) for o in cand.failed()]}")
+
+    recovery_s = float(cand.stats.get("recovery_s", 0.0))
+    if inject_crash:
+        marker = fault_marker_path(cand.campaign, crash_unit_key(spec),
+                                   "node_crash")
+        if not os.path.exists(marker):
+            raise AssertionError(
+                f"injected node crash never fired (missing {marker})")
+        if cand.stats.get("crashed_nodes", 0) < 1:
+            raise AssertionError(
+                f"crash fired but no node was reaped: {cand.stats}")
+        if cand.stats.get("requeued_units", 0) < 1:
+            raise AssertionError(
+                f"crashed unit was not requeued: {cand.stats}")
+        if recovery_s <= 0:
+            raise AssertionError(
+                f"no recovery time recorded after a node kill: {cand.stats}")
+    if inject_partition and cand.stats.get("driver_partitioned_ops", 0) < 1:
+        raise AssertionError(
+            f"injected partition never fired: {cand.stats}")
+
+    ref_digest = ref.campaign.content_digest()
+    if cand.campaign.content_digest() != ref_digest:
+        raise AssertionError(
+            "cluster store is NOT bit-identical to the serial reference")
+    n_units_done = len(cand.campaign.done_units())
+
+    overhead = t_cluster / t_proc if t_proc > 0 else float("inf")
+    chaos = "+".join(n for n, on in (("crash", inject_crash),
+                                     ("partition", inject_partition)) if on)
+    rows = [
+        ("cluster_serial_ref", t_serial * 1e6,
+         f"units={n_units} wall_s={t_serial:.2f}"),
+        ("cluster_process_baseline", t_proc * 1e6,
+         f"workers={nodes} wall_s={t_proc:.2f}"),
+        ("cluster_dispatch", t_cluster * 1e6,
+         f"nodes={nodes} wall_s={t_cluster:.2f} "
+         f"dispatch_overhead_vs_processes={overhead:.2f} "
+         f"recovery_s={recovery_s:.3f} "
+         f"bit_identical_units={n_units_done}"
+         + (f" chaos={chaos}" if chaos else "")),
+    ]
+    metrics = {"t_serial": t_serial, "t_proc": t_proc,
+               "t_cluster": t_cluster, "overhead": overhead,
+               "recovery_s": recovery_s, "digest": ref_digest}
+    return rows, cand.stats, metrics
+
+
+def bench_cluster():
+    """benchmarks.run entry point -> BENCH_cluster.json."""
+    from repro.core.paths import results_dir
+    rows, _, metrics = run_cluster_bench(
+        n_units=6, n_cores=8, max_measurements=8,
+        nodes=min(3, os.cpu_count() or 1), inject_crash=True,
+        inject_partition=False,
+        store_root=results_dir("cluster-dispatch"))
+    # sanity ceiling only: node threads share the GIL, so the cluster sim
+    # trades wall time for fault coverage; a blown ceiling means the
+    # dispatch loop or retry layer regressed pathologically
+    assert metrics["overhead"] < 6.0, (
+        f"cluster dispatch overhead {metrics['overhead']:.2f}x over the "
+        "process executor")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fleet (4 small units)")
+    ap.add_argument("--nodes", type=int,
+                    default=min(3, os.cpu_count() or 1))
+    ap.add_argument("--units", type=int, default=None,
+                    help="fleet size (default: 4 smoke / 6 full)")
+    ap.add_argument("--inject-crash", action="store_true",
+                    help="kill a node two pairs into a unit; the run must "
+                         "complete via requeue with recovery_s recorded")
+    ap.add_argument("--inject-partition", action="store_true",
+                    help="partition the driver from the store for a window "
+                         "of operations; the retry layer must ride it out")
+    ap.add_argument("--store-root", default=None,
+                    help="scratch store root (default: "
+                         "$REPRO_RESULTS_DIR/cluster-dispatch)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.core.paths import results_dir
+    n_units = args.units or (4 if args.smoke else 6)
+    shape = (dict(n_cores=6, max_measurements=6) if args.smoke
+             else dict(n_cores=8, max_measurements=8))
+    rows, stats, metrics = run_cluster_bench(
+        n_units=n_units, nodes=args.nodes,
+        inject_crash=args.inject_crash,
+        inject_partition=args.inject_partition,
+        store_root=args.store_root or results_dir("cluster-dispatch"),
+        verbose=args.verbose, **shape)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"cluster stats: {stats}", file=sys.stderr)
+
+    from benchmarks.run import _emit_json
+    _emit_json(results_dir("bench"), "cluster", rows,
+               sum(us for _, us, _ in rows) / 1e6)
+    print(f"ok: bit-identical to serial, "
+          f"{metrics['overhead']:.2f}x dispatch overhead vs processes"
+          + (f", {metrics['recovery_s']:.2f}s node-kill recovery"
+             if args.inject_crash else "")
+          + "; BENCH_cluster.json written")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

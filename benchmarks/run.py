@@ -46,6 +46,7 @@ def main() -> None:
 
     from benchmarks.analysis_speedup import bench_analysis
     from benchmarks.campaign_scale import bench_campaign
+    from benchmarks.cluster_dispatch import bench_cluster
     from benchmarks.governor_energy import bench_governor_energy
     from benchmarks.kernel_bench import (bench_flash_attention_kernel,
                                          bench_microbench_kernel,
@@ -69,6 +70,7 @@ def main() -> None:
         bench_sweep,                 # end-to-end batched sweep engine
         bench_analysis,              # sorted-window analysis engine
         bench_campaign,              # process-parallel fleet scaling
+        bench_cluster,               # multi-node dispatch under chaos
         bench_trace,                 # telemetry recorder overhead (<5% bar)
         bench_monitor,               # fleet monitor ingest + detection delay
         bench_phase1_two_sigma,      # §V-A

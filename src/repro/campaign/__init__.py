@@ -1,6 +1,8 @@
 # Fleet-scale measurement orchestration on top of MeasurementSession:
 # declarative specs -> scheduled sessions -> content-addressed artifacts ->
 # cross-device aggregation -> drift detection between campaigns.
+# Multi-node dispatch (transports, remote stores, retry policies) lives in
+# repro.campaign.cluster and is imported from there, not re-exported here.
 from repro.campaign.spec import (CampaignSpec, DeviceSpec, MeasureSpec,
                                  UnitSpec)
 from repro.campaign.store import ArtifactStore, Campaign

@@ -1,0 +1,58 @@
+"""Multi-node campaign dispatch that survives a hostile fleet.
+
+The cluster layer spans a campaign across N worker nodes behind the
+same executor protocol as the process work queue, and makes the
+artifact store pluggable behind a transport:
+
+* :mod:`~repro.campaign.cluster.transport` — the :class:`NodeTransport`
+  protocol, the chaos-injected in-process :class:`SimTransport`, and
+  the per-link deterministic fault model;
+* :mod:`~repro.campaign.cluster.remote_store` — the store-host request
+  handler plus :class:`LocalStore` / :class:`RemoteStoreClient`
+  (content-addressed, idempotent, retry-wrapped);
+* :mod:`~repro.campaign.cluster.retry` — capped-exponential backoff
+  with deterministic seeded jitter, per-op timeouts, dead letters;
+* :mod:`~repro.campaign.cluster.node` — the simulated worker node
+  (thread + scratch disk + transport-only store access);
+* :mod:`~repro.campaign.cluster.dispatch` — the driver, built on the
+  shared :class:`~repro.campaign.workqueue.DispatchCore`;
+* :mod:`~repro.campaign.cluster.ssh` — the real-transport contract
+  stub.
+
+Entry point: ``CampaignRunner(..., executor="cluster")`` or
+``python -m repro.campaign run spec.json --executor cluster --nodes 3``.
+"""
+from repro.campaign.cluster.dispatch import ClusterCampaignScheduler
+from repro.campaign.cluster.node import NodeWorker
+from repro.campaign.cluster.remote_store import (LocalStore,
+                                                 RemoteStoreClient,
+                                                 StoreServer, blob_digest,
+                                                 file_digest)
+from repro.campaign.cluster.retry import (DeadLetterFile, RetriesExhausted,
+                                          RetryableError, RetryPolicy,
+                                          StoreWriteError, TransportError,
+                                          TransportTimeout, call_with_retry)
+from repro.campaign.cluster.transport import (Channel, NodeTransport,
+                                              SimTransport, TransportFaults)
+
+__all__ = [
+    "Channel",
+    "ClusterCampaignScheduler",
+    "DeadLetterFile",
+    "LocalStore",
+    "NodeTransport",
+    "NodeWorker",
+    "RemoteStoreClient",
+    "RetriesExhausted",
+    "RetryPolicy",
+    "RetryableError",
+    "SimTransport",
+    "StoreServer",
+    "StoreWriteError",
+    "TransportError",
+    "TransportFaults",
+    "TransportTimeout",
+    "blob_digest",
+    "call_with_retry",
+    "file_digest",
+]

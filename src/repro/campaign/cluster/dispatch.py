@@ -1,0 +1,291 @@
+"""Multi-node campaign dispatch: the driver side of the cluster.
+
+:class:`ClusterCampaignScheduler` is the node-spanning sibling of
+:class:`~repro.campaign.workqueue.ProcessCampaignScheduler` — same
+:class:`~repro.campaign.workqueue.DispatchCore` (attempt budgets,
+requeue on worker loss, straggler speculation, first-result-wins), same
+:class:`~repro.runtime.fault_tolerance.HeartbeatMonitor` /
+:class:`~repro.runtime.fault_tolerance.StragglerPolicy`, with "worker"
+instantiated as a node handle instead of a process: ``send_unit`` pushes
+a dispatch message over the (possibly lossy) transport, liveness is the
+node thread, and a reap sets the node's stop event instead of
+``terminate()``.
+
+What the cluster adds on top of the process scheduler:
+
+* the driver's own store access (manifest marks) crosses the transport
+  through a retry-wrapped :class:`RemoteStoreClient` — a driver<->store
+  partition stalls marks, the retry layer rides out windows shorter
+  than its budget, and marks that still exhaust are *deferred*, not
+  fatal: the driver re-flushes every deferred mark after the dispatch
+  loop (the partition has healed by then — its op-count window was
+  spent during the retries), so the manifest converges even when the
+  partition outlives a single retry cycle;
+* silence is a first-class failure: a dropped dispatch message leaves a
+  node idle while the driver believes it busy — no process analogue
+  exists, but no new machinery is needed either, because the heartbeat
+  timeout already treats "no progress" and "hung" identically and the
+  requeue path recovers both;
+* completion acks may be dropped *after* the artifacts landed; the
+  requeued attempt finds every pair already uploaded, resumes in one
+  beat, and re-acks — which is why ``done`` is only sent after the full
+  upload.
+
+Bit-identity across all of this is inherited, not re-proven: nodes
+measure each pair on a pair-seeded device, so whichever node (or
+however many nodes, speculatively) measures a pair produces the same
+bytes, and the store's content-addressed dedup makes every duplicate
+write a no-op.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.campaign.cluster.node import NodeWorker
+from repro.campaign.cluster.remote_store import (RemoteStoreClient,
+                                                 StoreServer)
+from repro.campaign.cluster.retry import (DeadLetterFile, RetriesExhausted,
+                                          RetryPolicy)
+from repro.campaign.cluster.transport import (POISON, SimTransport,
+                                              TransportFaults)
+from repro.campaign.spec import CampaignSpec, UnitSpec
+from repro.campaign.store import Campaign
+from repro.campaign.workqueue import DispatchCore, FaultPlan, _trip_once
+
+
+class _NodeHandle:
+    """DispatchCore's worker protocol over one node's links."""
+
+    def __init__(self, node: NodeWorker, inbox, outbox):
+        self.node = node
+        self.inbox = inbox          # driver -> node (dispatch)
+        self.outbox = outbox        # node -> driver (acks + heartbeats)
+        self.inflight: str | None = None
+
+    def send_unit(self, key: str) -> None:
+        self.inbox.send(("unit", key))
+
+    @property
+    def alive(self) -> bool:
+        return self.node.alive
+
+
+class ClusterCampaignScheduler:
+    """Drive a campaign's pending units across N (simulated) nodes.
+
+    The driver owns all bookkeeping and is the only manifest writer;
+    nodes only ever touch their own unit's artifact files, through the
+    store server's idempotent content-addressed writes.  ``retry_policy``
+    governs every transport-crossing store operation (driver marks and
+    node uploads alike); the sim default trades the production-shaped
+    waits of :class:`RetryPolicy` for millisecond backoffs so chaos
+    tests stay fast."""
+
+    #: sim-scaled retry policy: same shape, millisecond waits
+    SIM_POLICY = RetryPolicy(max_attempts=8, base_s=0.005, cap_s=0.05,
+                             timeout_s=5.0)
+
+    def __init__(self, spec: CampaignSpec, campaign: Campaign, *,
+                 n_nodes: int = 3,
+                 heartbeat_timeout_s: float = 60.0,
+                 straggler_ratio: float = 3.0,
+                 speculate: bool = True,
+                 fault_plan: FaultPlan | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 scratch_root: str | None = None,
+                 poll_s: float = 0.02,
+                 clock=time.monotonic,
+                 verbose: bool = False):
+        self.spec = spec
+        self.campaign = campaign
+        self.n_nodes = max(1, int(n_nodes))
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.straggler_ratio = straggler_ratio
+        self.speculate = speculate
+        self.fault_plan = fault_plan or FaultPlan()
+        self.retry_policy = retry_policy or self.SIM_POLICY
+        # node scratch disks default to a sibling of the campaign dir:
+        # inside the store root but outside any campaign, so store
+        # listings and digests never see them
+        self.scratch_root = scratch_root or os.path.join(
+            os.path.dirname(campaign.dir),
+            f"_node_scratch_{campaign.campaign_id}")
+        self.poll_s = poll_s
+        self.clock = clock
+        self.verbose = verbose
+        self.trace = False          # protocol parity with the process
+                                    # scheduler; cluster runs refuse trace
+        self.stats = {"crashed_nodes": 0, "hung_nodes": 0,
+                      "respawned_nodes": 0, "deferred_marks": 0}
+
+    # -------------------------------------------------------------- #
+    def run(self, todo: list[UnitSpec]) -> dict:
+        from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                                   StragglerPolicy)
+        if self.trace:
+            raise ValueError(
+                "executor='cluster' cannot record traces: a trace is a "
+                "host-local event stream, and requeued/speculated node "
+                "attempts would each hold fragments — run trace "
+                "campaigns with executor='processes'")
+        if not todo:
+            return {}
+        plan = self.fault_plan
+        self.transport = SimTransport(TransportFaults.from_plan(plan),
+                                      clock=self.clock)
+        self.server = StoreServer(self.campaign, fault_plan=plan)
+        dl_dir = os.path.join(self.campaign.dir, "deadletter")
+        self.driver_store = RemoteStoreClient(
+            self.server, self.transport, "driver",
+            policy=self.retry_policy,
+            dead_letters=DeadLetterFile(os.path.join(dl_dir,
+                                                     "driver.jsonl")),
+            partition_window=plan.partition_window())
+        self._dirty_marks: dict[str, dict] = {}
+        self._next_nid = 0
+        self._nodes: dict[str, _NodeHandle] = {}
+
+        hb = HeartbeatMonitor(0, timeout_s=self.heartbeat_timeout_s,
+                              clock=self.clock)
+        sp = StragglerPolicy(ratio=self.straggler_ratio, clock=self.clock)
+        core = DispatchCore(self.campaign, [u.key for u in todo],
+                            retries=self.spec.retries, heartbeat=hb,
+                            straggler=sp, stats=self.stats,
+                            mark_unit=self._mark_unit,
+                            clock=self.clock, verbose=self.verbose)
+
+        def reap(nid: str, reason: str) -> None:
+            h = self._nodes.pop(nid, None)
+            if h is None:
+                return
+            hb.remove(nid)
+            h.node.stop()
+            key = h.inflight
+            if self.verbose:
+                print(f"  node {nid} {reason}"
+                      + (f" while running [{key}]" if key else ""))
+            if key is not None:
+                core.worker_lost(key, f"node {reason}")
+
+        def drain() -> int:
+            n = 0
+            for nid, h in list(self._nodes.items()):
+                for msg in h.outbox.recv_ready():
+                    n += 1
+                    hb.beat(nid)
+                    kind = msg[0]
+                    if kind == "done":
+                        _, _, key, wall, n_pairs = msg
+                        core.finish_done(self._nodes.get(nid), key,
+                                         wall, n_pairs)
+                    elif kind == "failed":
+                        _, _, key, error = msg
+                        core.release(self._nodes.get(nid), key)
+                        core.record_failure(key, error)
+                    # "ready"/"start"/"beat" only feed the monitor
+            if n == 0 and self.poll_s:
+                time.sleep(self.poll_s)
+            return n
+
+        for _ in range(min(self.n_nodes, len(core.pending))):
+            self._spawn_node(hb)
+
+        try:
+            while not core.all_resolved:
+                idle = [h for h in self._nodes.values()
+                        if h.inflight is None]
+                while idle and core.pending:
+                    key = core.next_pending()
+                    if key is None:
+                        break
+                    core.dispatch(idle.pop(), key)
+                while (core.pending
+                       and len(self._nodes) < min(self.n_nodes,
+                                                  len(core.pending))):
+                    self._spawn_node(hb)
+                    self.stats["respawned_nodes"] += 1
+                if self.speculate and not core.pending:
+                    idle = [h for h in self._nodes.values()
+                            if h.inflight is None]
+                    cand = core.speculation_candidate()
+                    if idle and cand is not None:
+                        core.dispatch(idle[0], cand, speculative=True)
+                drain()
+                for nid, h in self._nodes.items():
+                    if h.inflight is None:
+                        hb.beat(nid)
+                for nid in [n for n, h in list(self._nodes.items())
+                            if not h.alive]:
+                    self.stats["crashed_nodes"] += 1
+                    reap(nid, "crashed")
+                for nid in hb.dead():
+                    if self._nodes.get(nid) is not None:
+                        self.stats["hung_nodes"] += 1
+                        reap(nid, "hung (heartbeat timeout)")
+                core.finalize_exhausted()
+        finally:
+            self._shutdown()
+        self._flush_marks()
+        # fold the data plane's evidence into the campaign stats
+        for k, v in self.server.stats.items():
+            self.stats[f"store_{k}"] = v
+        for k, v in self.transport.counters.items():
+            self.stats[f"transport_{k}"] = v
+        for k, v in self.driver_store.stats.items():
+            self.stats[f"driver_{k}"] = v
+        return core.ordered_outcomes()
+
+    # -------------------------------------------------------------- #
+    # driver-side store writes: retried, partition-aware, never fatal
+    # -------------------------------------------------------------- #
+    def _mark_unit(self, key: str, **fields) -> None:
+        self._dirty_marks[key] = {**self._dirty_marks.get(key, {}),
+                                  **fields}
+        try:
+            self.driver_store.mark_unit(key, self._dirty_marks[key])
+        except RetriesExhausted:
+            # the partition outlived one retry cycle: keep the fields,
+            # keep dispatching, re-deliver once the loop is done
+            self.stats["deferred_marks"] += 1
+        else:
+            self._dirty_marks.pop(key, None)
+
+    def _flush_marks(self) -> None:
+        for key, fields in list(self._dirty_marks.items()):
+            try:
+                self.driver_store.mark_unit(key, fields)
+            except RetriesExhausted:
+                self.stats["deferred_marks"] += 1   # dead-lettered; the
+            else:                                   # manifest is stale
+                self._dirty_marks.pop(key, None)    # for this key
+
+    # -------------------------------------------------------------- #
+    def _spawn_node(self, hb) -> None:
+        nid = f"n{self._next_nid}"
+        self._next_nid += 1
+        inbox = self.transport.channel(f"driver->{nid}")
+        outbox = self.transport.channel(f"{nid}->driver")
+        store = RemoteStoreClient(
+            self.server, self.transport, nid, policy=self.retry_policy,
+            dead_letters=DeadLetterFile(
+                os.path.join(self.campaign.dir, "deadletter",
+                             f"{nid}.jsonl")))
+        node = NodeWorker(
+            nid, self.spec, store, self.scratch_root, inbox, outbox,
+            campaign_id=self.campaign.campaign_id,
+            fault_plan=self.fault_plan,
+            claim_fault=lambda key, kind: _trip_once(self.campaign, key,
+                                                     kind))
+        node.start()
+        self._nodes[nid] = _NodeHandle(node, inbox, outbox)
+        hb.register(nid)
+
+    def _shutdown(self) -> None:
+        for h in self._nodes.values():
+            h.inbox.send_raw(POISON)        # control plane: chaos-exempt
+            h.node.stop()
+        deadline = time.monotonic() + 5.0
+        for h in self._nodes.values():
+            h.node.join(timeout=max(0.1, deadline - time.monotonic()))
+        self._nodes.clear()

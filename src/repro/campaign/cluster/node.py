@@ -1,0 +1,223 @@
+"""Simulated worker node: one thread, one scratch disk, one transport.
+
+A :class:`NodeWorker` models a remote measurement host faithfully enough
+to chaos-test the dispatch layer: it owns a *node-local* campaign
+directory (its scratch disk) and can only reach the real artifact store
+through its store client — every byte that survives the node does so by
+crossing the (faulty) transport.  The lifecycle per dispatched unit:
+
+1. **download** the unit's artifact subtree from the store into local
+   scratch (session state, tables, result) — this is what makes requeue
+   resume at *pair* granularity: a dead node's uploaded pairs are right
+   there for the survivor;
+2. **measure** through the shared :class:`_BeatingSerial` executor —
+   the same beating/crash/slowdown hooks the process workers use, with
+   the crash action swapped from ``os._exit`` to :class:`_NodeCrash`
+   (a thread cannot hard-exit the interpreter; dying silently is the
+   simulated equivalent).  Every beat sends a heartbeat message and
+   best-effort-syncs freshly persisted session pairs up to the store;
+3. **upload** the full unit subtree (now including the final table and
+   result), *then* ack ``done`` — the ordering matters: a ``done``
+   whose artifacts had not landed would let the driver read a torn
+   unit.  If the ack is dropped by the transport, the driver's
+   heartbeat timeout requeues the unit and the next attempt finds
+   everything already uploaded — it resumes instantly and re-acks.
+
+A reaped node (the driver gave up on it) has its stop event set; the
+zombie notices at its next beat and dies.  Anything it managed to
+upload before that is bit-identical to what the replacement produces
+(pair-seeded determinism), so zombie writes are dedups, never
+corruption.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+from repro.campaign.cluster.remote_store import blob_digest, file_digest
+from repro.campaign.cluster.retry import RetriesExhausted
+from repro.campaign.cluster.transport import POISON
+from repro.campaign.store import Campaign
+from repro.campaign.workqueue import _BeatingSerial
+from repro.core.paths import atomic_replace
+
+
+class _NodeCrash(Exception):
+    """Injected node death: unwinds the node thread without a message."""
+
+
+def _syncable(relpath: str) -> bool:
+    """Artifact files that cross the transport.  Traces stay host-local
+    (cluster runs are untraced), fault markers and dead letters are
+    harness bookkeeping, never payload."""
+    parts = relpath.split("/")
+    if "traces" in parts or "deadletter" in parts:
+        return False
+    name = parts[-1]
+    return not name.endswith(".injected")
+
+
+class NodeWorker:
+    """One simulated node: consumes unit keys from its inbox, reports
+    ``ready``/``start``/``beat``/``done``/``failed`` on its outbox —
+    the same message grammar as the process workers, carried over a
+    chaos-injected channel instead of a multiprocessing queue."""
+
+    def __init__(self, node_id: str, spec, store, scratch_root: str,
+                 inbox, outbox, *, campaign_id: str,
+                 fault_plan=None, claim_fault=None, poll_s: float = 0.01):
+        from repro.campaign.workqueue import FaultPlan
+        self.node_id = node_id
+        self.spec = spec
+        self.store = store                  # LocalStore | RemoteStoreClient
+        self.inbox = inbox
+        self.outbox = outbox
+        self.plan = fault_plan or FaultPlan()
+        # fault claims are once-per-unit ACROSS attempts and nodes, so
+        # they live driver-side; the dispatcher injects the claimer
+        self.claim_fault = claim_fault or (lambda key, kind: False)
+        self.poll_s = poll_s
+        self.local = Campaign(os.path.join(scratch_root, node_id), spec,
+                              campaign_id=campaign_id)
+        self._units = {u.key: u for u in spec.units()}
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._main, name=f"node-{node_id}", daemon=True)
+        self.sync_failures = 0              # best-effort beat syncs lost
+
+    # ---------------- lifecycle ---------------- #
+    def start(self) -> None:
+        self.local.init()
+        self._thread.start()
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def stop(self) -> None:
+        """Reap: the zombie dies at its next beat or poll."""
+        self._stop.set()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+
+    # ---------------- main loop ---------------- #
+    def _main(self) -> None:
+        self.outbox.send(("ready", self.node_id))
+        while not self._stop.is_set():
+            msgs = self.inbox.recv_ready()
+            if not msgs:
+                time.sleep(self.poll_s)
+                continue
+            for msg in msgs:
+                if msg == POISON:
+                    return
+                _, key = msg                # ("unit", unit_key)
+                try:
+                    self._run_unit(key)
+                except _NodeCrash:
+                    return                  # silent death — the driver's
+                                            # liveness check finds the body
+                except Exception as exc:  # noqa: BLE001 — unit isolation
+                    self.outbox.send(
+                        ("failed", self.node_id, key,
+                         f"{type(exc).__name__}: {exc}"))
+
+    # ---------------- one unit ---------------- #
+    def _run_unit(self, key: str) -> None:
+        self.outbox.send(("start", self.node_id, key))
+        t0 = time.perf_counter()
+        synced = self._download(key)
+
+        if self.plan.drift_for(key) is not None:
+            raise ValueError(
+                "FaultPlan drift injection needs the traced process "
+                "scheduler (trace=True); cluster runs are untraced")
+        stall = self.plan.stall_for(key)
+        if stall is not None and self.claim_fault(key, "stall"):
+            time.sleep(stall)               # silent: no beats, no syncs
+        slow = self.plan.slow_for(key)
+        if slow is not None and not self.claim_fault(key, "slow"):
+            slow = None
+        crash_after = self.plan.node_crash_for(key)
+
+        def crash() -> None:
+            raise _NodeCrash(f"injected crash of node {self.node_id}")
+
+        def beat() -> None:
+            if self._stop.is_set():         # reaped while measuring:
+                raise _NodeCrash("node reaped by driver")   # die quietly
+            self.outbox.send(("beat", self.node_id))
+            self._upload(key, synced, session_only=True, best_effort=True)
+
+        executor = _BeatingSerial(
+            beat, crash_after=crash_after,
+            on_crash=(lambda: self.claim_fault(key, "node_crash"))
+            if crash_after is not None else None,
+            sleep_between_s=slow, crash_action=crash)
+        session = self._units[key].build_session(
+            out_dir=self.local.session_dir(key), executor=executor)
+        table = session.run(verbose=False)
+        gt = (session.ground_truth()
+              if hasattr(session, "ground_truth") else {})
+        self.local.save_unit_result(key, table, gt)
+        # full upload BEFORE the ack: a "done" must never race its bytes
+        self._upload(key, synced, session_only=False, best_effort=False)
+        self.outbox.send(("done", self.node_id, key,
+                          time.perf_counter() - t0, len(table.pairs)))
+
+    # ---------------- store sync ---------------- #
+    def _download(self, key: str) -> dict[str, str]:
+        """Pull the unit's store subtree into local scratch; returns the
+        relpath -> digest map of what is now known-synced."""
+        synced: dict[str, str] = {}
+        listing = self.store.list_files(f"units/{key}")
+        for rel, digest in sorted(listing.items()):
+            if not _syncable(rel):
+                continue
+            local_path = os.path.join(self.local.dir, rel)
+            if os.path.isfile(local_path) \
+                    and file_digest(local_path) == digest:
+                synced[rel] = digest        # same node re-running the
+                continue                    # unit: scratch already matches
+            data = self.store.get_file(rel)
+            if data is None:
+                continue
+            os.makedirs(os.path.dirname(local_path), exist_ok=True)
+            with atomic_replace(local_path) as tmp:
+                with open(tmp, "wb") as f:
+                    f.write(data)
+            synced[rel] = digest
+        return synced
+
+    def _upload(self, key: str, synced: dict[str, str], *,
+                session_only: bool, best_effort: bool) -> None:
+        """Push changed unit files to the store.  Beat-time syncs are
+        best-effort (a failure now is retried wholesale by the final
+        upload); the final upload lets :class:`RetriesExhausted`
+        propagate — an unreachable store is a failed attempt."""
+        root = (self.local.session_dir(key) if session_only
+                else self.local.unit_dir(key))
+        if not os.path.isdir(root):
+            return
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                full = os.path.join(dirpath, name)
+                rel = os.path.relpath(full, self.local.dir)
+                rel = rel.replace(os.sep, "/")
+                if not _syncable(rel):
+                    continue
+                with open(full, "rb") as f:
+                    data = f.read()
+                digest = blob_digest(data)
+                if synced.get(rel) == digest:
+                    continue
+                try:
+                    self.store.put_file(rel, data, digest)
+                except RetriesExhausted:
+                    if not best_effort:
+                        raise
+                    self.sync_failures += 1
+                    continue                # the final sync will retry
+                synced[rel] = digest

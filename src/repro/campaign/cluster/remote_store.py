@@ -1,0 +1,257 @@
+"""Pluggable artifact-store access for cluster campaigns.
+
+The campaign store (:class:`repro.campaign.store.Campaign`) stays the
+single source of truth on the driver host; what becomes pluggable is how
+a *writer* reaches it.  Three shapes share one call surface (``put_file``
+/ ``get_file`` / ``list_files`` / ``mark_unit``):
+
+* :class:`StoreServer` — the store-host side: resolves relpaths inside
+  the campaign directory, validates content digests, dedups
+  content-addressed writes, applies injected store faults, and merges
+  manifest marks idempotently.  Everything it does is safe under
+  duplicate delivery and concurrent writers: a put is
+  ``atomic_replace`` of validated bytes, so two racing writers of the
+  same content land on one artifact with no torn state;
+* :class:`LocalStore` — a client that calls the server directly
+  (single-host campaigns, tests, and the protocol's reference
+  implementation);
+* :class:`RemoteStoreClient` — a client whose every operation crosses a
+  :class:`~repro.campaign.cluster.transport.NodeTransport` RPC wrapped
+  in the retry/backoff policy: transient store failures and flaky links
+  are retried with capped-exponential seeded-jitter backoff, a
+  driver<->store partition is ridden out (each retry advances the
+  partition's op-count window), and exhausted operations land in a
+  dead-letter file instead of crashing the fleet.
+
+Content addressing does the heavy lifting for multi-writer safety: the
+client sends ``(relpath, bytes, sha256)``, the server verifies the
+digest before touching disk (a corrupted transfer is a *non*-retryable
+error — re-sending garbage would not cure it, the client must re-read
+and re-digest), and a write whose target already holds those exact
+bytes is acknowledged as a dedup instead of re-written.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from collections import Counter
+
+from repro.campaign.cluster.retry import (DeadLetterFile, RetryPolicy,
+                                          StoreWriteError, call_with_retry)
+from repro.core.paths import atomic_replace
+
+
+def blob_digest(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def file_digest(path: str) -> str:
+    with open(path, "rb") as f:
+        return blob_digest(f.read())
+
+
+def _unit_of(relpath: str) -> str | None:
+    """Unit key of a ``units/<key>/...`` relpath (None otherwise)."""
+    parts = relpath.split("/")
+    if len(parts) >= 3 and parts[0] == "units":
+        return parts[1]
+    return None
+
+
+class StoreServer:
+    """Store-host request handler over one campaign's directory.
+
+    All paths are relpaths under the campaign dir; anything escaping it
+    (absolute, ``..``) is rejected outright.  Injected faults come from
+    the campaign's :class:`~repro.campaign.workqueue.FaultPlan`:
+    ``store_transient`` fails the first N writes touching a unit with a
+    retryable :class:`StoreWriteError`, ``store_permanent`` fails every
+    write for that unit forever (the retry layer must exhaust and
+    dead-letter).  ``stats`` counts puts/gets/dedups/injected failures —
+    the chaos tests' evidence that the faults actually fired."""
+
+    def __init__(self, campaign, fault_plan=None):
+        self.campaign = campaign
+        self.plan = fault_plan
+        self.stats: Counter = Counter()
+        self._lock = threading.Lock()
+        self._transient_left: dict[str, int] = {}
+
+    # ---------------- fault injection ---------------- #
+    def _maybe_fail_write(self, relpath: str) -> None:
+        if self.plan is None:
+            return
+        key = _unit_of(relpath)
+        if key is None:
+            return
+        if self.plan.store_permanent_for(key):
+            self.stats["injected_permanent"] += 1
+            raise StoreWriteError(
+                f"injected permanent store failure for unit {key}")
+        with self._lock:
+            left = self._transient_left.get(key)
+            if left is None:
+                left = self.plan.store_transient_for(key)
+            if left > 0:
+                self._transient_left[key] = left - 1
+                self.stats["injected_transient"] += 1
+                raise StoreWriteError(
+                    f"injected transient store failure for unit {key} "
+                    f"({left - 1} left)")
+            self._transient_left[key] = 0
+
+    # ---------------- request handlers ---------------- #
+    def _resolve(self, relpath: str) -> str:
+        if os.path.isabs(relpath) or ".." in relpath.split("/"):
+            raise ValueError(f"unsafe store path {relpath!r}")
+        return os.path.join(self.campaign.dir, relpath)
+
+    def put_file(self, relpath: str, data: bytes, digest: str) -> str:
+        """Store one blob; returns ``"stored"`` or ``"deduped"``.
+
+        Digest validation happens before the fault check: corruption is
+        a protocol error, never retried."""
+        if blob_digest(data) != digest:
+            raise ValueError(
+                f"digest mismatch for {relpath!r}: transfer corrupted")
+        self._maybe_fail_write(relpath)
+        path = self._resolve(relpath)
+        # one write at a time: atomic_replace's tmp name is pid-unique,
+        # but node workers are threads of THIS process, so duplicate
+        # uploads of the same relpath (speculation, re-delivered RPCs)
+        # would race on the same tmp file without the lock
+        with self._lock:
+            if os.path.exists(path) and file_digest(path) == digest:
+                self.stats["deduped_puts"] += 1
+                return "deduped"
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with atomic_replace(path) as tmp:
+                with open(tmp, "wb") as f:
+                    f.write(data)
+        # a freshly uploaded table must not be shadowed by a table the
+        # driver cached from an earlier (partial) attempt
+        key = _unit_of(relpath)
+        if key is not None:
+            self.campaign._table_cache.pop(key, None)
+        self.stats["puts"] += 1
+        return "stored"
+
+    def get_file(self, relpath: str) -> bytes | None:
+        self.stats["gets"] += 1
+        path = self._resolve(relpath)
+        if not os.path.isfile(path):
+            return None
+        with open(path, "rb") as f:
+            return f.read()
+
+    def list_files(self, prefix: str) -> dict[str, str]:
+        """relpath -> sha256 for every file under ``prefix``."""
+        self.stats["lists"] += 1
+        root = self._resolve(prefix)
+        out: dict[str, str] = {}
+        if not os.path.isdir(root):
+            return out
+        for dirpath, _, names in os.walk(root):
+            for name in names:
+                full = os.path.join(dirpath, name)
+                rel = os.path.relpath(full, self.campaign.dir)
+                out[rel.replace(os.sep, "/")] = file_digest(full)
+        return out
+
+    def mark_unit(self, unit_key: str, fields: dict) -> None:
+        """Manifest merge — naturally idempotent (same fields twice is
+        one state), which is what makes duplicated RPCs harmless."""
+        self._maybe_fail_write(f"units/{unit_key}/__manifest__")
+        self.stats["marks"] += 1
+        self.campaign.mark_unit(unit_key, **fields)
+
+
+class LocalStore:
+    """Direct (in-process, no transport) client — the reference shape of
+    the store protocol, and what single-host campaigns use."""
+
+    def __init__(self, server: StoreServer):
+        self.server = server
+
+    def put_file(self, relpath: str, data: bytes, digest: str) -> str:
+        return self.server.put_file(relpath, data, digest)
+
+    def get_file(self, relpath: str) -> bytes | None:
+        return self.server.get_file(relpath)
+
+    def list_files(self, prefix: str) -> dict[str, str]:
+        return self.server.list_files(prefix)
+
+    def mark_unit(self, unit_key: str, fields: dict) -> None:
+        self.server.mark_unit(unit_key, fields)
+
+
+class RemoteStoreClient:
+    """Store client whose every call crosses the transport under the
+    retry policy.
+
+    ``partition_window=(after, n)`` models a driver<->store partition
+    that heals: this client's ops ``after .. after+n-1`` (0-based,
+    counting every attempt) fail with a retryable transport error.
+    Counting *attempts* makes healing deterministic — a retried
+    operation advances the window on its own, so a policy with
+    ``max_attempts > n`` always rides the partition out without any
+    wall-clock coupling."""
+
+    def __init__(self, server: StoreServer, transport, link_id: str, *,
+                 policy: RetryPolicy | None = None,
+                 dead_letters: DeadLetterFile | None = None,
+                 partition_window: tuple[int, int] | None = None,
+                 sleep=None):
+        self.server = server
+        self.transport = transport
+        self.link_id = link_id
+        self.policy = policy or RetryPolicy()
+        self.dead_letters = dead_letters
+        self.partition_window = partition_window
+        self.sleep = sleep      # None -> real time.sleep in call_with_retry
+        self.stats: Counter = Counter()
+        self._ops = 0
+        self._lock = threading.Lock()
+
+    def _attempt(self, fn, *args):
+        with self._lock:
+            op_index = self._ops
+            self._ops += 1
+        if self.partition_window is not None:
+            after, n = self.partition_window
+            if after <= op_index < after + n:
+                self.stats["partitioned_ops"] += 1
+                from repro.campaign.cluster.retry import TransportError
+                raise TransportError(
+                    f"store unreachable: driver<->store partition "
+                    f"(op {op_index} in window [{after}, {after + n}))")
+        return self.transport.rpc(self.link_id, fn, *args,
+                                  timeout_s=self.policy.timeout_s)
+
+    def _call(self, op: str, op_key: str, fn, *args):
+        kw = {} if self.sleep is None else {"sleep": self.sleep}
+        out = call_with_retry(
+            lambda: self._attempt(fn, *args), self.policy, op=op,
+            op_key=op_key, dead_letters=self.dead_letters,
+            on_retry=lambda *_: self.stats.__setitem__(
+                "retries", self.stats["retries"] + 1), **kw)
+        self.stats["ops"] += 1
+        return out
+
+    def put_file(self, relpath: str, data: bytes, digest: str) -> str:
+        return self._call("store.put", relpath, self.server.put_file,
+                          relpath, data, digest)
+
+    def get_file(self, relpath: str) -> bytes | None:
+        return self._call("store.get", relpath, self.server.get_file,
+                          relpath)
+
+    def list_files(self, prefix: str) -> dict[str, str]:
+        return self._call("store.list", prefix, self.server.list_files,
+                          prefix)
+
+    def mark_unit(self, unit_key: str, fields: dict) -> None:
+        self._call("store.mark", unit_key, self.server.mark_unit,
+                   unit_key, fields)

@@ -1,0 +1,176 @@
+"""Retry/backoff policy for flaky remote operations, plus dead letters.
+
+Every remote interaction in the cluster layer — store reads/writes over
+the node transport, webhook alert delivery (:mod:`repro.monitor.sinks`)
+— goes through :func:`call_with_retry` wrapping a :class:`RetryPolicy`:
+
+* **capped exponential backoff**: attempt ``k`` waits
+  ``min(cap_s, base_s * 2**k)`` seconds — the un-jittered schedule is
+  monotone non-decreasing and its total is bounded by
+  ``max_attempts * cap_s`` (the property tests pin both);
+* **deterministic seeded jitter**: the wait is scaled into
+  ``[raw * (1 - jitter), raw]`` by a ``blake2s(seed, op_key, attempt)``
+  hash — decorrelated across operations (no thundering-herd retry
+  convoys) yet bit-reproducible under a fixed seed, like every other
+  source of randomness in this repo (``pair_seed`` uses the same
+  construction);
+* **per-operation timeout**: handed to the transport, which raises
+  :class:`TransportTimeout` instead of blocking the driver loop;
+* **dead letter after exhaustion**: the terminal failure is appended to
+  a JSONL dead-letter file (operation, key, attempts, last error) so an
+  operator can replay what the fleet could not deliver, then
+  :class:`RetriesExhausted` is raised — a *non*-retryable error, so an
+  outer retry loop never spins on a poisoned operation.
+
+Only :class:`RetryableError` subclasses are retried.  Anything else
+(a programming error, a validation failure) propagates immediately:
+retrying it would just burn the budget hiding a bug.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+
+
+class RetryableError(Exception):
+    """Base for failures that a retry may cure (flaky link, busy store)."""
+
+
+class TransportError(RetryableError):
+    """A message or RPC was lost, rejected, or hit a partition."""
+
+
+class TransportTimeout(TransportError):
+    """The operation exceeded its per-op timeout in flight."""
+
+
+class StoreWriteError(RetryableError):
+    """The artifact store rejected a write (transient or injected)."""
+
+
+class RetriesExhausted(Exception):
+    """The retry budget is spent; the failure is in the dead-letter file.
+
+    Deliberately NOT a :class:`RetryableError`: once a policy has given
+    up, an enclosing retry loop must not resurrect the operation."""
+
+    def __init__(self, op: str, attempts: int, last: Exception):
+        super().__init__(
+            f"{op}: {attempts} attempt(s) exhausted; last error: "
+            f"{type(last).__name__}: {last}")
+        self.op = op
+        self.attempts = attempts
+        self.last = last
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff with deterministic seeded jitter."""
+
+    max_attempts: int = 6
+    base_s: float = 0.05
+    cap_s: float = 2.0
+    jitter: float = 0.25        # fraction of the raw backoff shaved off
+    timeout_s: float = 10.0     # per-operation transport timeout
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, "
+                             f"got {self.max_attempts}")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError(f"jitter must be in [0, 1], got {self.jitter}")
+        if self.base_s < 0 or self.cap_s < 0:
+            raise ValueError("backoff times must be non-negative")
+
+    def raw_backoff_s(self, attempt: int) -> float:
+        """Un-jittered wait after failed attempt ``attempt`` (0-based):
+        ``min(cap_s, base_s * 2**attempt)`` — monotone non-decreasing."""
+        if attempt < 0:
+            raise ValueError(f"attempt must be >= 0, got {attempt}")
+        # 2.0** instead of <<: attempt can legitimately exceed float
+        # exponent range under a pathological max_attempts; inf caps fine
+        try:
+            raw = self.base_s * (2.0 ** attempt)
+        except OverflowError:
+            raw = float("inf")
+        return min(self.cap_s, raw)
+
+    def backoff_s(self, attempt: int, op_key: str = "") -> float:
+        """Jittered wait: ``raw * (1 - jitter * u)`` with ``u`` drawn
+        deterministically from ``blake2s(seed, op_key, attempt)`` — always
+        within ``[raw * (1 - jitter), raw]``."""
+        raw = self.raw_backoff_s(attempt)
+        if self.jitter == 0.0 or raw == 0.0:
+            return raw
+        h = hashlib.blake2s(
+            f"{self.seed}:{op_key}:{attempt}".encode(), digest_size=8)
+        u = int.from_bytes(h.digest(), "big") / 2.0 ** 64
+        return raw * (1.0 - self.jitter * u)
+
+    def total_backoff_bound_s(self) -> float:
+        """Upper bound on the summed waits of one full retry cycle."""
+        return sum(self.raw_backoff_s(k)
+                   for k in range(self.max_attempts - 1))
+
+
+class DeadLetterFile:
+    """Append-only JSONL record of operations the fleet gave up on.
+
+    One line per dead letter: ``{"op", "key", "attempts", "error",
+    "t"}``.  Appends are serialized by a process-local lock and flushed
+    line-at-a-time; concurrent processes interleave whole lines (POSIX
+    O_APPEND), never tear them."""
+
+    def __init__(self, path: str, clock=time.time):
+        self.path = path
+        self.clock = clock
+        self._lock = threading.Lock()
+
+    def record(self, op: str, key: str, attempts: int, error: str) -> dict:
+        doc = {"op": op, "key": key, "attempts": int(attempts),
+               "error": str(error), "t": float(self.clock())}
+        line = json.dumps(doc, sort_keys=True)
+        with self._lock:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            with open(self.path, "a") as f:
+                f.write(line + "\n")
+        return doc
+
+    def records(self) -> list[dict]:
+        if not os.path.exists(self.path):
+            return []
+        with open(self.path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+
+    def __len__(self) -> int:
+        return len(self.records())
+
+
+def call_with_retry(fn, policy: RetryPolicy, *, op: str = "op",
+                    op_key: str = "", dead_letters: DeadLetterFile | None
+                    = None, sleep=time.sleep, on_retry=None):
+    """Run ``fn()`` under ``policy``; retries :class:`RetryableError` with
+    backoff, anything else propagates immediately.  After the budget is
+    spent the failure is dead-lettered (when a file is attached) and
+    :class:`RetriesExhausted` raised."""
+    last: Exception | None = None
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn()
+        except RetryableError as exc:
+            last = exc
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            if attempt + 1 < policy.max_attempts:
+                wait = policy.backoff_s(attempt, op_key or op)
+                if wait > 0:
+                    sleep(wait)
+    assert last is not None
+    if dead_letters is not None:
+        dead_letters.record(op, op_key, policy.max_attempts, repr(last))
+    raise RetriesExhausted(op, policy.max_attempts, last)

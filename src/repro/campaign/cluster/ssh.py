@@ -1,0 +1,58 @@
+"""SSH/k8s-shaped transport contract stub (no real cluster in CI).
+
+This mirrors how :mod:`repro.backends.cuda_nvml` stubs the NVML
+backend: the class documents the exact contract a real implementation
+must honor and fails loudly at construction, so code written against
+:class:`SSHTransport` today runs unchanged against a real transport
+later — and so the simulated transport cannot silently drift away from
+the real one's surface.
+
+Contract (shared with :class:`~repro.campaign.cluster.transport
+.SimTransport`, enforced by the :class:`~repro.campaign.cluster
+.transport.NodeTransport` protocol):
+
+* ``channel(link_id)`` — a one-directional message channel.  Link ids
+  are ``"driver-><node>"`` and ``"<node>->driver"``; messages are the
+  worker grammar tuples (``ready``/``start``/``beat``/``done``/
+  ``failed`` and ``("unit", key)`` dispatches).  A real implementation
+  maps these onto a persistent SSH session's stdin/stdout framing or a
+  k8s pod's exec stream.  Delivery MAY drop, duplicate, delay, or
+  reorder — the dispatch layer is built for that and nothing may rely
+  on reliable delivery;
+* ``rpc(link_id, fn, *args, timeout_s=...)`` — one synchronous store
+  operation.  A real implementation serializes the operation name +
+  arguments (the :class:`~repro.campaign.cluster.remote_store
+  .StoreServer` handler surface: ``put_file``/``get_file``/
+  ``list_files``/``mark_unit``) instead of shipping callables.  It MUST
+  raise :class:`~repro.campaign.cluster.retry.TransportTimeout` when no
+  reply arrives within ``timeout_s`` and
+  :class:`~repro.campaign.cluster.retry.TransportError` for link
+  failures, because those are the only exception types the retry layer
+  treats as retryable.  Operations MUST be safe to deliver twice
+  (clients retry on timeout without knowing whether the op landed);
+  the store side already guarantees idempotency.
+
+Node provisioning (starting the worker process on the remote host,
+shipping the spec, choosing a scratch directory) is out of transport
+scope — a real deployment drives it with its orchestrator of choice and
+hands this class an already-reachable endpoint per node.
+"""
+from __future__ import annotations
+
+
+def is_available() -> bool:
+    """True when a real remote transport could run here (it never can in
+    this repo: no SSH fleet, no cluster API — CI uses SimTransport)."""
+    return False
+
+
+class SSHTransport:
+    """Contract stub: construction always fails with the full story."""
+
+    def __init__(self, hosts=None, **_kw):
+        raise NotImplementedError(
+            "SSHTransport is a contract stub: this environment has no "
+            "reachable worker fleet. The wire contract a real transport "
+            "must implement is documented in repro.campaign.cluster.ssh; "
+            "use executor='cluster' with the default SimTransport for "
+            f"simulated multi-node runs (requested hosts: {hosts!r})")

@@ -1,0 +1,209 @@
+"""Node transport: the wire between the campaign driver and its nodes.
+
+The :class:`NodeTransport` protocol is deliberately tiny — a message
+channel per direction per node, plus a synchronous RPC path for store
+operations — because that is all the dispatch layer needs: unit
+dispatch and heartbeats ride the channels, artifact bytes ride the
+RPCs.  Two implementations ship:
+
+* :class:`SimTransport` — in-process simulation used by CI and every
+  chaos test.  Nodes are threads, channels are queues, and the chaos
+  knobs (message drop, duplication, bounded delay) are applied at the
+  *sending* edge by a per-link deterministic RNG: each link has exactly
+  one producer, so the fault sequence a link experiences is a pure
+  function of ``(seed, link_id, message index)`` regardless of how the
+  threads interleave;
+* :class:`~repro.campaign.cluster.ssh.SSHTransport` — the real-cluster
+  contract stub (mirrors how :mod:`repro.backends.cuda_nvml` stubs the
+  NVML backend): documents the wire protocol and fails loudly, so the
+  sim and the eventual real transport share one call surface.
+
+Dropped messages are not errors at this layer — they are *silence*, and
+the driver's heartbeat machinery is the recovery path: a node that never
+received its unit (dropped dispatch) or whose completion ack vanished
+(dropped ``done``) simply stops making progress, times out, and has the
+unit requeued.  Dropped or duplicated RPCs surface as
+:class:`~repro.campaign.cluster.retry.TransportError` /double delivery,
+which the retry layer and the store's idempotent writes absorb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+import threading
+import time
+from collections import Counter
+from typing import Protocol
+
+from repro.campaign.cluster.retry import TransportTimeout
+
+POISON = ("__poison__",)        # raw shutdown sentinel (never chaos-mangled)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportFaults:
+    """Chaos knobs for :class:`SimTransport` (all off by default)."""
+
+    drop_rate: float = 0.0      # P(message or RPC request is lost)
+    dup_rate: float = 0.0       # P(message/RPC is delivered twice)
+    delay_s: float = 0.0        # max uniform delivery delay, seconds
+    seed: int = 0               # per-link RNG seed material
+
+    def __post_init__(self):
+        for name in ("drop_rate", "dup_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+
+    @staticmethod
+    def from_plan(plan) -> "TransportFaults":
+        """Build from a :class:`~repro.campaign.workqueue.FaultPlan`'s
+        ``transport`` knobs (empty plan -> a clean network)."""
+        return TransportFaults(**plan.transport_dict())
+
+    @property
+    def clean(self) -> bool:
+        return (self.drop_rate == 0.0 and self.dup_rate == 0.0
+                and self.delay_s == 0.0)
+
+
+class _LinkChaos:
+    """Deterministic per-link fault source.  One producer per link is
+    the invariant that makes this reproducible: the n-th send on a link
+    sees the n-th draw of ``Random(blake2s(seed:link_id))`` no matter
+    how the rest of the fleet interleaves."""
+
+    def __init__(self, faults: TransportFaults, link_id: str):
+        self.faults = faults
+        h = hashlib.blake2s(f"{faults.seed}:{link_id}".encode(),
+                            digest_size=8)
+        self._rng = random.Random(int.from_bytes(h.digest(), "big"))
+
+    def roll(self) -> tuple[bool, bool, float]:
+        """(dropped, duplicated, delay_s) for one send.  All three are
+        always drawn so the RNG stream stays aligned across fault
+        configurations that share a seed."""
+        f = self.faults
+        u_drop, u_dup, u_del = (self._rng.random(), self._rng.random(),
+                                self._rng.random())
+        return (u_drop < f.drop_rate, u_dup < f.dup_rate,
+                u_del * f.delay_s)
+
+
+class Channel:
+    """One-directional, single-producer message channel with injected
+    chaos at the sending edge.  ``recv_ready`` returns every message
+    whose (possibly delayed) delivery time has arrived — delayed
+    messages can overtake each other, like a real datagram link."""
+
+    def __init__(self, link_id: str, faults: TransportFaults,
+                 clock=time.monotonic, counters: Counter | None = None):
+        self.link_id = link_id
+        self.clock = clock
+        self.counters = counters if counters is not None else Counter()
+        self._chaos = _LinkChaos(faults, link_id)
+        self._lock = threading.Lock()
+        self._inflight: list[tuple[float, object]] = []
+
+    def send(self, msg) -> None:
+        dropped, dup, delay = self._chaos.roll()
+        if dropped:
+            self.counters["msg_dropped"] += 1
+            return
+        ready = self.clock() + delay
+        if delay > 0:
+            self.counters["msg_delayed"] += 1
+        with self._lock:
+            self._inflight.append((ready, msg))
+            if dup:
+                self.counters["msg_duplicated"] += 1
+                self._inflight.append((ready, msg))
+
+    def send_raw(self, msg) -> None:
+        """Chaos-exempt send — control-plane shutdown only."""
+        with self._lock:
+            self._inflight.append((self.clock(), msg))
+
+    def recv_ready(self) -> list:
+        """Pop (in send order) every message whose delivery time has
+        arrived."""
+        now = self.clock()
+        with self._lock:
+            out = [m for t, m in self._inflight if t <= now]
+            self._inflight = [(t, m) for t, m in self._inflight if t > now]
+        return out
+
+
+class NodeTransport(Protocol):
+    """What the cluster dispatcher needs from a transport.
+
+    ``channel(link_id)`` returns the (created-on-first-use) message
+    channel for one direction of one node link; ``rpc(link_id, fn,
+    *args, timeout_s=...)`` performs one synchronous store operation
+    over that node's control link, raising
+    :class:`~repro.campaign.cluster.retry.TransportError` on loss and
+    :class:`~repro.campaign.cluster.retry.TransportTimeout` when the
+    operation cannot complete inside ``timeout_s``."""
+
+    def channel(self, link_id: str) -> Channel: ...     # pragma: no cover
+
+    def rpc(self, link_id: str, fn, *args, timeout_s: float | None = None): ...
+    # pragma: no cover
+
+
+class SimTransport:
+    """In-process :class:`NodeTransport`: queues for channels, direct
+    calls for RPCs, chaos injected deterministically per link."""
+
+    def __init__(self, faults: TransportFaults | None = None,
+                 clock=time.monotonic):
+        self.faults = faults or TransportFaults()
+        self.clock = clock
+        self.counters: Counter = Counter()
+        self._channels: dict[str, Channel] = {}
+        self._rpc_chaos: dict[str, _LinkChaos] = {}
+        self._lock = threading.Lock()
+
+    def channel(self, link_id: str) -> Channel:
+        with self._lock:
+            ch = self._channels.get(link_id)
+            if ch is None:
+                ch = Channel(link_id, self.faults, clock=self.clock,
+                             counters=self.counters)
+                self._channels[link_id] = ch
+            return ch
+
+    def rpc(self, link_id: str, fn, *args,
+            timeout_s: float | None = None):
+        """One synchronous operation against the store host.  A dropped
+        request surfaces as :class:`TransportTimeout` (the caller's
+        retry layer owns recovery); a duplicated request really invokes
+        ``fn`` twice — the store's writes must be idempotent, and the
+        chaos tests prove they are."""
+        with self._lock:
+            chaos = self._rpc_chaos.get(link_id)
+            if chaos is None:
+                chaos = _LinkChaos(self.faults, f"rpc:{link_id}")
+                self._rpc_chaos[link_id] = chaos
+        dropped, dup, delay = chaos.roll()
+        if dropped:
+            self.counters["rpc_dropped"] += 1
+            raise TransportTimeout(
+                f"rpc on {link_id} lost in transit (no reply before "
+                f"timeout {timeout_s})")
+        if delay > 0:
+            if timeout_s is not None and delay > timeout_s:
+                self.counters["rpc_timeout"] += 1
+                raise TransportTimeout(
+                    f"rpc on {link_id} exceeded timeout "
+                    f"({delay:.3f}s > {timeout_s}s)")
+            self.counters["rpc_delayed"] += 1
+            time.sleep(min(delay, 0.05))    # bounded: sim time, not wall
+        result = fn(*args)
+        if dup:
+            self.counters["rpc_duplicated"] += 1
+            fn(*args)                       # double delivery, result of
+        return result                       # the first wins (idempotent)

@@ -22,7 +22,13 @@ Scheduling is selected by ``executor``:
                      parallelism plus heartbeat-based crash/hang recovery
                      and speculative straggler re-dispatch.  Unit tables
                      stay bit-identical to the serial schedule because
-                     sessions measure every pair on a pair-seeded device.
+                     sessions measure every pair on a pair-seeded device
+  cluster            the node-spanning dispatcher
+                     (:mod:`repro.campaign.cluster`): the same recovery
+                     core driving simulated worker nodes over a chaos-
+                     injectable transport, with all store traffic going
+                     through the retry-wrapped remote store client.
+                     ``max_workers`` becomes the node count.
 
 Orthogonally, ``engine`` selects how each unit measures its own pair
 grid: ``serial`` (the per-pair reference loop) or ``batched`` (the
@@ -96,14 +102,21 @@ class CampaignRunner:
                  engine: str = "serial", trace: bool = False,
                  heartbeat_timeout_s: float = 60.0,
                  straggler_ratio: float = 3.0, speculate: bool = True,
-                 fault_plan=None):
-        if engine == "batched" and executor == "processes":
+                 fault_plan=None, retry_policy=None,
+                 requeue_from_alerts: bool = False):
+        if engine == "batched" and executor in ("processes", "cluster"):
             raise ValueError(
-                "executor='processes' farms whole units out to workers, "
+                f"executor={executor!r} farms whole units out to workers, "
                 "while engine='batched' already fuses each unit's sweep "
                 "into one lock-stepped program; combining them would "
                 "nest schedulers with nothing to gain — pick one "
-                "(processes for many units, batched for big grids)")
+                f"({executor} for many units, batched for big grids)")
+        if trace and executor == "cluster":
+            raise ValueError(
+                "executor='cluster' cannot record traces: a trace is a "
+                "host-local event stream and requeued node attempts "
+                "would each hold fragments — use executor='processes' "
+                "for traced campaigns")
         self.spec = spec
         self.store = store if store is not None else ArtifactStore()
         self.executor = executor
@@ -119,9 +132,24 @@ class CampaignRunner:
         self.straggler_ratio = straggler_ratio
         self.speculate = speculate
         self.fault_plan = fault_plan
+        # cluster store-op retry policy (None -> the sim default)
+        self.retry_policy = retry_policy
+        # consume the monitor's requeue manifest: listed units are reset
+        # (session/table/result dropped) and re-measured as fresh attempts
+        self.requeue_from_alerts = requeue_from_alerts
 
     def run(self, verbose: bool = False) -> CampaignResult:
         campaign = self.store.open(self.spec)
+        if self.requeue_from_alerts:
+            requested = campaign.load_requeue().get("units", {})
+            known = {u.key for u in self.spec.units()}
+            for key in sorted(set(requested) & known):
+                campaign.reset_unit(key)
+                if verbose:
+                    reason = requested[key].get("reason", "requeued")
+                    print(f"  [{key}] reset for re-measurement ({reason})")
+            if requested:
+                campaign.clear_requeue()
         states = campaign.unit_states()
         outcomes: dict[str, UnitOutcome] = {}
         todo: list[UnitSpec] = []
@@ -150,6 +178,19 @@ class CampaignRunner:
                 speculate=self.speculate, fault_plan=self.fault_plan,
                 verbose=verbose)
             sched.trace = self.trace
+            outcomes.update(sched.run(todo))
+            stats = sched.stats
+        elif self.executor == "cluster":
+            from repro.campaign.cluster.dispatch import \
+                ClusterCampaignScheduler
+            kw = ({} if self.retry_policy is None
+                  else {"retry_policy": self.retry_policy})
+            sched = ClusterCampaignScheduler(
+                self.spec, campaign, n_nodes=self.max_workers,
+                heartbeat_timeout_s=self.heartbeat_timeout_s,
+                straggler_ratio=self.straggler_ratio,
+                speculate=self.speculate, fault_plan=self.fault_plan,
+                verbose=verbose, **kw)
             outcomes.update(sched.run(todo))
             stats = sched.stats
         else:

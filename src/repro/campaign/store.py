@@ -201,6 +201,108 @@ class Campaign:
                 if self.has_unit_result(k)}
 
     # -------------------------------------------------------------- #
+    # bit-identity witnesses: two campaigns measured the same thing iff
+    # these digests match, regardless of which schedule (serial, process
+    # fleet, node cluster) or how many recovered attempts produced them
+    # -------------------------------------------------------------- #
+    def unit_content_digests(self) -> dict[str, str]:
+        """Per-unit sha256 over the unit's *measurement* artifacts: the
+        result's pair index (status, cluster structure, silhouette, CSV
+        names — byte-stable: sorted keys, no wall times) plus every
+        table CSV in sorted name order.  The simulator ground-truth
+        section is deliberately excluded: the oracle for a crashed
+        attempt's calibration probes dies with the attempt (see
+        :meth:`save_unit_result`), so gt is attempt-path metadata, not
+        measurement content — the bit-identity contract covers what the
+        paper's analysis consumes, the latency samples and their
+        clustering."""
+        import hashlib
+        out: dict[str, str] = {}
+        for key in self.done_units():
+            if not self.has_unit_result(key):
+                continue
+            with open(self._result_path(key)) as f:
+                doc = json.load(f)
+            h = hashlib.sha256()
+            h.update(json.dumps(
+                {k: doc.get(k) for k in ("unit_key", "device_name",
+                                         "device_index", "hostname",
+                                         "pairs")},
+                sort_keys=True).encode())
+            tdir = self.table_dir(key)
+            if os.path.isdir(tdir):
+                for name in sorted(os.listdir(tdir)):
+                    path = os.path.join(tdir, name)
+                    if name.endswith(".csv") and os.path.isfile(path):
+                        h.update(name.encode())
+                        with open(path, "rb") as f:
+                            h.update(f.read())
+            out[key] = h.hexdigest()
+        return out
+
+    def content_digest(self) -> str:
+        """Whole-campaign digest over the sorted per-unit digests — the
+        chaos matrix's acceptance gate compares this between a faulted
+        cluster run and the serial single-host reference."""
+        import hashlib
+        h = hashlib.sha256()
+        for key, digest in sorted(self.unit_content_digests().items()):
+            h.update(f"{key}:{digest}\n".encode())
+        return h.hexdigest()
+
+    def reset_unit(self, unit_key: str) -> None:
+        """Forget a unit's measurement so the next run re-measures it
+        from scratch (the monitor->scheduler requeue loop: a confirmed
+        drift alert invalidates the data, not just flags it).  Alerts
+        and traces survive as the evidence trail; session state, tables
+        and the result are removed so the fresh attempt cannot resume
+        into the suspect pairs."""
+        import shutil
+        self._table_cache.pop(unit_key, None)
+        for path in (self.session_dir(unit_key), self.table_dir(unit_key)):
+            shutil.rmtree(path, ignore_errors=True)
+        result = self._result_path(unit_key)
+        if os.path.exists(result):
+            os.remove(result)
+        self.mark_unit(unit_key, status=UNIT_PENDING, attempts=0,
+                       error=None)
+
+    # -------------------------------------------------------------- #
+    # requeue manifest: the monitor writes re-measurement requests here
+    # (`monitor watch --requeue`), the scheduler consumes them
+    # (`campaign run --requeue-from-alerts`)
+    # -------------------------------------------------------------- #
+    def _requeue_path(self) -> str:
+        return os.path.join(self.dir, "requeue.json")
+
+    def save_requeue(self, units: dict[str, dict]) -> str:
+        """Merge re-measurement requests (unit_key -> {"reason",
+        "alert_ids"}) into the pending requeue manifest; returns its
+        path.  Per-unit ``alert_ids`` accumulate across calls, so every
+        alert that contributed to a requeue stays on the record."""
+        with self._lock:
+            doc = self.load_requeue()
+            pending = doc.setdefault("units", {})
+            for key, entry in units.items():
+                prev = pending.get(key, {})
+                ids = sorted(set(prev.get("alert_ids", []))
+                             | set(entry.get("alert_ids", [])))
+                pending[key] = {**prev, **entry, "alert_ids": ids}
+            doc["updated_at"] = time.time()
+            _atomic_write_json(self._requeue_path(), doc)
+        return self._requeue_path()
+
+    def load_requeue(self) -> dict:
+        if not os.path.exists(self._requeue_path()):
+            return {"units": {}}
+        with open(self._requeue_path()) as f:
+            return json.load(f)
+
+    def clear_requeue(self) -> None:
+        if os.path.exists(self._requeue_path()):
+            os.remove(self._requeue_path())
+
+    # -------------------------------------------------------------- #
     # telemetry traces (repro.trace): measurement artifacts that outlive
     # the run — replayable offline through the `trace-replay` backend
     # -------------------------------------------------------------- #

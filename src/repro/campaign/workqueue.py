@@ -1,4 +1,4 @@
-"""Resilient process-parallel campaign execution.
+"""Resilient campaign execution: shared dispatch policy + process fleet.
 
 ``CampaignRunner(executor="processes")`` schedules its units through this
 module instead of a plain pool: a fleet campaign must survive the failure
@@ -30,6 +30,15 @@ and one that is merely slow.  The design is a driver/worker work queue:
   times) are speculatively re-dispatched to idle workers;
   first-result-wins, the loser's identical artifacts are discarded.
 
+All of the unit-level bookkeeping — attempt budgets, requeue on worker
+loss, straggler speculation, first-result-wins dedup — lives in
+:class:`DispatchCore`, parameterized over an abstract *worker* (anything
+with an ``inflight`` attribute and a ``send_unit`` method).  The process
+scheduler here and the multi-node cluster dispatcher
+(:mod:`repro.campaign.cluster.dispatch`) drive the same core: "worker" is
+a process for one and a node for the other, and the recovery semantics
+are shared by construction instead of duplicated.
+
 Correctness under all of this rests on the session layer's determinism:
 every pair is measured on a pair-seeded device, so a requeued or
 speculated unit resumes from the persisted pairs and lands on the exact
@@ -53,13 +62,13 @@ _CRASH_EXIT = 43                    # injected-crash exit code (tests/CI)
 
 
 # ------------------------------------------------------------------ #
-# fault injection (tests + the CI campaign-scale smoke job)
+# fault injection (tests + the CI campaign-scale/distributed smoke jobs)
 # ------------------------------------------------------------------ #
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
-    """Deterministic fault injection, applied inside workers.
+    """Deterministic fault injection, applied inside workers and nodes.
 
-    Four fault shapes, keyed by unit:
+    Unit-keyed fault shapes (process workers AND cluster nodes):
 
     * ``crash_after_pairs``: number of measured pairs after which the
       worker hard-exits (``os._exit`` — no cleanup, like a real
@@ -76,32 +85,67 @@ class FaultPlan:
       or ``(n_pairs, scale, f_init, f_target)`` (drift one pair only).
       Drift requires the traced shared-device path (``trace=True``):
       pair-scoped schedules rebuild a fresh device per pair, so a
-      mid-unit model mutation would never be observed.
+      mid-unit model mutation would never be observed;
+    * ``node_crash_after_pairs``: cluster only — the whole simulated
+      *node* dies (its thread exits without a word) after N measured
+      pairs of that unit, taking its local scratch with it.
 
-    Each fault fires once per unit: the first attempt trips it and drops
-    a marker file in the unit directory, so the requeued (or speculated)
-    attempt runs clean.  (Drift is not a failure — its attempt completes
-    normally — but the marker still proves the injection actually fired.)
-    Markers double as the test/CI evidence that the recovery path (not a
-    lucky clean run) produced the result.
+    Cluster-wide fault shapes (:mod:`repro.campaign.cluster`):
+
+    * ``transport``: sorted (name, value) pairs configuring the
+      simulated transport's chaos — ``drop_rate`` (messages lost),
+      ``dup_rate`` (messages/RPCs delivered twice), ``delay_s`` (max
+      uniform delivery delay), ``seed`` (per-link deterministic RNG);
+    * ``store_transient``: ``((unit_key, n), ...)`` — the first ``n``
+      store writes of that unit's artifacts fail with a retryable
+      error (the retry/backoff layer must ride them out);
+    * ``store_permanent``: ``(unit_key, ...)`` — every store write for
+      that unit fails forever: retries exhaust, the write is
+      dead-lettered, the unit ends ``failed`` without poisoning peers;
+    * ``store_partition``: ``(after_n_ops, n_ops)`` — a driver<->store
+      partition that heals: after the driver's Nth store operation the
+      next ``n_ops`` operations fail, then the link recovers.  Counted
+      in operations, not seconds, so the window is deterministic.
+
+    Each unit-keyed fault fires once per unit: the first attempt trips
+    it and drops a marker file in the unit directory, so the requeued
+    (or speculated) attempt runs clean.  (Drift is not a failure — its
+    attempt completes normally — but the marker still proves the
+    injection actually fired.)  Markers double as the test/CI evidence
+    that the recovery path (not a lucky clean run) produced the result.
     """
 
     crash_after_pairs: tuple = ()       # sorted ((unit_key, n), ...)
     stall_s: tuple = ()                 # sorted ((unit_key, seconds), ...)
     slow_pairs_s: tuple = ()            # sorted ((unit_key, seconds), ...)
     drift_after_pairs: tuple = ()       # sorted ((unit_key, spec_tuple), ...)
+    node_crash_after_pairs: tuple = ()  # sorted ((unit_key, n), ...)
+    transport: tuple = ()               # sorted ((name, value), ...)
+    store_transient: tuple = ()         # sorted ((unit_key, n), ...)
+    store_permanent: tuple = ()         # sorted (unit_key, ...)
+    store_partition: tuple = ()         # (after_n_ops, n_ops) or ()
 
     @staticmethod
     def make(crash_after_pairs: dict | None = None,
              stall_s: dict | None = None,
              slow_pairs_s: dict | None = None,
-             drift_after_pairs: dict | None = None) -> "FaultPlan":
+             drift_after_pairs: dict | None = None,
+             node_crash_after_pairs: dict | None = None,
+             transport: dict | None = None,
+             store_transient: dict | None = None,
+             store_permanent=(),
+             store_partition: tuple | None = None) -> "FaultPlan":
         return FaultPlan(
             tuple(sorted((crash_after_pairs or {}).items())),
             tuple(sorted((stall_s or {}).items())),
             tuple(sorted((slow_pairs_s or {}).items())),
             tuple(sorted((k, tuple(v))
-                         for k, v in (drift_after_pairs or {}).items())))
+                         for k, v in (drift_after_pairs or {}).items())),
+            tuple(sorted((node_crash_after_pairs or {}).items())),
+            tuple(sorted((transport or {}).items())),
+            tuple(sorted((store_transient or {}).items())),
+            tuple(sorted(store_permanent)),
+            tuple(store_partition or ()))
 
     def crash_for(self, unit_key: str):
         return dict(self.crash_after_pairs).get(unit_key)
@@ -121,10 +165,34 @@ class FaultPlan:
         fi, ft = pair if pair else (None, None)
         return int(n), float(scale), fi, ft
 
+    def node_crash_for(self, unit_key: str):
+        return dict(self.node_crash_after_pairs).get(unit_key)
+
+    def transport_dict(self) -> dict:
+        """Chaos knobs for :class:`~repro.campaign.cluster.transport
+        .TransportFaults` (empty = a clean network)."""
+        return dict(self.transport)
+
+    def store_transient_for(self, unit_key: str) -> int:
+        return int(dict(self.store_transient).get(unit_key, 0))
+
+    def store_permanent_for(self, unit_key: str) -> bool:
+        return unit_key in self.store_permanent
+
+    def partition_window(self):
+        """``(after_n_ops, n_ops)`` or None."""
+        if not self.store_partition:
+            return None
+        after, n = self.store_partition
+        return int(after), int(n)
+
     @property
     def empty(self) -> bool:
         return not (self.crash_after_pairs or self.stall_s
-                    or self.slow_pairs_s or self.drift_after_pairs)
+                    or self.slow_pairs_s or self.drift_after_pairs
+                    or self.node_crash_after_pairs or self.transport
+                    or self.store_transient or self.store_permanent
+                    or self.store_partition)
 
 
 def fault_marker_path(campaign: Campaign, unit_key: str, kind: str) -> str:
@@ -132,7 +200,12 @@ def fault_marker_path(campaign: Campaign, unit_key: str, kind: str) -> str:
 
 
 def _trip_once(campaign: Campaign, unit_key: str, kind: str) -> bool:
-    """Atomically claim one injected fault; False when already tripped."""
+    """Atomically claim one injected fault; False when already tripped.
+
+    Markers live directly in the (driver-side) unit directory even for
+    cluster nodes: the injector needs once-per-unit semantics *across
+    attempts on different workers*, and the marker is harness
+    bookkeeping/evidence, never transported artifact data."""
     path = fault_marker_path(campaign, unit_key, kind)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     try:
@@ -143,13 +216,21 @@ def _trip_once(campaign: Campaign, unit_key: str, kind: str) -> bool:
     return True
 
 
+def _hard_exit() -> None:
+    """Default injected-crash action: die like a segfault/OOM kill."""
+    os._exit(_CRASH_EXIT)
+
+
 class _BeatingSerial(SerialExecutor):
     """Worker-side session executor: serial in-order measurement (the
     determinism contract) that emits one heartbeat per measured pair and
-    hosts the injected crash/slowdown/drift hooks."""
+    hosts the injected crash/slowdown/drift hooks.  ``crash_action``
+    abstracts how a crash manifests: ``os._exit`` for a process worker,
+    raising the node-death exception for a simulated cluster node."""
 
     def __init__(self, beat, crash_after=None, on_crash=None,
-                 sleep_between_s=None, drift_after=None, on_drift=None):
+                 sleep_between_s=None, drift_after=None, on_drift=None,
+                 crash_action=_hard_exit):
         self.beat = beat
         self.crash_after = crash_after
         self.on_crash = on_crash
@@ -157,6 +238,7 @@ class _BeatingSerial(SerialExecutor):
         self.drift_after = drift_after
         self.on_drift = on_drift       # set post-construction (needs the
                                        # session's live device)
+        self.crash_action = crash_action
 
     def map_pairs(self, fn, pairs, on_result=None):
         out = []
@@ -168,10 +250,10 @@ class _BeatingSerial(SerialExecutor):
             self.beat()
             if self.crash_after is not None and i + 1 >= self.crash_after:
                 if self.on_crash is None or self.on_crash():
-                    # hard exit AFTER persistence: the requeued attempt
-                    # must find the measured pairs on disk (mid-unit, not
-                    # before-unit, crash semantics)
-                    os._exit(_CRASH_EXIT)
+                    # crash AFTER persistence (and the beat's upload hook):
+                    # the requeued attempt must find the measured pairs —
+                    # mid-unit, not before-unit, crash semantics
+                    self.crash_action()
             if self.drift_after is not None and i + 1 >= self.drift_after \
                     and self.on_drift is not None:
                 self.on_drift()        # idempotent; every later pair runs
@@ -195,6 +277,177 @@ def activate_drift(session, scale: float, f_init=None, f_target=None) -> None:
     only_pair = (None if f_init is None
                  else (float(f_init), float(f_target)))
     dev.model = ShiftedTransitionModel(dev.model, scale, only_pair)
+
+
+# ------------------------------------------------------------------ #
+# shared dispatch policy: requeue budgets, speculation, dedup
+# ------------------------------------------------------------------ #
+class DispatchCore:
+    """Worker-kind-agnostic unit bookkeeping shared by the process
+    scheduler below and the cluster dispatcher
+    (:mod:`repro.campaign.cluster.dispatch`).
+
+    A *worker* is anything with an ``inflight`` attribute (unit key or
+    None) and a ``send_unit(key)`` method — a process wrapping a task
+    queue, or a node handle wrapping a transport channel.  The core owns
+    every decision that must behave identically for both: attempt
+    budgets (``spec.retries`` TOTAL attempts), requeue on worker loss,
+    straggler speculation with first-result-wins, duplicate-result
+    discard, and exhaustion finalization.  Manifest writes go through
+    the injected ``mark_unit`` so the cluster driver can route them over
+    its (partition-prone, retry-wrapped) store client while the process
+    scheduler writes locally.
+    """
+
+    #: stats keys the core maintains (schedulers add their own)
+    STATS = ("requeued_units", "speculative_dispatches",
+             "discarded_duplicates", "recovery_s")
+
+    def __init__(self, campaign: Campaign, unit_keys, *, retries: int,
+                 heartbeat, straggler, stats: dict,
+                 mark_unit=None, load_table=None,
+                 clock=time.monotonic, verbose: bool = False):
+        from repro.campaign.scheduler import UnitOutcome
+        self._Outcome = UnitOutcome
+        self.campaign = campaign
+        self.unit_keys = list(unit_keys)
+        self.retries = max(1, int(retries))
+        self.hb = heartbeat
+        self.sp = straggler
+        self.stats = stats
+        for k in self.STATS:
+            stats.setdefault(k, 0)
+        self.mark_unit = mark_unit or campaign.mark_unit
+        self.load_table = load_table or campaign.load_table
+        self.clock = clock
+        self.verbose = verbose
+
+        self.pending = deque(self.unit_keys)
+        self.attempts = {k: 0 for k in self.unit_keys}   # dispatches so far
+        self.failures = {k: 0 for k in self.unit_keys}   # failed attempts
+        self.errors: dict[str, str] = {}
+        self.outcomes: dict = {}
+        self.copies = {k: 0 for k in self.unit_keys}     # in-flight count
+        self._lost_at: dict[str, float] = {}             # worker-loss stamp
+
+    # ---------------- queries ---------------- #
+    def resolved(self, key: str) -> bool:
+        return key in self.outcomes
+
+    @property
+    def all_resolved(self) -> bool:
+        return len(self.outcomes) >= len(self.unit_keys)
+
+    def next_pending(self):
+        """Pop the next unresolved pending key (None when drained)."""
+        while self.pending:
+            key = self.pending.popleft()
+            if not self.resolved(key):
+                return key
+        return None
+
+    def speculation_candidate(self):
+        """Slowest straggling single-copy unit, or None.  Callers only
+        consult this once the pending queue is empty (speculation clones
+        in-flight work onto otherwise-idle capacity)."""
+        cands = [k for k, n in self.copies.items()
+                 if n == 1 and not self.resolved(k) and self.sp.straggling(k)]
+        if not cands:
+            return None
+        return max(cands, key=self.sp.elapsed)
+
+    def ordered_outcomes(self) -> dict:
+        return {k: self.outcomes[k] for k in self.unit_keys}
+
+    # ---------------- transitions ---------------- #
+    def dispatch(self, worker, key: str, speculative: bool = False) -> None:
+        worker.inflight = key
+        self.copies[key] += 1
+        self.attempts[key] += 1
+        self.sp.start(key)      # idempotent: a duplicate keeps the
+                                # original's start stamp
+        if speculative:
+            self.stats["speculative_dispatches"] += 1
+        else:
+            self.mark_unit(key, status=UNIT_RUNNING,
+                           attempts=self.attempts[key])
+        worker.send_unit(key)
+        if self.verbose:
+            tag = " (speculative)" if speculative else ""
+            print(f"  [{key}] dispatched{tag}")
+
+    def release(self, worker, key: str) -> None:
+        if worker is not None and worker.inflight == key:
+            worker.inflight = None
+        self.copies[key] = max(0, self.copies[key] - 1)
+
+    def finish_done(self, worker, key: str, wall: float,
+                    n_pairs: int) -> None:
+        self.release(worker, key)
+        if self.resolved(key):          # a duplicate lost the race; its
+            self.stats["discarded_duplicates"] += 1   # artifacts are
+            return                      # identical bytes, nothing to undo
+        self.sp.finish(key)
+        if key in self._lost_at:        # this unit came back from a dead
+            self.stats["recovery_s"] = max(       # worker: recovery time
+                self.stats["recovery_s"],         # = loss -> completion
+                self.clock() - self._lost_at.pop(key))
+        self.mark_unit(key, status=UNIT_DONE, wall_s=wall,
+                       n_pairs=n_pairs, error=None)
+        self.outcomes[key] = self._Outcome(
+            key, "done", attempts=self.attempts[key], wall_s=wall,
+            table=self.load_table(key))
+        if self.verbose:
+            print(f"  [{key}] done: {n_pairs} pairs in {wall:.1f}s "
+                  f"(attempt {self.attempts[key]})")
+
+    def finalize_failed(self, key: str) -> None:
+        self.sp.abandon(key)
+        self.mark_unit(key, status=UNIT_FAILED, error=self.errors.get(key))
+        self.outcomes[key] = self._Outcome(key, "failed",
+                                           attempts=self.attempts[key],
+                                           error=self.errors.get(key))
+        if self.verbose:
+            print(f"  [{key}] FAILED: {self.errors.get(key)}")
+
+    def record_failure(self, key: str, error: str) -> None:
+        """One attempt burned; requeue within budget, else finalize."""
+        if self.resolved(key):
+            return
+        # drop the in-flight stamp: the failed attempt's wall time says
+        # nothing about the unit's cost, and a requeued dispatch must
+        # not inherit it (sp.start is a setdefault) — a stale stamp
+        # would flag the fresh attempt as straggling immediately and
+        # fold cross-attempt elapsed into the EWMA on finish
+        self.sp.abandon(key)
+        self.failures[key] += 1
+        self.errors[key] = error
+        if self.failures[key] >= self.retries:
+            if self.copies[key] == 0:
+                self.finalize_failed(key)
+            # else: a speculative copy is still in flight — it may win
+        else:
+            self.stats["requeued_units"] += 1
+            self.pending.appendleft(key)
+            if self.verbose:
+                print(f"  [{key}] requeued after: {error}")
+
+    def worker_lost(self, key: str, reason: str) -> None:
+        """The worker carrying ``key`` died or hung: burn the attempt and
+        requeue within budget.  (The caller already removed the worker
+        itself; the core only accounts for the unit.)"""
+        self.copies[key] = max(0, self.copies[key] - 1)
+        self._lost_at.setdefault(key, self.clock())
+        self.record_failure(key, reason)
+
+    def finalize_exhausted(self) -> None:
+        """Units whose budget is spent and whose last in-flight copy has
+        vanished (e.g. its worker was reaped while the unit was already
+        out of retries)."""
+        for key in self.unit_keys:
+            if (not self.resolved(key) and self.failures[key] >= self.retries
+                    and self.copies[key] == 0 and key not in self.pending):
+                self.finalize_failed(key)
 
 
 # ------------------------------------------------------------------ #
@@ -291,6 +544,10 @@ class _Worker:
                                     # never the survivors' message path
     inflight: str | None = None     # unit key currently assigned
 
+    def send_unit(self, key: str) -> None:
+        """DispatchCore's worker protocol: hand over one unit."""
+        self.task_q.put(key)
+
 
 class ProcessCampaignScheduler:
     """Drive a campaign's pending units through a fault-tolerant process
@@ -320,14 +577,13 @@ class ProcessCampaignScheduler:
         self.clock = clock
         self.verbose = verbose
         self.trace = False
-        # recovery evidence, surfaced on CampaignResult.stats
+        # recovery evidence, surfaced on CampaignResult.stats (the core
+        # adds its shared requeue/speculation/dedup counters on run)
         self.stats = {"crashed_workers": 0, "hung_workers": 0,
-                      "requeued_units": 0, "speculative_dispatches": 0,
-                      "discarded_duplicates": 0, "respawned_workers": 0}
+                      "respawned_workers": 0}
 
     # -------------------------------------------------------------- #
     def run(self, todo: list[UnitSpec]) -> dict:
-        from repro.campaign.scheduler import UnitOutcome
         from repro.runtime.fault_tolerance import (HeartbeatMonitor,
                                                    StragglerPolicy)
         import multiprocessing
@@ -337,94 +593,19 @@ class ProcessCampaignScheduler:
         self._ctx = ctx
         self._next_wid = 0
         self._workers: dict[int, _Worker] = {}
-        retries = max(1, self.spec.retries)
         # trace recording is a per-unit event stream: a resumed duplicate
         # records only the remainder (trace_complete=False), so duplicate
         # artifacts are NOT identical bytes and first-result-wins cannot
         # discard the loser's save — speculation stays off under trace
         speculate = self.speculate and not self.trace
 
-        unit_keys = [u.key for u in todo]
-        pending = deque(unit_keys)
-        attempts = {k: 0 for k in unit_keys}        # dispatches so far
-        failures = {k: 0 for k in unit_keys}        # crashed/failed attempts
-        errors: dict[str, str] = {}
-        outcomes: dict[str, UnitOutcome] = {}
-        copies: dict[str, int] = {k: 0 for k in unit_keys}  # in-flight count
-
         hb = HeartbeatMonitor(0, timeout_s=self.heartbeat_timeout_s,
                               clock=self.clock)
         sp = StragglerPolicy(ratio=self.straggler_ratio, clock=self.clock)
-
-        def resolved(key: str) -> bool:
-            return key in outcomes
-
-        def release(wid: int, key: str) -> None:
-            w = self._workers.get(wid)
-            if w is not None and w.inflight == key:
-                w.inflight = None
-            copies[key] = max(0, copies[key] - 1)
-
-        def dispatch(worker: _Worker, key: str, speculative=False) -> None:
-            worker.inflight = key
-            copies[key] += 1
-            attempts[key] += 1
-            sp.start(key)       # idempotent: a duplicate keeps the
-                                # original's start stamp
-            if not speculative:
-                self.campaign.mark_unit(key, status=UNIT_RUNNING,
-                                        attempts=attempts[key])
-            worker.task_q.put(key)
-            if self.verbose:
-                tag = " (speculative)" if speculative else ""
-                print(f"  [{key}] dispatched{tag}")
-
-        def finish_done(wid: int, key: str, wall: float, n_pairs: int):
-            release(wid, key)
-            if resolved(key):           # a duplicate lost the race; its
-                self.stats["discarded_duplicates"] += 1   # artifacts are
-                return                  # identical bytes, nothing to undo
-            sp.finish(key)
-            self.campaign.mark_unit(key, status=UNIT_DONE, wall_s=wall,
-                                    n_pairs=n_pairs, error=None)
-            outcomes[key] = UnitOutcome(
-                key, "done", attempts=attempts[key], wall_s=wall,
-                table=self.campaign.load_table(key))
-            if self.verbose:
-                print(f"  [{key}] done: {n_pairs} pairs in {wall:.1f}s "
-                      f"(attempt {attempts[key]})")
-
-        def finalize_failed(key: str) -> None:
-            sp.abandon(key)
-            self.campaign.mark_unit(key, status=UNIT_FAILED,
-                                    error=errors.get(key))
-            outcomes[key] = UnitOutcome(key, "failed",
-                                        attempts=attempts[key],
-                                        error=errors.get(key))
-            if self.verbose:
-                print(f"  [{key}] FAILED: {errors.get(key)}")
-
-        def record_failure(key: str, error: str) -> None:
-            """One attempt burned; requeue within budget, else finalize."""
-            if resolved(key):
-                return
-            # drop the in-flight stamp: the failed attempt's wall time says
-            # nothing about the unit's cost, and a requeued dispatch must
-            # not inherit it (sp.start is a setdefault) — a stale stamp
-            # would flag the fresh attempt as straggling immediately and
-            # fold cross-attempt elapsed into the EWMA on finish
-            sp.abandon(key)
-            failures[key] += 1
-            errors[key] = error
-            if failures[key] >= retries:
-                if copies[key] == 0:
-                    finalize_failed(key)
-                # else: a speculative copy is still in flight — it may win
-            else:
-                self.stats["requeued_units"] += 1
-                pending.appendleft(key)
-                if self.verbose:
-                    print(f"  [{key}] requeued after: {error}")
+        core = DispatchCore(self.campaign, [u.key for u in todo],
+                            retries=self.spec.retries, heartbeat=hb,
+                            straggler=sp, stats=self.stats,
+                            clock=self.clock, verbose=self.verbose)
 
         def reap(wid: int, reason: str) -> None:
             """A worker died (exit) or hung (heartbeat timeout): discard
@@ -441,9 +622,8 @@ class ProcessCampaignScheduler:
                 print(f"  worker {wid} {reason}"
                       + (f" while running [{key}]" if key else ""))
             if key is not None:
-                copies[key] = max(0, copies[key] - 1)
-                record_failure(key, f"worker {reason}")     # abandons the
-                                                            # straggler stamp
+                core.worker_lost(key, f"worker {reason}")    # abandons the
+                                                             # straggler stamp
 
         def drain() -> int:
             """Pull every queued message from every worker's own result
@@ -463,47 +643,44 @@ class ProcessCampaignScheduler:
                     hb.beat(wid)
                     if kind == "done":
                         _, _, key, wall, n_pairs = msg
-                        finish_done(wid, key, wall, n_pairs)
+                        core.finish_done(self._workers.get(wid), key,
+                                         wall, n_pairs)
                     elif kind == "failed":
                         _, _, key, error = msg
-                        release(wid, key)
-                        record_failure(key, error)
+                        core.release(self._workers.get(wid), key)
+                        core.record_failure(key, error)
                     # "ready"/"start"/"beat" only feed the monitor
             if n == 0 and self.poll_s:
                 time.sleep(self.poll_s)
             return n
 
-        for _ in range(min(self.max_workers, len(pending))):
+        for _ in range(min(self.max_workers, len(core.pending))):
             self._spawn_worker(hb)
 
         try:
-            while len(outcomes) < len(unit_keys):
+            while not core.all_resolved:
                 # assign pending units to idle workers
                 idle = [w for w in self._workers.values()
                         if w.inflight is None]
-                while idle and pending:
-                    key = pending.popleft()
-                    if resolved(key):
-                        continue
-                    dispatch(idle.pop(), key)
+                while idle and core.pending:
+                    key = core.next_pending()
+                    if key is None:
+                        break
+                    core.dispatch(idle.pop(), key)
                 # keep the fleet at strength while queued work remains
-                while (pending
+                while (core.pending
                        and len(self._workers) < min(self.max_workers,
-                                                    len(pending))):
+                                                    len(core.pending))):
                     self._spawn_worker(hb)
                     self.stats["respawned_workers"] += 1
                 # speculation: clone the slowest straggler onto idle
                 # capacity once the queue is empty
-                if speculate and not pending:
+                if speculate and not core.pending:
                     idle = [w for w in self._workers.values()
                             if w.inflight is None]
-                    cands = [k for k, n in copies.items()
-                             if n == 1 and not resolved(k)
-                             and sp.straggling(k)]
-                    cands.sort(key=sp.elapsed, reverse=True)
-                    if idle and cands:
-                        self.stats["speculative_dispatches"] += 1
-                        dispatch(idle[0], cands[0], speculative=True)
+                    cand = core.speculation_candidate()
+                    if idle and cand is not None:
+                        core.dispatch(idle[0], cand, speculative=True)
                 drain()
                 # idle workers legitimately send nothing: keep them alive
                 # in the monitor so only silent *busy* workers count
@@ -522,13 +699,10 @@ class ProcessCampaignScheduler:
                         self.stats["hung_workers"] += 1
                         reap(wid, "hung (heartbeat timeout)")
                 # exhausted units whose last in-flight copy vanished
-                for key in unit_keys:
-                    if (not resolved(key) and failures[key] >= retries
-                            and copies[key] == 0 and key not in pending):
-                        finalize_failed(key)
+                core.finalize_exhausted()
         finally:
             self._shutdown()
-        return {k: outcomes[k] for k in unit_keys}
+        return core.ordered_outcomes()
 
     # -------------------------------------------------------------- #
     def _spawn_worker(self, hb) -> None:

@@ -7,6 +7,8 @@ event streams, judged against a stored campaign baseline.
                                   alert artifacts              (service)
     MetricsRegistry               counters/gauges/histograms  (metrics)
     drift_alert_doc / alert_summary   alert documents          (alerts)
+    AlertSink / make_sink         push delivery with retry +
+                                  dead-lettering                (sinks)
 
 CLI: ``python -m repro.monitor {status,watch,replay}``.
 """
@@ -16,6 +18,8 @@ from repro.monitor.ingest import DeviceStream, PassEstimate, fit_baseline
 from repro.monitor.metrics import (Counter, Gauge, Histogram,
                                    MetricsRegistry, start_http_server)
 from repro.monitor.service import MonitorConfig, MonitorService
+from repro.monitor.sinks import (AlertSink, FileSink, HttpSink, QueueSink,
+                                 RetryingSink, make_sink)
 
 __all__ = [
     "alert_summary", "drift_alert_doc", "stale_alert_doc",
@@ -23,4 +27,6 @@ __all__ = [
     "DeviceStream", "PassEstimate", "fit_baseline",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "start_http_server",
     "MonitorConfig", "MonitorService",
+    "AlertSink", "FileSink", "HttpSink", "QueueSink", "RetryingSink",
+    "make_sink",
 ]

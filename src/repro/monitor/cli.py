@@ -1,7 +1,12 @@
 """`python -m repro.monitor` — the fleet monitor's command surface.
 
     status CID           alert + trace inventory of a campaign's units
-    watch  CID           poll the store, print alerts as they appear
+    watch  CID           poll the store, print alerts as they appear;
+                         with --sink URL, push undelivered alerts once
+                         (webhook or JSONL file) and exit instead of
+                         polling; --requeue records flagged drift alerts
+                         in the campaign's requeue manifest for
+                         `campaign run --requeue-from-alerts`
     replay CID TRACE...  drive the monitor from recorded event streams
                          (a trace directory or a unit key whose trace is
                          stored in the campaign); exit 1 with
@@ -74,8 +79,62 @@ def cmd_status(args) -> int:
     return 0
 
 
+def _maybe_requeue(args, campaign, aid: str, unit: str,
+                   doc: dict) -> bool:
+    """--requeue: a *flagged* drift alert invalidates the unit's data —
+    record a re-measurement request (`campaign run
+    --requeue-from-alerts` consumes it).  Unflagged drift scores and
+    stale-device alerts do not requeue: there is nothing wrong with the
+    stored measurement itself."""
+    from repro.monitor.alerts import DRIFT
+    if not (args.requeue and doc.get("kind") == DRIFT
+            and doc.get("verdict", {}).get("flagged")):
+        return False
+    campaign.save_requeue({unit: {
+        "reason": f"confirmed drift (alert {aid[:12]})",
+        "alert_ids": [aid]}})
+    return True
+
+
 def cmd_watch(args) -> int:
     campaign = _store(args).load(args.campaign)
+
+    if args.sink:
+        # push mode: deliver every not-yet-delivered alert through the
+        # sink once, then exit — a configured sink replaces store
+        # polling (the sink's consumer owns the watching from here)
+        from repro.campaign.cluster.retry import RetryPolicy
+        from repro.monitor.sinks import make_sink
+        sink = make_sink(
+            args.sink,
+            dead_letter_path=os.path.join(campaign.dir, "deadletter",
+                                          "sink.jsonl"),
+            policy=RetryPolicy(max_attempts=args.sink_retries,
+                               base_s=0.1, cap_s=2.0))
+        state_path = os.path.join(campaign.dir, "sink-delivered.json")
+        delivered: set[str] = set()
+        if os.path.exists(state_path):
+            with open(state_path) as f:
+                delivered = set(json.load(f).get("delivered", []))
+        n_requeued = 0
+        for aid, unit, doc in _campaign_alerts(campaign):
+            if aid in delivered:
+                continue
+            sink.deliver(aid, unit, doc)
+            delivered.add(aid)
+            n_requeued += _maybe_requeue(args, campaign, aid, unit, doc)
+            print(f"[{aid[:12]}] {alert_summary(doc)}", flush=True)
+        from repro.core.paths import atomic_replace
+        with atomic_replace(state_path) as tmp:
+            with open(tmp, "w") as f:
+                json.dump({"delivered": sorted(delivered)}, f, indent=1)
+        print(f"sink {args.sink}: {sink.delivered} delivered, "
+              f"{sink.dead} dead-lettered"
+              + (f", {n_requeued} unit(s) requeued" if args.requeue
+                 else "")
+              + "; sink configured — store polling skipped")
+        return 0 if sink.dead == 0 else 1
+
     seen = {aid for aid, _, _ in _campaign_alerts(campaign)}
     print(f"watching campaign {campaign.campaign_id} "
           f"({len(seen)} existing alert(s); poll every {args.interval}s)")
@@ -86,6 +145,7 @@ def cmd_watch(args) -> int:
             if aid in seen:
                 continue
             seen.add(aid)
+            _maybe_requeue(args, campaign, aid, unit, doc)
             print(f"[{aid[:12]}] {alert_summary(doc)}", flush=True)
         if args.rounds <= 0 or rounds < args.rounds:
             time.sleep(args.interval)
@@ -142,12 +202,27 @@ def build_parser() -> argparse.ArgumentParser:
                    help="machine-readable output")
     p.set_defaults(fn=cmd_status)
 
-    p = sub.add_parser("watch", help="poll the store, print new alerts")
+    p = sub.add_parser("watch", help="poll the store, print new alerts "
+                                     "(or push them to a sink)")
     p.add_argument("campaign", help="campaign id (or unique prefix)")
     p.add_argument("--interval", type=float, default=2.0,
                    help="poll period (s)")
     p.add_argument("--rounds", type=int, default=0,
                    help="stop after N polls (0 = forever)")
+    p.add_argument("--sink", default=None,
+                   help="push alerts instead of polling: an http(s):// "
+                        "webhook URL or a JSONL file path; each alert is "
+                        "delivered once (delivery state rides with the "
+                        "campaign), undeliverable alerts are "
+                        "dead-lettered, and the command exits instead "
+                        "of polling")
+    p.add_argument("--sink-retries", type=int, default=4,
+                   help="delivery attempts per alert before it is "
+                        "dead-lettered")
+    p.add_argument("--requeue", action="store_true",
+                   help="write flagged drift alerts into the campaign's "
+                        "requeue manifest; `campaign run "
+                        "--requeue-from-alerts` re-measures those units")
     p.set_defaults(fn=cmd_watch)
 
     p = sub.add_parser("replay",

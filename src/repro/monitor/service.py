@@ -55,12 +55,16 @@ class MonitorService:
     """Streaming drift detection for a fleet against one campaign."""
 
     def __init__(self, campaign, cfg: MonitorConfig | None = None,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None, sink=None):
         if isinstance(campaign, str):
             from repro.campaign.store import ArtifactStore
             campaign = ArtifactStore().load(campaign)
         self.campaign = campaign
         self.cfg = cfg or MonitorConfig()
+        # optional AlertSink (repro.monitor.sinks): every persisted alert
+        # is also pushed — wrap external sinks in RetryingSink so a dead
+        # endpoint cannot take the monitor down
+        self.sink = sink
         self._devices: dict[str, _DeviceState] = {}
         self._now = 0.0                 # stream clock: max t_host seen
         self.heartbeat = HeartbeatMonitor(
@@ -196,6 +200,8 @@ class MonitorService:
         self.alerts.append((alert_id, st.unit_key, doc))
         st.n_alerts += 1
         self.m_alerts.inc(kind=doc["kind"], device=doc["device"])
+        if self.sink is not None:
+            self.sink.deliver(alert_id, st.unit_key, doc)
 
     def _check_stale(self) -> None:
         for device in self._devices:

@@ -1,0 +1,166 @@
+"""Alert sinks: push alerts to the outside instead of being polled.
+
+The monitor's alerts are durable store artifacts first — a sink is the
+*delivery* side: an :class:`AlertSink` receives each alert document once
+and forwards it somewhere an operator actually looks (a webhook, a
+file a log shipper tails, an in-process queue).  Delivery reuses the
+cluster layer's retry machinery (:mod:`repro.campaign.cluster.retry`):
+a flaky endpoint gets capped-exponential seeded-jitter retries, and an
+alert that exhausts its budget is appended to a dead-letter file — the
+fleet never loses an alert silently, and a down webhook never wedges
+the monitor (delivery failures are contained by :class:`RetryingSink`).
+
+Shipped sinks:
+
+* :class:`FileSink` — append-only JSONL, one alert per line.  The
+  queue-shaped integration: anything that tails a file (or reads it as
+  a work queue) consumes the stream;
+* :class:`HttpSink` — webhook-shaped POST of the alert document as
+  JSON.  The transport callable is injectable (tests inject a fake;
+  the default uses urllib) and transport-level failures surface as
+  retryable :class:`TransportError`;
+* :class:`QueueSink` — an in-memory list for embedding the monitor in
+  another process (and for tests);
+* :class:`RetryingSink` — the policy wrapper every external sink should
+  wear: retry with backoff, dead-letter on exhaustion, never raise.
+
+``make_sink(spec)`` maps a CLI string to a wrapped sink: ``http(s)://``
+URLs become webhooks, anything else is a JSONL file path.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Protocol
+
+from repro.campaign.cluster.retry import (DeadLetterFile, RetriesExhausted,
+                                          RetryPolicy, TransportError,
+                                          call_with_retry)
+
+
+class AlertSink(Protocol):
+    """One-way alert delivery.  ``deliver`` is called once per alert;
+    implementations raise :class:`RetryableError` subclasses for
+    failures a retry may cure."""
+
+    def deliver(self, alert_id: str, unit_key: str,
+                doc: dict) -> None: ...         # pragma: no cover
+
+
+def _payload(alert_id: str, unit_key: str, doc: dict) -> dict:
+    return {"id": alert_id, "unit_key": unit_key, **doc}
+
+
+class QueueSink:
+    """In-memory sink: embedders drain ``items``; tests assert on it."""
+
+    def __init__(self):
+        self.items: list[dict] = []
+        self._lock = threading.Lock()
+
+    def deliver(self, alert_id: str, unit_key: str, doc: dict) -> None:
+        with self._lock:
+            self.items.append(_payload(alert_id, unit_key, doc))
+
+
+class FileSink:
+    """Append-only JSONL file, one alert per line (atomic line appends:
+    POSIX O_APPEND interleaves whole lines across writers)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+
+    def deliver(self, alert_id: str, unit_key: str, doc: dict) -> None:
+        import os
+        line = json.dumps(_payload(alert_id, unit_key, doc),
+                          sort_keys=True)
+        try:
+            with self._lock:
+                d = os.path.dirname(self.path)
+                if d:
+                    os.makedirs(d, exist_ok=True)
+                with open(self.path, "a") as f:
+                    f.write(line + "\n")
+        except OSError as exc:      # full disk, dropped mount: retryable
+            raise TransportError(
+                f"sink file {self.path} unwritable: {exc}") from exc
+
+
+def _urllib_post(url: str, body: bytes, timeout_s: float) -> int:
+    """Default HTTP transport; returns the status code, raises OSError
+    family on link failure."""
+    import urllib.request
+    req = urllib.request.Request(
+        url, data=body, headers={"Content-Type": "application/json"},
+        method="POST")
+    with urllib.request.urlopen(req, timeout=timeout_s) as resp:  # noqa: S310
+        return int(getattr(resp, "status", 200))
+
+
+class HttpSink:
+    """Webhook-shaped sink: POST the alert document as a JSON body.
+
+    ``post`` is the injectable transport — ``(url, body_bytes,
+    timeout_s) -> status_code``.  Link errors and non-2xx statuses are
+    retryable: webhooks flake, and the retry wrapper owns the budget."""
+
+    def __init__(self, url: str, post=None, timeout_s: float = 5.0):
+        self.url = url
+        self.post = post or _urllib_post
+        self.timeout_s = timeout_s
+
+    def deliver(self, alert_id: str, unit_key: str, doc: dict) -> None:
+        body = json.dumps(_payload(alert_id, unit_key, doc),
+                          sort_keys=True).encode()
+        try:
+            status = self.post(self.url, body, self.timeout_s)
+        except OSError as exc:      # URLError subclasses OSError
+            raise TransportError(
+                f"webhook {self.url} unreachable: {exc}") from exc
+        if not 200 <= int(status) < 300:
+            raise TransportError(
+                f"webhook {self.url} answered HTTP {status}")
+
+
+class RetryingSink:
+    """Delivery policy around any sink: retries with backoff, records
+    exhausted deliveries as dead letters, and NEVER raises — a dead
+    webhook must not take the monitor down with it.  ``delivered`` /
+    ``dead`` count outcomes."""
+
+    def __init__(self, sink, policy: RetryPolicy | None = None,
+                 dead_letters: DeadLetterFile | None = None, sleep=None):
+        self.sink = sink
+        self.policy = policy or RetryPolicy(max_attempts=4, base_s=0.1,
+                                            cap_s=2.0)
+        self.dead_letters = dead_letters
+        self.sleep = sleep
+        self.delivered = 0
+        self.dead = 0
+
+    def deliver(self, alert_id: str, unit_key: str, doc: dict) -> None:
+        kw = {} if self.sleep is None else {"sleep": self.sleep}
+        try:
+            call_with_retry(
+                lambda: self.sink.deliver(alert_id, unit_key, doc),
+                self.policy, op="alert.deliver", op_key=alert_id,
+                dead_letters=self.dead_letters, **kw)
+        except RetriesExhausted:
+            self.dead += 1          # dead-lettered by call_with_retry
+        else:
+            self.delivered += 1
+
+
+def make_sink(spec: str, *, dead_letter_path: str | None = None,
+              policy: RetryPolicy | None = None,
+              post=None) -> RetryingSink:
+    """CLI string -> wrapped sink: ``http(s)://...`` is a webhook,
+    anything else a JSONL file path."""
+    if spec.startswith(("http://", "https://")):
+        inner: AlertSink = HttpSink(spec, post=post)
+    else:
+        inner = FileSink(spec)
+    dl = (DeadLetterFile(dead_letter_path)
+          if dead_letter_path is not None else None)
+    return RetryingSink(inner, policy=policy, dead_letters=dl)

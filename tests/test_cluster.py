@@ -1,0 +1,266 @@
+"""Multi-node campaign dispatch: the chaos matrix.
+
+The acceptance contract from the cluster layer: under every injected
+fault — a node crashing mid-unit, a transport that drops/duplicates/
+delays messages, a store that fails writes transiently or partitions
+away from the driver — the campaign still completes within
+``spec.retries`` total attempts per unit, and the merged store is
+*bit-identical* to a serial single-host run of the same spec.  A
+permanently failing store isolates to its unit (dead-lettered), never
+poisoning the rest.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import (ArtifactStore, CampaignRunner, CampaignSpec,
+                            DeviceSpec, MeasureSpec, run_campaign)
+from repro.campaign.workqueue import FaultPlan, fault_marker_path
+
+FAST = MeasureSpec(key="fast", min_measurements=4, max_measurements=5,
+                   rse_check_every=4)
+FREQS = (210.0, 705.0, 1410.0)
+
+
+def _device(key, seed, kind="a100"):
+    return DeviceSpec.make(key, "simulated",
+                           {"kind": kind, "n_cores": 6, "seed": seed},
+                           frequencies=FREQS)
+
+
+def _fleet(n=4, retries=3):
+    return CampaignSpec("clu", devices=tuple(_device(f"u{i}", i)
+                                             for i in range(n)),
+                        measures=(FAST,), retries=retries)
+
+
+def _run_cluster(spec, store, *, fault_plan=None, nodes=3, **kw):
+    return CampaignRunner(spec, store, executor="cluster",
+                          max_workers=nodes, fault_plan=fault_plan,
+                          **kw).run()
+
+
+def _assert_store_bit_identical(ref, cand):
+    """The tentpole gate: whole-campaign content digest equality, plus
+    array-level table equality so a digest bug cannot mask a real
+    divergence."""
+    assert ref.campaign.content_digest() == cand.campaign.content_digest()
+    assert set(ref.outcomes) == set(cand.outcomes)
+    for key in ref.outcomes:
+        rt, ct = ref.campaign.load_table(key), cand.campaign.load_table(key)
+        assert set(rt.pairs) == set(ct.pairs)
+        for p, pr in rt.pairs.items():
+            assert np.array_equal(pr.latencies, ct.pairs[p].latencies)
+            assert np.array_equal(pr.outlier_mask, ct.pairs[p].outlier_mask)
+            assert pr.status == ct.pairs[p].status
+
+
+def test_clean_cluster_run_matches_serial(tmp_path):
+    spec = _fleet(4)
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    assert ref.ok
+    cand = _run_cluster(spec, ArtifactStore(str(tmp_path / "cluster")))
+    assert cand.ok, [(o.key, o.error) for o in cand.failed()]
+    _assert_store_bit_identical(ref, cand)
+    # a clean network and store: the chaos counters prove it
+    assert cand.stats.get("transport_msg_dropped", 0) == 0
+    assert cand.stats.get("store_injected_transient", 0) == 0
+
+
+def test_node_crash_requeues_unit_bit_identical(tmp_path):
+    """A node dying two pairs into a unit: the driver reaps it, requeues
+    the in-flight unit, a respawned node resumes from the uploaded pair
+    files, and the merged store matches the serial reference."""
+    spec = _fleet(4)
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    assert ref.ok
+
+    crash_key = spec.units()[0].key
+    cand = _run_cluster(
+        spec, ArtifactStore(str(tmp_path / "cluster")),
+        fault_plan=FaultPlan.make(
+            node_crash_after_pairs={crash_key: 2}))
+    assert cand.ok, [(o.key, o.error) for o in cand.failed()]
+    assert os.path.exists(
+        fault_marker_path(cand.campaign, crash_key, "node_crash"))
+    assert cand.stats["crashed_nodes"] >= 1
+    assert cand.stats["requeued_units"] >= 1
+    assert cand.stats.get("recovery_s", 0.0) > 0.0
+    assert cand.outcomes[crash_key].attempts >= 2
+    assert cand.outcomes[crash_key].attempts <= spec.retries
+    _assert_store_bit_identical(ref, cand)
+
+
+def test_single_node_crash_respawns_replacement(tmp_path):
+    """With no surviving capacity to absorb the requeue, the driver
+    spawns a replacement node; it resumes the crashed unit from the
+    store's uploaded pair files."""
+    spec = _fleet(2, retries=3)
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    assert ref.ok
+    crash_key = spec.units()[0].key
+    cand = _run_cluster(
+        spec, ArtifactStore(str(tmp_path / "cluster")), nodes=1,
+        fault_plan=FaultPlan.make(node_crash_after_pairs={crash_key: 2}))
+    assert cand.ok, [(o.key, o.error) for o in cand.failed()]
+    assert cand.stats["crashed_nodes"] >= 1
+    assert cand.stats["respawned_nodes"] >= 1
+    _assert_store_bit_identical(ref, cand)
+
+
+def test_transport_chaos_completes_bit_identical(tmp_path):
+    """Messages dropped, duplicated, and delayed on every link: dropped
+    dispatches/acks surface as heartbeat silence and are requeued;
+    duplicated completions are discarded first-result-wins; the store
+    still converges to the serial bytes."""
+    spec = _fleet(4)
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    assert ref.ok
+
+    cand = _run_cluster(
+        spec, ArtifactStore(str(tmp_path / "cluster")),
+        heartbeat_timeout_s=3.0,
+        fault_plan=FaultPlan.make(
+            transport={"drop_rate": 0.1, "dup_rate": 0.1,
+                       "delay_s": 0.02, "seed": 7}))
+    assert cand.ok, [(o.key, o.error) for o in cand.failed()]
+    chaos = sum(cand.stats.get(f"transport_{k}", 0)
+                for k in ("msg_dropped", "msg_duplicated", "msg_delayed",
+                          "rpc_dropped", "rpc_duplicated", "rpc_delayed"))
+    assert chaos > 0, "the chaos plan must actually have fired"
+    _assert_store_bit_identical(ref, cand)
+
+
+def test_transient_store_failures_and_partition_ridden_out(tmp_path):
+    """A store whose first writes for one unit fail, plus a healing
+    driver<->store partition window: both are absorbed by the retry
+    layer — no unit fails, no attempt is burned on a fault the backoff
+    can outlive."""
+    spec = _fleet(3)
+    ref = run_campaign(spec, ArtifactStore(str(tmp_path / "serial")))
+    assert ref.ok
+
+    key = spec.units()[0].key
+    cand = _run_cluster(
+        spec, ArtifactStore(str(tmp_path / "cluster")),
+        fault_plan=FaultPlan.make(store_transient={key: 3},
+                                  store_partition=(2, 4)))
+    assert cand.ok, [(o.key, o.error) for o in cand.failed()]
+    assert cand.stats["store_injected_transient"] == 3
+    assert cand.stats["driver_partitioned_ops"] >= 1
+    assert cand.stats["driver_retries"] >= 1
+    _assert_store_bit_identical(ref, cand)
+
+
+def test_permanent_store_failure_isolates_and_dead_letters(tmp_path):
+    """Writes for one unit fail on every attempt: that unit exhausts its
+    budget and lands in ``failed`` with the giving-up evidence in a
+    dead-letter file, while every other unit completes."""
+    spec = _fleet(4, retries=2)
+    key = spec.units()[0].key
+    # speculation off: a speculative clone of the doomed unit would add
+    # legitimate extra dispatches on top of the failure budget
+    cand = _run_cluster(
+        spec, ArtifactStore(str(tmp_path)), speculate=False,
+        fault_plan=FaultPlan.make(store_permanent=[key]))
+    assert not cand.ok
+    (failed,) = cand.failed()
+    assert failed.key == key
+    assert failed.attempts == spec.retries          # TOTAL budget
+    for o in cand.outcomes.values():
+        if o.key != key:
+            assert o.status == "done"
+    dl_dir = os.path.join(cand.campaign.dir, "deadletter")
+    letters = []
+    for name in os.listdir(dl_dir):
+        with open(os.path.join(dl_dir, name)) as f:
+            letters += [json.loads(line) for line in f if line.strip()]
+    assert any(key in doc["key"] for doc in letters)
+
+
+def test_cluster_resumes_from_store(tmp_path):
+    spec = _fleet(2)
+    store = ArtifactStore(str(tmp_path))
+    first = _run_cluster(spec, store, nodes=2)
+    assert first.ok
+    again = _run_cluster(spec, store, nodes=2)
+    assert again.ok
+    assert all(o.status == "loaded" for o in again.outcomes.values())
+
+
+def test_cluster_refuses_traced_and_batched_schedules(tmp_path):
+    spec = _fleet(1)
+    store = ArtifactStore(str(tmp_path))
+    with pytest.raises(ValueError, match="trace"):
+        CampaignRunner(spec, store, executor="cluster", trace=True)
+    with pytest.raises(ValueError, match="batched"):
+        CampaignRunner(spec, store, executor="cluster", engine="batched")
+
+
+def test_fault_plan_cluster_fields_roundtrip():
+    fp = FaultPlan.make(
+        node_crash_after_pairs={"a": 1},
+        transport={"drop_rate": 0.2, "seed": 3},
+        store_transient={"b": 2}, store_permanent=["c"],
+        store_partition=(5, 10))
+    assert not fp.empty
+    assert fp.node_crash_for("a") == 1 and fp.node_crash_for("b") is None
+    assert fp.transport_dict() == {"drop_rate": 0.2, "seed": 3}
+    assert fp.store_transient_for("b") == 2
+    assert fp.store_transient_for("a") == 0
+    assert fp.store_permanent_for("c") and not fp.store_permanent_for("a")
+    assert fp.partition_window() == (5, 10)
+    assert FaultPlan.make().partition_window() is None
+    assert FaultPlan().empty
+
+
+# ------------------------------------------------------------------ #
+# CLI exit codes: the CI contract of `campaign run`
+# ------------------------------------------------------------------ #
+def _write_spec(tmp_path, spec):
+    path = str(tmp_path / "spec.json")
+    with open(path, "w") as f:
+        json.dump(spec.to_dict(), f)
+    return path
+
+
+def test_cli_run_exits_nonzero_on_failed_unit(tmp_path, capsys):
+    from repro.campaign.cli import main
+    bad = DeviceSpec.make("bad", "simulated",
+                          {"kind": "no-such-gpu", "n_cores": 6, "seed": 0},
+                          frequencies=FREQS)
+    spec = CampaignSpec("cli-fail", devices=(bad, _device("ok", 1)),
+                        measures=(FAST,), retries=1)
+    spec_path = _write_spec(tmp_path, spec)
+    root = str(tmp_path / "store")
+
+    assert main(["--store", root, "run", spec_path, "--quiet"]) == 1
+    assert "FAILED bad@fast" in capsys.readouterr().err
+    # the escape hatch for exploratory sweeps that tolerate holes
+    assert main(["--store", root, "run", spec_path, "--quiet",
+                 "--ok-on-partial"]) == 0
+    assert "--ok-on-partial" in capsys.readouterr().err
+
+
+def test_cli_run_exits_2_on_unloadable_spec(tmp_path, capsys):
+    from repro.campaign.cli import main
+    missing = str(tmp_path / "nope.json")
+    assert main(["--store", str(tmp_path), "run", missing]) == 2
+    assert "cannot load spec" in capsys.readouterr().err
+    garbled = str(tmp_path / "garbled.json")
+    with open(garbled, "w") as f:
+        f.write("{not json")
+    assert main(["--store", str(tmp_path), "run", garbled]) == 2
+
+
+def test_cli_run_cluster_executor_end_to_end(tmp_path, capsys):
+    from repro.campaign.cli import main
+    spec = _fleet(2)
+    spec_path = _write_spec(tmp_path, spec)
+    root = str(tmp_path / "store")
+    assert main(["--store", root, "run", spec_path, "--quiet",
+                 "--executor", "cluster", "--nodes", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "[cluster x2]" in out and "ok:" in out

@@ -1,0 +1,283 @@
+"""Alert sinks and the monitor->scheduler requeue loop.
+
+Delivery: every shipped sink honors the AlertSink protocol, external
+sinks wear the retry/dead-letter policy wrapper (a down webhook never
+raises into the monitor), and ``monitor watch --sink`` pushes each
+stored alert exactly once instead of polling.  Closing the loop:
+``watch --requeue`` turns flagged drift alerts into a requeue manifest
+that ``campaign run --requeue-from-alerts`` consumes as fresh unit
+attempts — and pair-seeded determinism makes the re-measured table
+byte-identical to the invalidated one on an undrifted device.
+"""
+import json
+import os
+
+import pytest
+
+from repro.campaign import (ArtifactStore, CampaignSpec, DeviceSpec,
+                            MeasureSpec, run_campaign)
+from repro.campaign.cluster.retry import (DeadLetterFile, RetryPolicy,
+                                          TransportError)
+from repro.monitor.sinks import (FileSink, HttpSink, QueueSink,
+                                 RetryingSink, make_sink)
+
+FAST = MeasureSpec(key="fast", min_measurements=4, max_measurements=5,
+                   rse_check_every=4)
+FREQS = (210.0, 705.0, 1410.0)
+
+
+def _drift_doc(unit_key: str, flagged: bool = True) -> dict:
+    """A canonical drift document (the fields alert_summary and the
+    requeue filter read), hand-built so sink tests need no live fleet."""
+    return {
+        "kind": "drift", "campaign_id": "c", "unit_key": unit_key,
+        "device": unit_key.split("@", 1)[0],
+        "f_init": 210.0, "f_target": 1410.0, "sample_index": 9,
+        "t_stream": 1.5,
+        "scores": {"cusum": 8.0, "page_hinkley": 6.0},
+        "verdict": {"worst_baseline_s": 0.01, "worst_window_s": 0.04,
+                    "rel_delta": 3.0, "p_value": 0.001,
+                    "flagged": flagged},
+        "window": {"samples_s": [0.04], "clean_s": [0.04]},
+        "baseline": {"worst_s": 0.01, "mean_s": 0.008, "n_clean": 12},
+    }
+
+
+def test_queue_and_file_sinks_deliver_payloads(tmp_path):
+    q = QueueSink()
+    q.deliver("a1", "u0@fast", _drift_doc("u0@fast"))
+    assert q.items[0]["id"] == "a1"
+    assert q.items[0]["unit_key"] == "u0@fast"
+    assert q.items[0]["kind"] == "drift"
+
+    path = str(tmp_path / "nested" / "alerts.jsonl")
+    fs = FileSink(path)
+    fs.deliver("a1", "u0@fast", _drift_doc("u0@fast"))
+    fs.deliver("a2", "u1@fast", _drift_doc("u1@fast", flagged=False))
+    lines = [json.loads(line) for line in open(path)]
+    assert [d["id"] for d in lines] == ["a1", "a2"]
+
+
+def test_file_sink_unwritable_target_is_retryable(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("a file, not a directory")
+    sink = FileSink(str(blocker / "alerts.jsonl"))
+    with pytest.raises(TransportError):
+        sink.deliver("a1", "u0@fast", _drift_doc("u0@fast"))
+
+
+def test_http_sink_posts_json_and_maps_failures():
+    calls = []
+
+    def ok_post(url, body, timeout_s):
+        calls.append((url, json.loads(body)))
+        return 204
+
+    HttpSink("https://hooks.example/x", post=ok_post).deliver(
+        "a1", "u0@fast", _drift_doc("u0@fast"))
+    (url, payload), = calls
+    assert url == "https://hooks.example/x"
+    assert payload["id"] == "a1" and payload["kind"] == "drift"
+
+    with pytest.raises(TransportError, match="HTTP 503"):
+        HttpSink("https://h/x", post=lambda *a: 503).deliver(
+            "a1", "u", _drift_doc("u@fast"))
+
+    def down(url, body, timeout_s):
+        raise ConnectionError("refused")
+
+    with pytest.raises(TransportError, match="unreachable"):
+        HttpSink("https://h/x", post=down).deliver(
+            "a1", "u", _drift_doc("u@fast"))
+
+
+def test_retrying_sink_rides_out_flaps_and_never_raises(tmp_path):
+    statuses = iter([500, 500, 200])
+    flaky = HttpSink("https://h/x", post=lambda *a: next(statuses))
+    sink = RetryingSink(flaky, policy=RetryPolicy(max_attempts=4,
+                                                  base_s=0.001, cap_s=0.002))
+    sink.deliver("a1", "u0@fast", _drift_doc("u0@fast"))
+    assert sink.delivered == 1 and sink.dead == 0
+
+    dl = DeadLetterFile(str(tmp_path / "dead.jsonl"))
+    dead = RetryingSink(HttpSink("https://h/x", post=lambda *a: 503),
+                        policy=RetryPolicy(max_attempts=2, base_s=0.001,
+                                           cap_s=0.002),
+                        dead_letters=dl)
+    dead.deliver("a2", "u0@fast", _drift_doc("u0@fast"))   # must not raise
+    assert dead.dead == 1 and dead.delivered == 0
+    (doc,) = dl.records()
+    assert doc["key"] == "a2" and "503" in doc["error"]
+
+
+def test_make_sink_maps_spec_strings(tmp_path):
+    http = make_sink("https://hooks.example/x",
+                     dead_letter_path=str(tmp_path / "d.jsonl"))
+    assert isinstance(http, RetryingSink)
+    assert isinstance(http.sink, HttpSink)
+    assert http.dead_letters is not None
+    file = make_sink(str(tmp_path / "alerts.jsonl"))
+    assert isinstance(file.sink, FileSink)
+
+
+def test_monitor_service_pushes_alerts_through_its_sink(tmp_path):
+    """Every alert the service persists is also handed to the sink, with
+    the store's content-addressed id."""
+    from repro.monitor.ingest import DeviceStream
+    from repro.monitor.service import MonitorService, _DeviceState
+    spec = CampaignSpec("svc-sink", devices=(
+        DeviceSpec.make("d0", "simulated",
+                        {"kind": "a100", "n_cores": 6, "seed": 0},
+                        frequencies=FREQS),), measures=(FAST,))
+    result = run_campaign(spec, ArtifactStore(str(tmp_path)))
+    assert result.ok
+    sink = QueueSink()
+    service = MonitorService(result.campaign, sink=sink)
+    st = _DeviceState(DeviceStream("d0"), "d0@fast", None)
+    service._raise_alert(st, _drift_doc("d0@fast"))
+    (item,) = sink.items
+    assert item["kind"] == "drift" and item["unit_key"] == "d0@fast"
+    assert item["id"] in result.campaign.list_alerts()["d0@fast"]
+
+
+# ------------------------------------------------------------------ #
+# the CLI loop: watch --sink / --requeue -> run --requeue-from-alerts
+# ------------------------------------------------------------------ #
+@pytest.fixture()
+def alerted_campaign(tmp_path):
+    spec = CampaignSpec("loop", devices=tuple(
+        DeviceSpec.make(f"u{i}", "simulated",
+                        {"kind": "a100", "n_cores": 6, "seed": i},
+                        frequencies=FREQS) for i in range(2)),
+        measures=(FAST,))
+    store_root = str(tmp_path / "store")
+    result = run_campaign(spec, ArtifactStore(store_root))
+    assert result.ok
+    campaign = result.campaign
+    flagged = campaign.save_alert("u0@fast", _drift_doc("u0@fast"))
+    benign = campaign.save_alert("u1@fast",
+                                 _drift_doc("u1@fast", flagged=False))
+    return spec, store_root, campaign, flagged, benign
+
+
+def test_watch_sink_pushes_each_alert_once_then_exits(alerted_campaign,
+                                                      tmp_path, capsys):
+    from repro.monitor.cli import main
+    spec, root, campaign, flagged, benign = alerted_campaign
+    out_path = str(tmp_path / "pushed.jsonl")
+
+    rc = main(["--store", root, "watch", campaign.campaign_id,
+               "--sink", out_path])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "store polling skipped" in out
+    pushed = [json.loads(line) for line in open(out_path)]
+    assert {d["id"] for d in pushed} == {flagged, benign}
+    # delivery state rides with the campaign: a second watch is a no-op
+    assert main(["--store", root, "watch", campaign.campaign_id,
+                 "--sink", out_path]) == 0
+    assert "0 delivered" in capsys.readouterr().out
+    assert len([json.loads(line) for line in open(out_path)]) == 2
+    # ...until a NEW alert lands
+    campaign.save_alert("u1@fast", _drift_doc("u1@fast", flagged=True))
+    assert main(["--store", root, "watch", campaign.campaign_id,
+                 "--sink", out_path]) == 0
+    assert len([json.loads(line) for line in open(out_path)]) == 3
+
+
+def test_watch_sink_dead_letters_undeliverable_alerts(alerted_campaign,
+                                                      tmp_path, capsys):
+    from repro.monitor.cli import main
+    spec, root, campaign, *_ = alerted_campaign
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+
+    rc = main(["--store", root, "watch", campaign.campaign_id,
+               "--sink", str(blocker / "alerts.jsonl"),
+               "--sink-retries", "2"])
+    assert rc == 1
+    assert "2 dead-lettered" in capsys.readouterr().out
+    dl = DeadLetterFile(os.path.join(campaign.dir, "deadletter",
+                                     "sink.jsonl"))
+    assert len(dl) == 2
+
+
+def test_requeue_loop_remeasures_flagged_unit_bit_identical(
+        alerted_campaign, tmp_path, capsys):
+    """watch --requeue records only the FLAGGED drift's unit; run
+    --requeue-from-alerts resets and re-measures it; on an undrifted
+    device the fresh table is byte-identical (pair seeding), so the
+    campaign digest is unchanged."""
+    from repro.campaign.cli import main as campaign_main
+    from repro.monitor.cli import main as monitor_main
+    spec, root, campaign, flagged, benign = alerted_campaign
+    digest_before = campaign.content_digest()
+
+    rc = monitor_main(["--store", root, "watch", campaign.campaign_id,
+                       "--sink", str(tmp_path / "p.jsonl"), "--requeue"])
+    assert rc == 0
+    assert "1 unit(s) requeued" in capsys.readouterr().out
+    manifest = campaign.load_requeue()
+    assert set(manifest["units"]) == {"u0@fast"}
+    entry = manifest["units"]["u0@fast"]
+    assert entry["alert_ids"] == [flagged]
+    assert "drift" in entry["reason"]
+
+    spec_path = str(tmp_path / "spec.json")
+    spec.save(spec_path)
+    rc = campaign_main(["--store", root, "run", spec_path,
+                        "--requeue-from-alerts"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "reset for re-measurement" in out
+    assert campaign.load_requeue() == {"units": {}}     # consumed
+    states = campaign.unit_states()
+    assert states["u0@fast"]["status"] == "done"
+    assert states["u0@fast"]["attempts"] == 1           # a FRESH attempt
+    assert campaign.content_digest() == digest_before
+    # the evidence trail survives the reset
+    assert flagged in campaign.list_alerts()["u0@fast"]
+
+
+def test_save_requeue_merges_alert_ids(alerted_campaign):
+    _, _, campaign, *_ = alerted_campaign
+    campaign.save_requeue({"u0@fast": {"reason": "first",
+                                       "alert_ids": ["a1"]}})
+    campaign.save_requeue({"u0@fast": {"reason": "second",
+                                       "alert_ids": ["a2", "a1"]}})
+    entry = campaign.load_requeue()["units"]["u0@fast"]
+    assert entry["reason"] == "second"
+    assert entry["alert_ids"] == ["a1", "a2"]
+    campaign.clear_requeue()
+    assert campaign.load_requeue() == {"units": {}}
+
+
+def test_requeue_filter_takes_only_flagged_drift(alerted_campaign):
+    """The requeue predicate itself: flagged drift requeues; unflagged
+    drift and stale-device alerts leave the measurement alone."""
+    import argparse
+
+    from repro.monitor.alerts import stale_alert_doc
+    from repro.monitor.cli import _maybe_requeue
+    _, _, campaign, *_ = alerted_campaign
+    on = argparse.Namespace(requeue=True)
+    off = argparse.Namespace(requeue=False)
+    flagged = _drift_doc("u0@fast", flagged=True)
+    assert not _maybe_requeue(off, campaign, "a1", "u0@fast", flagged)
+    assert not _maybe_requeue(on, campaign, "a2", "u0@fast",
+                              _drift_doc("u0@fast", flagged=False))
+    stale = stale_alert_doc("u1", "u1@fast", 0.0, 60.0, 30.0, "c")
+    assert not _maybe_requeue(on, campaign, "a3", "u1@fast", stale)
+    assert campaign.load_requeue() == {"units": {}}
+    assert _maybe_requeue(on, campaign, "a4", "u0@fast", flagged)
+    assert set(campaign.load_requeue()["units"]) == {"u0@fast"}
+    campaign.clear_requeue()
+
+
+def test_watch_poll_mode_still_works(alerted_campaign, capsys):
+    from repro.monitor.cli import main
+    spec, root, campaign, *_ = alerted_campaign
+    rc = main(["--store", root, "watch", campaign.campaign_id,
+               "--rounds", "1", "--interval", "0.01"])
+    assert rc == 0
+    assert "existing alert(s)" in capsys.readouterr().out
