@@ -1,0 +1,244 @@
+"""Span-profiler overhead benchmark: spans-on vs spans-off campaigns.
+
+The ``repro.obs`` contract is that profiling must *observe* a campaign
+without perturbing it.  This benchmark runs the same simulated fleet
+through the cluster executor twice on a clean network — spans off, then
+spans on — plus a serial single-host reference, and hard-asserts:
+
+* **bit-identity**: every store (spans on, spans off, chaos) has the
+  same content digest as the serial reference — span files live outside
+  the digest by construction, and recording must not reorder or reseed
+  anything that lands in a measurement artifact;
+* **export validity**: the merged span rows export to Chrome
+  ``trace_event`` JSON that passes ``validate_trace_events`` (the same
+  document ui.perfetto.dev loads);
+* **profile coherence**: the critical-path analyzer names a dominant
+  cost and its segments tile the campaign root exactly.
+
+Recorded numbers (``BENCH_obs.json``):
+
+* **span overhead**: spans-on wall time relative to spans-off, as
+  ``overhead=X%`` in the derived string — CI's ``profile-smoke`` job
+  gates this under 5% (best of two: hosted runners are multi-tenant and
+  noise only ever inflates the observed overhead);
+* **profile analysis cost**: wall time of ``profile_campaign`` over the
+  recorded rows.
+
+``--inject-crash`` / ``--inject-partition`` add a fourth, chaos run
+(node kill + driver<->store partition, spans ON) whose store must still
+be bit-identical — proving the recorder survives requeue/speculation
+paths, not just clean runs.
+
+  PYTHONPATH=src python -m benchmarks.obs_overhead [--smoke]
+      [--nodes N] [--units N] [--inject-crash] [--inject-partition]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import time
+
+from benchmarks.cluster_dispatch import crash_unit_key, fleet_spec
+
+
+def _run(spec, root, *, executor="cluster", nodes=3, spans=False,
+         fault_plan=None, verbose=False):
+    from repro.campaign import ArtifactStore, CampaignRunner
+    shutil.rmtree(root, ignore_errors=True)
+    kw = {} if executor == "serial" else {"max_workers": nodes,
+                                          "heartbeat_timeout_s": 30.0}
+    t0 = time.perf_counter()
+    result = CampaignRunner(spec, ArtifactStore(root), executor=executor,
+                            fault_plan=fault_plan, spans=spans, **kw).run(
+        verbose=verbose)
+    wall = time.perf_counter() - t0
+    if not result.ok:
+        raise AssertionError(
+            f"{executor} campaign (spans={spans}) failed: "
+            f"{[(o.key, o.error) for o in result.failed()]}")
+    return result, wall
+
+
+def run_obs_bench(*, n_units: int, n_cores: int, max_measurements: int,
+                  nodes: int, inject_crash: bool, inject_partition: bool,
+                  store_root: str, verbose: bool = False):
+    """Returns (rows, metrics).  Raises AssertionError on any broken
+    invariant — bit-identity, export schema, or profile coherence."""
+    from repro.campaign.workqueue import FaultPlan, fault_marker_path
+    from repro.obs import (to_trace_events, validate_trace_events,
+                           write_trace_events)
+    from repro.obs.profile import collect_span_rows, profile_campaign
+
+    spec = fleet_spec(n_units, n_cores=n_cores,
+                      max_measurements=max_measurements)
+    root = lambda name: os.path.join(store_root, name)        # noqa: E731
+
+    ref, t_serial = _run(spec, root("serial"), executor="serial",
+                         verbose=verbose)
+    digest = ref.campaign.content_digest()
+
+    # untimed warmup: the first cluster run pays one-time costs (backend
+    # compile caches, thread pools) that would bias the off-vs-on delta
+    _run(spec, root("warmup"), nodes=nodes, verbose=verbose)
+
+    off, t_off = _run(spec, root("spans-off"), nodes=nodes, verbose=verbose)
+    if off.campaign.content_digest() != digest:
+        raise AssertionError("spans-off cluster store diverged from serial")
+    if off.campaign.list_span_files():
+        raise AssertionError("spans-off run recorded span files")
+
+    on, t_on = _run(spec, root("spans-on"), nodes=nodes, spans=True,
+                    verbose=verbose)
+    if on.campaign.content_digest() != digest:
+        raise AssertionError(
+            "BIT-IDENTITY BROKEN: spans-on store diverged from serial — "
+            "the recorder perturbed a measurement artifact")
+    span_files = on.campaign.list_span_files()
+    if not any(os.path.basename(p) == "driver.jsonl" for p in span_files):
+        raise AssertionError(f"no driver span file in {span_files}")
+
+    rows_on = collect_span_rows(on.campaign)
+    trace_path = os.path.join(store_root, "spans.trace.json")
+    write_trace_events(trace_path, rows_on)      # raises on schema errors
+    with open(trace_path) as f:
+        errors = validate_trace_events(json.load(f))
+    if errors:
+        raise AssertionError(f"Perfetto export invalid: {errors}")
+
+    t0 = time.perf_counter()
+    doc = profile_campaign(on.campaign)
+    t_profile = time.perf_counter() - t0
+    if doc.get("empty") or doc.get("dominant") is None:
+        raise AssertionError(f"profile found no dominant cost: {doc}")
+    crit = doc["critical_path"]["total_s"]
+    wall = doc["root"]["wall_s"]
+    if abs(crit - wall) > 1e-6 * max(1.0, wall):
+        raise AssertionError(
+            f"critical path ({crit:.6f}s) does not tile the campaign "
+            f"root ({wall:.6f}s)")
+
+    overhead_pct = (t_on - t_off) / t_off * 100.0 if t_off > 0 else 0.0
+    rows = [
+        ("obs_serial_ref", t_serial * 1e6,
+         f"units={n_units} wall_s={t_serial:.2f}"),
+        ("obs_cluster_baseline", t_off * 1e6,
+         f"nodes={nodes} wall_s={t_off:.2f} spans=off"),
+        ("obs_spans_on", t_on * 1e6,
+         f"nodes={nodes} wall_s={t_on:.2f} overhead={overhead_pct:.2f}% "
+         f"span_rows={len(rows_on)} actors={len(doc['actors'])} "
+         f"bit_identical=True"),
+        ("obs_profile_analyze", t_profile * 1e6,
+         f"spans={doc['spans']} events={doc['events']} "
+         f"dominant_cat={doc['dominant']['cat']} "
+         f"dominant_frac={doc['dominant']['frac']:.2f}"),
+    ]
+
+    chaos = "+".join(n for n, flag in (("crash", inject_crash),
+                                       ("partition", inject_partition))
+                     if flag)
+    if chaos:
+        faults = {}
+        if inject_crash:
+            faults["node_crash_after_pairs"] = {crash_unit_key(spec): 2}
+        if inject_partition:
+            faults["store_partition"] = (2, 4)
+        plan = FaultPlan.make(**faults)
+        cand, t_chaos = _run(spec, root("chaos"), nodes=nodes, spans=True,
+                             fault_plan=plan, verbose=verbose)
+        if cand.campaign.content_digest() != digest:
+            raise AssertionError(
+                "chaos spans-on store diverged from serial — recording "
+                "broke the recovery path's bit-identity")
+        if inject_crash:
+            marker = fault_marker_path(cand.campaign, crash_unit_key(spec),
+                                       "node_crash")
+            if not os.path.exists(marker):
+                raise AssertionError("injected node crash never fired")
+        chaos_rows = collect_span_rows(cand.campaign)
+        if not chaos_rows:
+            raise AssertionError("chaos run recorded no span rows")
+        errors = validate_trace_events(to_trace_events(chaos_rows))
+        if errors:
+            raise AssertionError(f"chaos Perfetto export invalid: {errors}")
+        chaos_doc = profile_campaign(cand.campaign)
+        rows.append(
+            ("obs_chaos_spans", t_chaos * 1e6,
+             f"chaos={chaos} wall_s={t_chaos:.2f} bit_identical=True "
+             f"span_rows={len(chaos_rows)} "
+             f"requeues={chaos_doc['event_counts'].get('sched.requeue', 0)}"
+             ))
+
+    metrics = {"t_serial": t_serial, "t_off": t_off, "t_on": t_on,
+               "overhead_pct": overhead_pct, "t_profile": t_profile,
+               "digest": digest, "span_rows": len(rows_on)}
+    return rows, metrics
+
+
+def bench_obs():
+    """benchmarks.run entry point -> BENCH_obs.json."""
+    from repro.core.paths import results_dir
+    # nodes are threads, so 3 of them work on any host — and give the
+    # merged span tree real multi-actor coverage (driver + 3 node files)
+    rows, metrics = run_obs_bench(
+        n_units=6, n_cores=8, max_measurements=8,
+        nodes=3, inject_crash=True,
+        inject_partition=False, store_root=results_dir("obs-overhead"))
+    # loose sanity ceiling only: the strict <5% bar is CI's best-of-two
+    # gate (profile-smoke); a blown ceiling here means recording landed
+    # on a measurement hot path, not scheduler noise
+    assert metrics["overhead_pct"] < 25.0, (
+        f"span overhead {metrics['overhead_pct']:.1f}% is far over "
+        "budget — recording is perturbing the campaign")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fleet (4 small units)")
+    ap.add_argument("--nodes", type=int,
+                    default=min(3, os.cpu_count() or 1))
+    ap.add_argument("--units", type=int, default=None,
+                    help="fleet size (default: 4 smoke / 6 full)")
+    ap.add_argument("--inject-crash", action="store_true",
+                    help="also run a node-kill chaos campaign with spans "
+                         "on; its store must stay bit-identical")
+    ap.add_argument("--inject-partition", action="store_true",
+                    help="partition the driver from the store for a "
+                         "window of ops during the chaos run")
+    ap.add_argument("--store-root", default=None,
+                    help="scratch store root (default: "
+                         "$REPRO_RESULTS_DIR/obs-overhead)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.core.paths import results_dir
+    n_units = args.units or (4 if args.smoke else 6)
+    shape = (dict(n_cores=6, max_measurements=6) if args.smoke
+             else dict(n_cores=8, max_measurements=8))
+    rows, metrics = run_obs_bench(
+        n_units=n_units, nodes=args.nodes,
+        inject_crash=args.inject_crash,
+        inject_partition=args.inject_partition,
+        store_root=args.store_root or results_dir("obs-overhead"),
+        verbose=args.verbose, **shape)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    from benchmarks.run import _emit_json
+    _emit_json(results_dir("bench"), "obs", rows,
+               sum(us for _, us, _ in rows) / 1e6)
+    print(f"ok: bit-identical everywhere, span overhead "
+          f"{metrics['overhead_pct']:.2f}%, {metrics['span_rows']} span "
+          f"rows, Perfetto export valid; BENCH_obs.json written",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

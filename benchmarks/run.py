@@ -53,6 +53,7 @@ def main() -> None:
                                          bench_ssd_kernel,
                                          bench_xla_attention_paths)
     from benchmarks.monitor_ingest import bench_monitor
+    from benchmarks.obs_overhead import bench_obs
     from benchmarks.paper_tables import (bench_dbscan_adaptive,
                                          bench_fig3_heatmaps,
                                          bench_fig4_asymmetry,
@@ -72,6 +73,7 @@ def main() -> None:
         bench_campaign,              # process-parallel fleet scaling
         bench_cluster,               # multi-node dispatch under chaos
         bench_trace,                 # telemetry recorder overhead (<5% bar)
+        bench_obs,                   # span profiler overhead (<5% bar)
         bench_monitor,               # fleet monitor ingest + detection delay
         bench_phase1_two_sigma,      # §V-A
         bench_dbscan_adaptive,       # Alg. 3

@@ -62,19 +62,32 @@ def comparison_markdown(campaign: Campaign) -> str:
     return "\n".join(lines)
 
 
-def asymmetry_markdown(campaign: Campaign) -> str:
-    """Fig. 4 analogue per unit: increase- vs decrease-transition means."""
-    lines = ["| device unit | up mean (ms) | down mean (ms) | up/down |",
-             "|---|---:|---:|---:|"]
+def asymmetry_rows(campaign: Campaign) -> list[dict]:
+    """Fig. 4 analogue per unit, as flat rows (None = no data)."""
+    rows = []
     for key, table in sorted(campaign.tables().items()):
         a = table.asymmetry()
         up, dn = a.get("increase", {}), a.get("decrease", {})
         if not up or not dn:
-            lines.append(f"| {key} | – | – | – |")
+            rows.append({"unit": key, "up_mean_ms": None,
+                         "down_mean_ms": None, "ratio": None})
             continue
-        ratio = up["mean_ms"] / max(dn["mean_ms"], 1e-9)
-        lines.append(f"| {key} | {up['mean_ms']:.1f} | {dn['mean_ms']:.1f} "
-                     f"| {ratio:.2f} |")
+        rows.append({"unit": key, "up_mean_ms": up["mean_ms"],
+                     "down_mean_ms": dn["mean_ms"],
+                     "ratio": up["mean_ms"] / max(dn["mean_ms"], 1e-9)})
+    return rows
+
+
+def asymmetry_markdown(campaign: Campaign) -> str:
+    """Fig. 4 analogue per unit: increase- vs decrease-transition means."""
+    lines = ["| device unit | up mean (ms) | down mean (ms) | up/down |",
+             "|---|---:|---:|---:|"]
+    for r in asymmetry_rows(campaign):
+        if r["ratio"] is None:
+            lines.append(f"| {r['unit']} | – | – | – |")
+            continue
+        lines.append(f"| {r['unit']} | {r['up_mean_ms']:.1f} "
+                     f"| {r['down_mean_ms']:.1f} | {r['ratio']:.2f} |")
     return "\n".join(lines)
 
 
@@ -87,6 +100,23 @@ def merged_pair_distribution(campaign: Campaign, unit_key: str,
     if pr is None:
         return np.empty(0)
     return pr.clean
+
+
+def report_dict(campaign: Campaign) -> dict:
+    """The full campaign report as one JSON-ready document — the
+    machine-readable twin of :func:`report_markdown` (``campaign report
+    --json``), mirroring the ``diff --json`` precedent."""
+    states = campaign.unit_states()
+    return {
+        "campaign_id": campaign.campaign_id,
+        "name": campaign.spec.name,
+        "units_total": len(states),
+        "units_done": sum(1 for st in states.values()
+                          if st.get("status") == "done"),
+        "units": {key: states[key] for key in sorted(states)},
+        "comparison": comparison_rows(campaign),
+        "asymmetry": asymmetry_rows(campaign),
+    }
 
 
 def report_markdown(campaign: Campaign) -> str:

@@ -1,11 +1,16 @@
 """`python -m repro.campaign` — the fleet-measurement command surface.
 
-    run    SPEC.json   expand + measure (resumes: same spec -> same id)
-    ls                 list campaigns in the store
-    report CID         cross-device markdown report (Table II analogue)
-    diff   CID_A CID_B flag pairs whose clean latency distribution drifted
-                       (exit code 1 when any pair is flagged -> CI gate;
-                       --json for the machine-readable CampaignDiff)
+    run     SPEC.json   expand + measure (resumes: same spec -> same id);
+                        --spans records the orchestration span profile
+    ls                  list campaigns in the store (--json for scripts)
+    report  CID         cross-device markdown report (Table II analogue;
+                        --json for the machine-readable document)
+    diff    CID_A CID_B flag pairs whose clean latency distribution drifted
+                        (exit code 1 when any pair is flagged -> CI gate;
+                        --json for the machine-readable CampaignDiff)
+    profile CID         span-profiler cost breakdown: merged timeline,
+                        critical path, dominant cost, dead-letter links
+                        (--perfetto exports a Chrome trace_event JSON)
 
 The store root defaults to ``$REPRO_RESULTS_DIR/campaigns`` (or
 ``results/campaigns``); every command takes ``--store`` to override.
@@ -13,9 +18,10 @@ The store root defaults to ``$REPRO_RESULTS_DIR/campaigns`` (or
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
-from repro.campaign.aggregate import report_markdown
+from repro.campaign.aggregate import report_dict, report_markdown
 from repro.campaign.regression import DiffConfig, diff_campaigns, diff_markdown
 from repro.campaign.scheduler import CampaignRunner
 from repro.campaign.spec import CampaignSpec
@@ -45,7 +51,8 @@ def cmd_run(args) -> int:
                                 engine=args.engine, trace=args.trace,
                                 heartbeat_timeout_s=args.heartbeat_timeout,
                                 speculate=not args.no_speculate,
-                                requeue_from_alerts=args.requeue_from_alerts)
+                                requeue_from_alerts=args.requeue_from_alerts,
+                                spans=args.spans)
     except ValueError as exc:           # e.g. processes + batched
         print(f"error: {exc}", file=sys.stderr)
         return 2
@@ -80,24 +87,65 @@ def cmd_ls(args) -> int:
         print(cid)
         return 0
     rows = store.list_campaigns()
-    if not rows:
+    if not rows and not args.json:
         print(f"no campaigns under {store.root}")
         return 0
+    docs = []
     for r in rows:
         campaign = store.load(r["campaign_id"])
-        n_traces = sum(len(v) for v in campaign.list_traces().values())
-        n_alerts = sum(len(v) for v in campaign.list_alerts().values())
-        extra = (f"  {n_traces} trace(s)" if n_traces else "") + \
-                (f"  {n_alerts} ALERT(S)" if n_alerts else "")
-        print(f"{r['campaign_id']}  {r['units_done']}/{r['units_total']} "
-              f"units  {r['name']}{extra}")
+        docs.append({**r,
+                     "traces": sum(len(v) for v in
+                                   campaign.list_traces().values()),
+                     "alerts": sum(len(v) for v in
+                                   campaign.list_alerts().values()),
+                     "span_files": len(campaign.list_span_files())})
+    if args.json:
+        _emit(json.dumps(docs, indent=1, sort_keys=True), args.out)
+        return 0
+    for d in docs:
+        extra = (f"  {d['traces']} trace(s)" if d["traces"] else "") + \
+                (f"  {d['alerts']} ALERT(S)" if d["alerts"] else "") + \
+                (f"  {d['span_files']} span file(s)"
+                 if d["span_files"] else "")
+        print(f"{d['campaign_id']}  {d['units_done']}/{d['units_total']} "
+              f"units  {d['name']}{extra}")
     return 0
 
 
 def cmd_report(args) -> int:
     campaign = _store(args).load(args.campaign)
-    _emit(report_markdown(campaign), args.out)
+    if args.json:
+        _emit(json.dumps(report_dict(campaign), indent=1, sort_keys=True),
+              args.out)
+    else:
+        _emit(report_markdown(campaign), args.out)
     return 0
+
+
+def cmd_profile(args) -> int:
+    """Exit codes: 0 profile rendered; 1 the campaign recorded no spans
+    (run it with ``--spans`` first)."""
+    from repro.obs import export_to_registry, write_trace_events
+    from repro.obs.profile import (collect_span_rows, profile_campaign,
+                                   profile_markdown)
+    campaign = _store(args).load(args.campaign)
+    doc = profile_campaign(campaign)
+    rows = None
+    if args.perfetto:
+        rows = collect_span_rows(campaign)
+        if rows:
+            write_trace_events(args.perfetto, rows)
+            print(f"wrote {args.perfetto} (load in ui.perfetto.dev)",
+                  file=sys.stderr)
+    if args.metrics_out:
+        rows = collect_span_rows(campaign) if rows is None else rows
+        export_to_registry(rows).write_snapshot(args.metrics_out)
+        print(f"wrote {args.metrics_out}", file=sys.stderr)
+    if args.json:
+        _emit(json.dumps(doc, indent=1, sort_keys=True), args.out)
+    else:
+        _emit(profile_markdown(doc), args.out)
+    return 1 if doc.get("empty") else 0
 
 
 def cmd_diff(args) -> int:
@@ -161,6 +209,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--trace", action="store_true",
                    help="record each unit's telemetry (repro.trace) and "
                         "store it as a campaign artifact")
+    p.add_argument("--spans", action="store_true",
+                   help="record the orchestration span profile "
+                        "(repro.obs): per-actor timelines under "
+                        "<campaign>/spans/, rendered by `campaign "
+                        "profile`; never perturbs measurement artifacts")
     p.add_argument("--ok-on-partial", action="store_true",
                    help="exit 0 even when units failed (default: any "
                         "failed unit exits 1 so CI cannot green-light a "
@@ -176,12 +229,35 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--latest", action="store_true",
                    help="print only the newest campaign id (exit 1 on an "
                         "empty store) — the script/CI-friendly form")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable listing (one document per "
+                        "campaign) instead of the table")
+    p.add_argument("--out", default=None, help="write to file")
     p.set_defaults(fn=cmd_ls)
 
     p = sub.add_parser("report", help="cross-device markdown report")
     p.add_argument("campaign", help="campaign id (or unique prefix)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable report document instead of "
+                        "markdown")
     p.add_argument("--out", default=None, help="write to file")
     p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("profile",
+                       help="span-profiler cost breakdown (record with "
+                            "`run --spans`; exit 1 when no spans exist)")
+    p.add_argument("campaign", help="campaign id (or unique prefix)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable profile document instead of "
+                        "markdown")
+    p.add_argument("--perfetto", default=None, metavar="PATH",
+                   help="also export the merged timeline as Chrome "
+                        "trace_event JSON (load in ui.perfetto.dev)")
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="also export span-derived counters/gauges as a "
+                        "MetricsRegistry JSON snapshot")
+    p.add_argument("--out", default=None, help="write to file")
+    p.set_defaults(fn=cmd_profile)
 
     p = sub.add_parser("diff",
                        help="flag drifted pairs between two campaigns "

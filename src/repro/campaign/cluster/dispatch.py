@@ -63,8 +63,11 @@ class _NodeHandle:
         self.outbox = outbox        # node -> driver (acks + heartbeats)
         self.inflight: str | None = None
 
-    def send_unit(self, key: str) -> None:
-        self.inbox.send(("unit", key))
+    def send_unit(self, key: str, ctx: str | None = None) -> None:
+        # ctx is the driver's attempt-span id: the node opens its
+        # unit.exec span under it so per-process span files stitch into
+        # one driver->node tree
+        self.inbox.send(("unit", key, ctx))
 
     @property
     def alive(self) -> bool:
@@ -116,6 +119,7 @@ class ClusterCampaignScheduler:
         self.verbose = verbose
         self.trace = False          # protocol parity with the process
                                     # scheduler; cluster runs refuse trace
+        self.spans = False          # span profiling (set by CampaignRunner)
         self.stats = {"crashed_nodes": 0, "hung_nodes": 0,
                       "respawned_nodes": 0, "deferred_marks": 0}
 
@@ -166,7 +170,7 @@ class ClusterCampaignScheduler:
                 print(f"  node {nid} {reason}"
                       + (f" while running [{key}]" if key else ""))
             if key is not None:
-                core.worker_lost(key, f"node {reason}")
+                core.worker_lost(key, f"node {reason}", worker=h)
 
         def drain() -> int:
             n = 0
@@ -181,7 +185,8 @@ class ClusterCampaignScheduler:
                                          wall, n_pairs)
                     elif kind == "failed":
                         _, _, key, error = msg
-                        core.release(self._nodes.get(nid), key)
+                        core.release(self._nodes.get(nid), key,
+                                     status="failed")
                         core.record_failure(key, error)
                     # "ready"/"start"/"beat" only feed the monitor
             if n == 0 and self.poll_s:
@@ -226,6 +231,7 @@ class ClusterCampaignScheduler:
                 core.finalize_exhausted()
         finally:
             self._shutdown()
+            core.obs_close()
         self._flush_marks()
         # fold the data plane's evidence into the campaign stats
         for k, v in self.server.stats.items():
@@ -274,7 +280,7 @@ class ClusterCampaignScheduler:
         node = NodeWorker(
             nid, self.spec, store, self.scratch_root, inbox, outbox,
             campaign_id=self.campaign.campaign_id,
-            fault_plan=self.fault_plan,
+            fault_plan=self.fault_plan, spans=self.spans,
             claim_fault=lambda key, kind: _trip_once(self.campaign, key,
                                                      kind))
         node.start()

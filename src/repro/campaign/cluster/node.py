@@ -35,6 +35,7 @@ import os
 import threading
 import time
 
+from repro import obs
 from repro.campaign.cluster.remote_store import blob_digest, file_digest
 from repro.campaign.cluster.retry import RetriesExhausted
 from repro.campaign.cluster.transport import POISON
@@ -49,10 +50,12 @@ class _NodeCrash(Exception):
 
 def _syncable(relpath: str) -> bool:
     """Artifact files that cross the transport.  Traces stay host-local
-    (cluster runs are untraced), fault markers and dead letters are
+    (cluster runs are untraced), span files sync through their own
+    dedicated path (:meth:`NodeWorker._sync_spans`, suppressed so the
+    upload does not trace itself), fault markers and dead letters are
     harness bookkeeping, never payload."""
     parts = relpath.split("/")
-    if "traces" in parts or "deadletter" in parts:
+    if "traces" in parts or "deadletter" in parts or "spans" in parts:
         return False
     name = parts[-1]
     return not name.endswith(".injected")
@@ -66,13 +69,16 @@ class NodeWorker:
 
     def __init__(self, node_id: str, spec, store, scratch_root: str,
                  inbox, outbox, *, campaign_id: str,
-                 fault_plan=None, claim_fault=None, poll_s: float = 0.01):
+                 fault_plan=None, claim_fault=None, poll_s: float = 0.01,
+                 spans: bool = False):
         from repro.campaign.workqueue import FaultPlan
         self.node_id = node_id
         self.spec = spec
         self.store = store                  # LocalStore | RemoteStoreClient
         self.inbox = inbox
         self.outbox = outbox
+        self.spans = bool(spans)
+        self._rec = None                    # node-thread SpanRecorder
         self.plan = fault_plan or FaultPlan()
         # fault claims are once-per-unit ACROSS attempts and nodes, so
         # they live driver-side; the dispatcher injects the claimer
@@ -104,6 +110,23 @@ class NodeWorker:
 
     # ---------------- main loop ---------------- #
     def _main(self) -> None:
+        if self.spans:
+            # nodes are threads of the driver process: a thread-local
+            # recorder shadows the driver's so node spans carry their own
+            # actor id and land on the node's scratch disk first
+            actor = f"node-{self.node_id}"
+            self._rec = obs.SpanRecorder(actor,
+                                         path=self.local.span_path(actor))
+            obs.install(self._rec, thread_only=True)
+        try:
+            self._main_loop()
+        finally:
+            self._sync_spans()
+            if self._rec is not None:
+                self._rec.close()
+                obs.uninstall(thread_only=True)
+
+    def _main_loop(self) -> None:
         self.outbox.send(("ready", self.node_id))
         while not self._stop.is_set():
             msgs = self.inbox.recv_ready()
@@ -113,9 +136,10 @@ class NodeWorker:
             for msg in msgs:
                 if msg == POISON:
                     return
-                _, key = msg                # ("unit", unit_key)
+                _, key, *rest = msg      # ("unit", key[, trace_ctx])
+                ctx = rest[0] if rest else None
                 try:
-                    self._run_unit(key)
+                    self._run_unit(key, ctx)
                 except _NodeCrash:
                     return                  # silent death — the driver's
                                             # liveness check finds the body
@@ -123,9 +147,16 @@ class NodeWorker:
                     self.outbox.send(
                         ("failed", self.node_id, key,
                          f"{type(exc).__name__}: {exc}"))
+                finally:
+                    self._sync_spans()      # incremental, best-effort
 
     # ---------------- one unit ---------------- #
-    def _run_unit(self, key: str) -> None:
+    def _run_unit(self, key: str, ctx: str | None = None) -> None:
+        with obs.span("unit.exec", "exec", parent=ctx or obs.AMBIENT,
+                      unit=key, node=self.node_id):
+            self._run_unit_inner(key)
+
+    def _run_unit_inner(self, key: str) -> None:
         self.outbox.send(("start", self.node_id, key))
         t0 = time.perf_counter()
         synced = self._download(key)
@@ -221,3 +252,26 @@ class NodeWorker:
                     self.sync_failures += 1
                     continue                # the final sync will retry
                 synced[rel] = digest
+
+    def _sync_spans(self) -> None:
+        """Best-effort upload of this node's span file to the store's
+        ``spans/`` dir — under :func:`repro.obs.suppressed` so the
+        (instrumented) store client does not trace its own flushes.
+        Profiling must never fail a unit, so exhausted retries are
+        swallowed; the content-addressed store makes re-uploads dedups."""
+        if self._rec is None:
+            return
+        self._rec.flush()
+        path = self._rec.path
+        if not path or not os.path.isfile(path):
+            return
+        with open(path, "rb") as f:
+            data = f.read()
+        if not data:
+            return
+        with obs.suppressed():
+            try:
+                self.store.put_file(f"spans/{self._rec.actor}.jsonl",
+                                    data, blob_digest(data))
+            except RetriesExhausted:
+                self.sync_failures += 1

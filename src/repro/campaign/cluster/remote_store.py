@@ -37,6 +37,7 @@ import os
 import threading
 from collections import Counter
 
+from repro import obs
 from repro.campaign.cluster.retry import (DeadLetterFile, RetryPolicy,
                                           StoreWriteError, call_with_retry)
 from repro.core.paths import atomic_replace
@@ -232,11 +233,22 @@ class RemoteStoreClient:
 
     def _call(self, op: str, op_key: str, fn, *args):
         kw = {} if self.sleep is None else {"sleep": self.sleep}
-        out = call_with_retry(
-            lambda: self._attempt(fn, *args), self.policy, op=op,
-            op_key=op_key, dead_letters=self.dead_letters,
-            on_retry=lambda *_: self.stats.__setitem__(
-                "retries", self.stats["retries"] + 1), **kw)
+        with obs.span(op, "store", op=op, key=op_key,
+                      client=self.link_id) as live:
+
+            def on_retry(attempt, exc):
+                self.stats["retries"] += 1
+                if live is not None:
+                    live.attrs["attempts"] = attempt + 2
+                    obs.event("store.retry", "store", op=op, key=op_key,
+                              attempt=attempt + 1,
+                              error=type(exc).__name__,
+                              client=self.link_id)
+
+            out = call_with_retry(
+                lambda: self._attempt(fn, *args), self.policy, op=op,
+                op_key=op_key, dead_letters=self.dead_letters,
+                on_retry=on_retry, **kw)
         self.stats["ops"] += 1
         return out
 

@@ -131,9 +131,14 @@ class DeadLetterFile:
         self.clock = clock
         self._lock = threading.Lock()
 
-    def record(self, op: str, key: str, attempts: int, error: str) -> dict:
+    def record(self, op: str, key: str, attempts: int, error: str,
+               **extra) -> dict:
+        """``extra`` fields (e.g. the active span id and elapsed time the
+        retry loop burned) merge into the record so ``campaign profile``
+        can cross-reference dead letters against the span timeline."""
         doc = {"op": op, "key": key, "attempts": int(attempts),
-               "error": str(error), "t": float(self.clock())}
+               "error": str(error), "t": float(self.clock()),
+               **{k: v for k, v in extra.items() if v is not None}}
         line = json.dumps(doc, sort_keys=True)
         with self._lock:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
@@ -158,6 +163,9 @@ def call_with_retry(fn, policy: RetryPolicy, *, op: str = "op",
     backoff, anything else propagates immediately.  After the budget is
     spent the failure is dead-lettered (when a file is attached) and
     :class:`RetriesExhausted` raised."""
+    from repro import obs
+    span_ctx = obs.ctx()            # active span at entry (None when off)
+    t0 = time.perf_counter()
     last: Exception | None = None
     for attempt in range(policy.max_attempts):
         try:
@@ -172,5 +180,7 @@ def call_with_retry(fn, policy: RetryPolicy, *, op: str = "op",
                     sleep(wait)
     assert last is not None
     if dead_letters is not None:
-        dead_letters.record(op, op_key, policy.max_attempts, repr(last))
+        dead_letters.record(op, op_key, policy.max_attempts, repr(last),
+                            span=span_ctx,
+                            elapsed_s=time.perf_counter() - t0)
     raise RetriesExhausted(op, policy.max_attempts, last)

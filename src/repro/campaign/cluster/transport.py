@@ -36,6 +36,7 @@ import time
 from collections import Counter
 from typing import Protocol
 
+from repro import obs
 from repro.campaign.cluster.retry import TransportTimeout
 
 POISON = ("__poison__",)        # raw shutdown sentinel (never chaos-mangled)
@@ -110,6 +111,11 @@ class Channel:
 
     def send(self, msg) -> None:
         dropped, dup, delay = self._chaos.roll()
+        if obs.enabled():
+            obs.event("msg.send", "msg", link=self.link_id,
+                      kind=(msg[0] if isinstance(msg, tuple) and msg
+                            else str(msg)),
+                      dropped=dropped, dup=dup, delay_s=delay)
         if dropped:
             self.counters["msg_dropped"] += 1
             return
@@ -134,6 +140,8 @@ class Channel:
         with self._lock:
             out = [m for t, m in self._inflight if t <= now]
             self._inflight = [(t, m) for t, m in self._inflight if t > now]
+        if out and obs.enabled():
+            obs.event("msg.recv", "msg", link=self.link_id, n=len(out))
         return out
 
 

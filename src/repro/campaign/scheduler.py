@@ -43,6 +43,7 @@ import dataclasses
 import time
 import traceback
 
+from repro import obs
 from repro.campaign.spec import CampaignSpec, UnitSpec
 from repro.campaign.store import (UNIT_DONE, UNIT_FAILED, UNIT_RUNNING,
                                   ArtifactStore, Campaign)
@@ -103,7 +104,8 @@ class CampaignRunner:
                  heartbeat_timeout_s: float = 60.0,
                  straggler_ratio: float = 3.0, speculate: bool = True,
                  fault_plan=None, retry_policy=None,
-                 requeue_from_alerts: bool = False):
+                 requeue_from_alerts: bool = False,
+                 spans: bool = False):
         if engine == "batched" and executor in ("processes", "cluster"):
             raise ValueError(
                 f"executor={executor!r} farms whole units out to workers, "
@@ -137,9 +139,30 @@ class CampaignRunner:
         # consume the monitor's requeue manifest: listed units are reset
         # (session/table/result dropped) and re-measured as fresh attempts
         self.requeue_from_alerts = requeue_from_alerts
+        # span profiler (repro.obs): off by default; when on, the driver
+        # records to <campaign>/spans/driver.jsonl and every worker
+        # process / node thread records its own file alongside.  Span
+        # files live outside the campaign's content digest, so profiled
+        # and unprofiled runs stay store bit-identical.
+        self.spans = spans
 
     def run(self, verbose: bool = False) -> CampaignResult:
         campaign = self.store.open(self.spec)
+        rec = None
+        if self.spans:
+            rec = obs.install(obs.SpanRecorder(
+                "driver", path=campaign.span_path("driver")))
+        try:
+            with obs.span("campaign.run", "campaign",
+                          campaign_id=campaign.campaign_id,
+                          executor=self.executor, engine=self.engine):
+                return self._run(campaign, verbose)
+        finally:
+            if rec is not None:
+                rec.close()
+                obs.uninstall()
+
+    def _run(self, campaign: Campaign, verbose: bool) -> CampaignResult:
         if self.requeue_from_alerts:
             requested = campaign.load_requeue().get("units", {})
             known = {u.key for u in self.spec.units()}
@@ -178,6 +201,7 @@ class CampaignRunner:
                 speculate=self.speculate, fault_plan=self.fault_plan,
                 verbose=verbose)
             sched.trace = self.trace
+            sched.spans = self.spans
             outcomes.update(sched.run(todo))
             stats = sched.stats
         elif self.executor == "cluster":
@@ -191,11 +215,18 @@ class CampaignRunner:
                 straggler_ratio=self.straggler_ratio,
                 speculate=self.speculate, fault_plan=self.fault_plan,
                 verbose=verbose, **kw)
+            sched.spans = self.spans
             outcomes.update(sched.run(todo))
             stats = sched.stats
         else:
+            # capture the driver's root span: thread-pool units open
+            # their attempt spans on other threads, whose ambient stacks
+            # are empty — the explicit parent stitches them under it
+            parent = obs.ctx()
+
             def one(unit: UnitSpec, worker: int) -> UnitOutcome:
-                return self._run_unit(campaign, unit, verbose)
+                return self._run_unit(campaign, unit, verbose,
+                                      obs_parent=parent)
 
             pool = get_executor(self.executor, self.max_workers)
             for outcome in pool.map_pairs(one, todo):
@@ -205,7 +236,8 @@ class CampaignRunner:
 
     # -------------------------------------------------------------- #
     def _run_unit(self, campaign: Campaign, unit: UnitSpec,
-                  verbose: bool) -> UnitOutcome:
+                  verbose: bool, obs_parent: str | None = None
+                  ) -> UnitOutcome:
         error = None
         attempts = 0
         # ground truth accumulated across attempts: a failed attempt may
@@ -227,31 +259,42 @@ class CampaignRunner:
             # trace= only when enabled: build_session keeps its untraced
             # call shape (and monkeypatched doubles) untouched otherwise
             kw = {} if recorder is None else {"trace": recorder}
-            try:
-                session = unit.build_session(
-                    out_dir=campaign.session_dir(unit.key),
-                    engine=self.engine, **kw)
-                table = session.run(verbose=False)
-                wall = time.perf_counter() - t0
-                gt_acc.update(_ground_truth(session))
-                campaign.save_unit_result(unit.key, table, gt_acc)
-                if recorder is not None:
-                    campaign.save_trace(unit.key, recorder)
-                campaign.mark_unit(unit.key, status=UNIT_DONE,
-                                   wall_s=wall, n_pairs=len(table.pairs),
-                                   error=None)
-                if verbose:
-                    print(f"  [{unit.key}] done: {len(table.pairs)} pairs "
-                          f"in {wall:.1f}s (attempt {attempt})")
-                return UnitOutcome(unit.key, "done", attempt, wall,
-                                   table=table, session=session)
-            except Exception as exc:  # noqa: BLE001 — unit isolation
-                if session is not None:
+            with obs.span("unit.attempt", "unit",
+                          parent=obs_parent or obs.AMBIENT,
+                          unit=unit.key, attempt=attempt) as live:
+                try:
+                    session = unit.build_session(
+                        out_dir=campaign.session_dir(unit.key),
+                        engine=self.engine, **kw)
+                    table = session.run(verbose=False)
+                    wall = time.perf_counter() - t0
                     gt_acc.update(_ground_truth(session))
-                error = f"{type(exc).__name__}: {exc}"
-                if verbose:
-                    print(f"  [{unit.key}] attempt {attempt} failed: {error}")
-                    traceback.print_exc()
+                    campaign.save_unit_result(unit.key, table, gt_acc)
+                    if recorder is not None:
+                        campaign.save_trace(unit.key, recorder)
+                    campaign.mark_unit(unit.key, status=UNIT_DONE,
+                                       wall_s=wall,
+                                       n_pairs=len(table.pairs),
+                                       error=None)
+                    if verbose:
+                        print(f"  [{unit.key}] done: "
+                              f"{len(table.pairs)} pairs "
+                              f"in {wall:.1f}s (attempt {attempt})")
+                    if live is not None:
+                        live.attrs["status"] = "done"
+                    return UnitOutcome(unit.key, "done", attempt, wall,
+                                       table=table, session=session)
+                except Exception as exc:  # noqa: BLE001 — unit isolation
+                    if session is not None:
+                        gt_acc.update(_ground_truth(session))
+                    error = f"{type(exc).__name__}: {exc}"
+                    if live is not None:
+                        live.attrs["status"] = "failed"
+                        live.attrs["error"] = type(exc).__name__
+                    if verbose:
+                        print(f"  [{unit.key}] attempt {attempt} failed: "
+                              f"{error}")
+                        traceback.print_exc()
         campaign.mark_unit(unit.key, status=UNIT_FAILED, error=error)
         return UnitOutcome(unit.key, "failed", attempts, error=error)
 

@@ -303,6 +303,28 @@ class Campaign:
             os.remove(self._requeue_path())
 
     # -------------------------------------------------------------- #
+    # orchestration spans (repro.obs): per-actor JSONL files, excluded
+    # from the content digest by construction (digests cover only
+    # result.json's pair index + table CSVs)
+    # -------------------------------------------------------------- #
+    def spans_dir(self) -> str:
+        return os.path.join(self.dir, "spans")
+
+    def span_path(self, actor: str) -> str:
+        return os.path.join(self.spans_dir(), f"{actor}.jsonl")
+
+    def list_span_files(self) -> list[str]:
+        """Sorted paths of every recorded span file for this campaign."""
+        d = self.spans_dir()
+        if not os.path.isdir(d):
+            return []
+        return [os.path.join(d, n) for n in sorted(os.listdir(d))
+                if n.endswith(".jsonl")]
+
+    def deadletter_dir(self) -> str:
+        return os.path.join(self.dir, "deadletter")
+
+    # -------------------------------------------------------------- #
     # telemetry traces (repro.trace): measurement artifacts that outlive
     # the run — replayable offline through the `trace-replay` backend
     # -------------------------------------------------------------- #

@@ -52,6 +52,7 @@ import queue as queue_mod
 import time
 from collections import deque
 
+from repro import obs
 from repro.campaign.spec import CampaignSpec, UnitSpec
 from repro.campaign.store import (UNIT_DONE, UNIT_FAILED, UNIT_RUNNING,
                                   Campaign)
@@ -86,6 +87,17 @@ class FaultPlan:
       Drift requires the traced shared-device path (``trace=True``):
       pair-scoped schedules rebuild a fresh device per pair, so a
       mid-unit model mutation would never be observed;
+    * ``drift_ramp_pairs``: like ``drift_after_pairs`` but the shift
+      ramps in *slowly* — the scale factor interpolates 1 -> ``scale``
+      over the model's next ``ramp_samples`` latency draws instead of
+      stepping.  Values are ``(n_pairs, scale, ramp_samples)``.  Tuned
+      ramps stay inside CUSUM's per-sample allowance, so this is the
+      Page-Hinkley detector's target shape;
+    * ``drift_direction``: restrict any injected drift (step or ramp)
+      to one transition direction — ``"up"`` shifts only
+      ``f_target > f_init`` transitions, ``"down"`` only downward ones,
+      ``""`` (default) both.  Models the asymmetric per-direction
+      latency behavior of Fig. 4;
     * ``node_crash_after_pairs``: cluster only — the whole simulated
       *node* dies (its thread exits without a word) after N measured
       pairs of that unit, taking its local scratch with it.
@@ -119,6 +131,9 @@ class FaultPlan:
     stall_s: tuple = ()                 # sorted ((unit_key, seconds), ...)
     slow_pairs_s: tuple = ()            # sorted ((unit_key, seconds), ...)
     drift_after_pairs: tuple = ()       # sorted ((unit_key, spec_tuple), ...)
+    drift_ramp_pairs: tuple = ()        # sorted ((unit_key, (n, scale,
+                                        #   ramp_samples)), ...)
+    drift_direction: str = ""           # "" | "up" | "down"
     node_crash_after_pairs: tuple = ()  # sorted ((unit_key, n), ...)
     transport: tuple = ()               # sorted ((name, value), ...)
     store_transient: tuple = ()         # sorted ((unit_key, n), ...)
@@ -130,17 +145,26 @@ class FaultPlan:
              stall_s: dict | None = None,
              slow_pairs_s: dict | None = None,
              drift_after_pairs: dict | None = None,
+             drift_ramp_pairs: dict | None = None,
+             drift_direction: str = "",
              node_crash_after_pairs: dict | None = None,
              transport: dict | None = None,
              store_transient: dict | None = None,
              store_permanent=(),
              store_partition: tuple | None = None) -> "FaultPlan":
+        if drift_direction not in ("", "up", "down"):
+            raise ValueError(
+                f"drift_direction must be '', 'up' or 'down', "
+                f"not {drift_direction!r}")
         return FaultPlan(
             tuple(sorted((crash_after_pairs or {}).items())),
             tuple(sorted((stall_s or {}).items())),
             tuple(sorted((slow_pairs_s or {}).items())),
             tuple(sorted((k, tuple(v))
                          for k, v in (drift_after_pairs or {}).items())),
+            tuple(sorted((k, tuple(v))
+                         for k, v in (drift_ramp_pairs or {}).items())),
+            drift_direction,
             tuple(sorted((node_crash_after_pairs or {}).items())),
             tuple(sorted((transport or {}).items())),
             tuple(sorted((store_transient or {}).items())),
@@ -164,6 +188,14 @@ class FaultPlan:
         n, scale, *pair = spec
         fi, ft = pair if pair else (None, None)
         return int(n), float(scale), fi, ft
+
+    def drift_ramp_for(self, unit_key: str):
+        """``(n_pairs, scale, ramp_samples)`` or None."""
+        spec = dict(self.drift_ramp_pairs).get(unit_key)
+        if spec is None:
+            return None
+        n, scale, ramp = spec
+        return int(n), float(scale), int(ramp)
 
     def node_crash_for(self, unit_key: str):
         return dict(self.node_crash_after_pairs).get(unit_key)
@@ -190,6 +222,7 @@ class FaultPlan:
     def empty(self) -> bool:
         return not (self.crash_after_pairs or self.stall_s
                     or self.slow_pairs_s or self.drift_after_pairs
+                    or self.drift_ramp_pairs
                     or self.node_crash_after_pairs or self.transport
                     or self.store_transient or self.store_permanent
                     or self.store_partition)
@@ -264,11 +297,15 @@ class _BeatingSerial(SerialExecutor):
         return out
 
 
-def activate_drift(session, scale: float, f_init=None, f_target=None) -> None:
+def activate_drift(session, scale: float, f_init=None, f_target=None, *,
+                   ramp_samples: int = 0, direction: str = "") -> None:
     """Wrap the session's live device model in a
     :class:`~repro.dvfs.transition_models.ShiftedTransitionModel` — every
-    transition sampled from here on is drifted.  Only meaningful on the
-    shared-device path (``trace=...`` forces it); idempotent."""
+    transition sampled from here on is drifted.  ``ramp_samples`` makes
+    the shift creep in over that many draws (slow-ramp injection);
+    ``direction`` restricts it to up- or down-transitions.  Only
+    meaningful on the shared-device path (``trace=...`` forces it);
+    idempotent."""
     from repro.dvfs.transition_models import ShiftedTransitionModel
     dev = session.device
     dev = getattr(dev, "device", dev)         # unwrap TracedBackend
@@ -276,7 +313,9 @@ def activate_drift(session, scale: float, f_init=None, f_target=None) -> None:
         return
     only_pair = (None if f_init is None
                  else (float(f_init), float(f_target)))
-    dev.model = ShiftedTransitionModel(dev.model, scale, only_pair)
+    dev.model = ShiftedTransitionModel(dev.model, scale, only_pair,
+                                       ramp_samples=ramp_samples,
+                                       direction=direction)
 
 
 # ------------------------------------------------------------------ #
@@ -329,6 +368,51 @@ class DispatchCore:
         self.outcomes: dict = {}
         self.copies = {k: 0 for k in self.unit_keys}     # in-flight count
         self._lost_at: dict[str, float] = {}             # worker-loss stamp
+        # open profiler spans per (worker identity, unit key): an attempt
+        # span begins at dispatch and ends when the attempt's worker
+        # releases the unit (done / failed / lost) — non-lexical because
+        # the attempt outlives any one scheduler-loop iteration
+        self._obs_spans: dict[tuple[int, str], object] = {}
+
+    # ---------------- span-profiler hooks ---------------- #
+    def _obs_begin(self, worker, key: str, speculative: bool) -> str | None:
+        rec = obs.current()
+        if rec is None:
+            return None
+        live = rec.begin("unit.attempt", "unit", unit=key,
+                         attempt=self.attempts[key],
+                         speculative=speculative, queue=len(self.pending))
+        self._obs_spans[(id(worker), key)] = live
+        return live.sid
+
+    def _obs_end(self, worker, key: str, status: str) -> None:
+        live = self._obs_spans.pop((id(worker), key), None)
+        if live is None:
+            return
+        rec = obs.current()
+        if rec is not None:
+            rec.end(live, status=status)
+
+    def _obs_elapsed(self, key: str) -> float | None:
+        """Elapsed seconds of the unit's current attempt (straggler
+        stamp), for requeue/speculation event records."""
+        try:
+            return float(self.sp.elapsed(key))
+        except Exception:  # noqa: BLE001 — profiling must never raise
+            return None
+
+    def obs_close(self, status: str = "abandoned") -> None:
+        """End every still-open attempt span at scheduler shutdown.
+        Speculation losers are the common case: first-result-wins
+        resolves the unit, the loop exits, and the loser's ack never
+        drains — without this the loser's attempt (often the straggler
+        the profile exists to explain) would vanish from the timeline
+        and its node subtree would detach from the tree."""
+        rec = obs.current()
+        if rec is not None:
+            for live in self._obs_spans.values():
+                rec.end(live, status=status)
+        self._obs_spans.clear()
 
     # ---------------- queries ---------------- #
     def resolved(self, key: str) -> bool:
@@ -368,22 +452,27 @@ class DispatchCore:
                                 # original's start stamp
         if speculative:
             self.stats["speculative_dispatches"] += 1
+            obs.event("sched.speculate", "sched", unit=key,
+                      attempt=self.attempts[key],
+                      elapsed_s=self._obs_elapsed(key))
         else:
             self.mark_unit(key, status=UNIT_RUNNING,
                            attempts=self.attempts[key])
-        worker.send_unit(key)
+        ctx = self._obs_begin(worker, key, speculative)
+        worker.send_unit(key, ctx)
         if self.verbose:
             tag = " (speculative)" if speculative else ""
             print(f"  [{key}] dispatched{tag}")
 
-    def release(self, worker, key: str) -> None:
+    def release(self, worker, key: str, status: str = "released") -> None:
         if worker is not None and worker.inflight == key:
             worker.inflight = None
         self.copies[key] = max(0, self.copies[key] - 1)
+        self._obs_end(worker, key, status)
 
     def finish_done(self, worker, key: str, wall: float,
                     n_pairs: int) -> None:
-        self.release(worker, key)
+        self.release(worker, key, status="done")
         if self.resolved(key):          # a duplicate lost the race; its
             self.stats["discarded_duplicates"] += 1   # artifacts are
             return                      # identical bytes, nothing to undo
@@ -414,6 +503,7 @@ class DispatchCore:
         """One attempt burned; requeue within budget, else finalize."""
         if self.resolved(key):
             return
+        elapsed = self._obs_elapsed(key)
         # drop the in-flight stamp: the failed attempt's wall time says
         # nothing about the unit's cost, and a requeued dispatch must
         # not inherit it (sp.start is a setdefault) — a stale stamp
@@ -429,15 +519,23 @@ class DispatchCore:
         else:
             self.stats["requeued_units"] += 1
             self.pending.appendleft(key)
+            obs.event("sched.requeue", "sched", unit=key, reason=error,
+                      failures=self.failures[key], elapsed_s=elapsed,
+                      queue=len(self.pending))
             if self.verbose:
                 print(f"  [{key}] requeued after: {error}")
 
-    def worker_lost(self, key: str, reason: str) -> None:
+    def worker_lost(self, key: str, reason: str, worker=None) -> None:
         """The worker carrying ``key`` died or hung: burn the attempt and
         requeue within budget.  (The caller already removed the worker
-        itself; the core only accounts for the unit.)"""
+        itself; the core only accounts for the unit.  ``worker`` is the
+        reaped handle when the caller still holds it, so the attempt's
+        profiler span can be closed.)"""
         self.copies[key] = max(0, self.copies[key] - 1)
         self._lost_at.setdefault(key, self.clock())
+        self._obs_end(worker, key, status="lost")
+        obs.event("sched.worker_lost", "sched", unit=key, reason=reason,
+                  elapsed_s=self._obs_elapsed(key))
         self.record_failure(key, reason)
 
     def finalize_exhausted(self) -> None:
@@ -455,8 +553,12 @@ class DispatchCore:
 # ------------------------------------------------------------------ #
 def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
                  campaign_id: str, task_q, result_q, fault_plan: FaultPlan,
-                 trace: bool) -> None:
+                 trace: bool, span_path: str | None = None) -> None:
     """Long-lived worker loop: pull a unit key, measure it, persist, ack.
+
+    Tasks (driver -> worker) are ``(unit_key, obs_ctx)`` — the driver's
+    active attempt-span id rides along so this worker's spans stitch
+    under it — or the poison sentinel.
 
     Messages (worker -> driver):
       ("ready",  wid)
@@ -468,11 +570,17 @@ def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
     spec = CampaignSpec.from_dict(spec_doc)
     units = {u.key: u for u in spec.units()}
     campaign = Campaign(store_root, spec, campaign_id=campaign_id)
+    if span_path is not None:
+        obs.install(obs.SpanRecorder(f"worker{worker_id}", path=span_path))
     result_q.put(("ready", worker_id))
     while True:
-        unit_key = task_q.get()
-        if unit_key is _POISON:
+        msg = task_q.get()
+        if msg is _POISON:
+            rec = obs.current()
+            if rec is not None:
+                rec.close()
             return
+        unit_key, obs_ctx = msg
         unit = units[unit_key]
         result_q.put(("start", worker_id, unit_key))
         t0 = time.perf_counter()
@@ -486,19 +594,22 @@ def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
                 slow = None                 # only the first attempt drags
             crash_after = fault_plan.crash_for(unit_key)
             drift = fault_plan.drift_for(unit_key)
-            if drift is not None and not trace:
+            ramp = fault_plan.drift_ramp_for(unit_key)
+            if (drift is not None or ramp is not None) and not trace:
                 raise ValueError(
                     "FaultPlan drift injection needs the traced "
                     "shared-device path (trace=True): pair-scoped "
                     "schedules rebuild a fresh device per pair, so a "
                     "mid-unit model shift would never be observed")
+            drift_after = (drift[0] if drift is not None
+                           else ramp[0] if ramp is not None else None)
             executor = _BeatingSerial(
                 lambda: result_q.put(("beat", worker_id)),
                 crash_after=crash_after,
                 on_crash=(lambda: _trip_once(campaign, unit_key, "crash"))
                 if crash_after is not None else None,
                 sleep_between_s=slow,
-                drift_after=drift[0] if drift is not None else None)
+                drift_after=drift_after)
             recorder = None
             kw = {}
             if trace:
@@ -510,24 +621,40 @@ def _worker_main(worker_id: int, spec_doc: dict, store_root: str,
             session = unit.build_session(
                 out_dir=campaign.session_dir(unit_key), executor=executor,
                 **kw)
-            if drift is not None:
-                _, scale, dr_fi, dr_ft = drift
+            if drift_after is not None:
 
                 def _drift() -> None:
                     # marker = CI evidence the injection fired; activation
                     # itself is idempotent, so re-running is harmless
                     _trip_once(campaign, unit_key, "drift")
-                    activate_drift(session, scale, dr_fi, dr_ft)
+                    if drift is not None:
+                        activate_drift(session, drift[1], drift[2],
+                                       drift[3],
+                                       direction=fault_plan.drift_direction)
+                    else:
+                        activate_drift(session, ramp[1],
+                                       ramp_samples=ramp[2],
+                                       direction=fault_plan.drift_direction)
                 executor.on_drift = _drift
-            table = session.run(verbose=False)
-            gt = (session.ground_truth()
-                  if hasattr(session, "ground_truth") else {})
-            campaign.save_unit_result(unit_key, table, gt)
-            if recorder is not None:
-                campaign.save_trace(unit_key, recorder)
+            with obs.span("unit.exec", "exec",
+                          parent=obs_ctx or obs.AMBIENT,
+                          unit=unit_key, worker=worker_id):
+                table = session.run(verbose=False)
+                gt = (session.ground_truth()
+                      if hasattr(session, "ground_truth") else {})
+                campaign.save_unit_result(unit_key, table, gt)
+                if recorder is not None:
+                    campaign.save_trace(unit_key, recorder)
+            rec = obs.current()
+            if rec is not None:
+                rec.flush()     # crash-tolerant: each finished unit's
+                                # spans are on disk before the next starts
             result_q.put(("done", worker_id, unit_key,
                           time.perf_counter() - t0, len(table.pairs)))
         except Exception as exc:  # noqa: BLE001 — unit isolation boundary
+            rec = obs.current()
+            if rec is not None:
+                rec.flush()
             result_q.put(("failed", worker_id, unit_key,
                           f"{type(exc).__name__}: {exc}"))
 
@@ -544,9 +671,10 @@ class _Worker:
                                     # never the survivors' message path
     inflight: str | None = None     # unit key currently assigned
 
-    def send_unit(self, key: str) -> None:
-        """DispatchCore's worker protocol: hand over one unit."""
-        self.task_q.put(key)
+    def send_unit(self, key: str, ctx: str | None = None) -> None:
+        """DispatchCore's worker protocol: hand over one unit (plus the
+        dispatcher's span context, so worker spans stitch under it)."""
+        self.task_q.put((key, ctx))
 
 
 class ProcessCampaignScheduler:
@@ -577,6 +705,9 @@ class ProcessCampaignScheduler:
         self.clock = clock
         self.verbose = verbose
         self.trace = False
+        self.spans = False              # span profiling (set by the runner,
+                                        # like .trace): workers record to
+                                        # <campaign>/spans/worker<N>.jsonl
         # recovery evidence, surfaced on CampaignResult.stats (the core
         # adds its shared requeue/speculation/dedup counters on run)
         self.stats = {"crashed_workers": 0, "hung_workers": 0,
@@ -622,8 +753,8 @@ class ProcessCampaignScheduler:
                 print(f"  worker {wid} {reason}"
                       + (f" while running [{key}]" if key else ""))
             if key is not None:
-                core.worker_lost(key, f"worker {reason}")    # abandons the
-                                                             # straggler stamp
+                core.worker_lost(key, f"worker {reason}",    # abandons the
+                                 worker=w)                   # straggler stamp
 
         def drain() -> int:
             """Pull every queued message from every worker's own result
@@ -647,7 +778,8 @@ class ProcessCampaignScheduler:
                                          wall, n_pairs)
                     elif kind == "failed":
                         _, _, key, error = msg
-                        core.release(self._workers.get(wid), key)
+                        core.release(self._workers.get(wid), key,
+                                     status="failed")
                         core.record_failure(key, error)
                     # "ready"/"start"/"beat" only feed the monitor
             if n == 0 and self.poll_s:
@@ -702,6 +834,7 @@ class ProcessCampaignScheduler:
                 core.finalize_exhausted()
         finally:
             self._shutdown()
+            core.obs_close()
         return core.ordered_outcomes()
 
     # -------------------------------------------------------------- #
@@ -711,11 +844,13 @@ class ProcessCampaignScheduler:
         task_q = self._ctx.Queue()
         result_q = self._ctx.Queue()
         store_root = os.path.dirname(self.campaign.dir)
+        span_path = (self.campaign.span_path(f"worker{wid}")
+                     if self.spans else None)
         proc = self._ctx.Process(
             target=_worker_main,
             args=(wid, self.spec.to_dict(), store_root,
                   self.campaign.campaign_id, task_q, result_q,
-                  self.fault_plan, self.trace),
+                  self.fault_plan, self.trace, span_path),
             daemon=True)
         proc.start()
         self._workers[wid] = _Worker(proc=proc, task_q=task_q,

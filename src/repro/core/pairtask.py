@@ -59,14 +59,20 @@ class PairTask:
     cal: Calibration
     spec: WorkloadSpec
     measure: MeasureConfig
+    # propagated span-profiler trace context (repro.obs): the session's
+    # active span id, so pair spans recorded by thread/process workers
+    # stitch under the session that dispatched them.  Never feeds seeds or
+    # fingerprints — profiling must not perturb measurement bits.
+    obs_ctx: str | None = None
 
     @staticmethod
     def make(backend: str, options: dict, cal: Calibration,
-             spec: WorkloadSpec, measure: MeasureConfig) -> "PairTask":
+             spec: WorkloadSpec, measure: MeasureConfig,
+             obs_ctx: str | None = None) -> "PairTask":
         opts = dict(options or {})
         base_seed = int(opts.pop("seed", 0))
         return PairTask(backend, tuple(sorted(opts.items())), base_seed,
-                        cal, spec, measure)
+                        cal, spec, measure, obs_ctx)
 
 
 def run_pair_task(task: PairTask, pair, worker: int = 0
@@ -77,11 +83,14 @@ def run_pair_task(task: PairTask, pair, worker: int = 0
     simulator's true-latency log for this device (empty on hardware).
     Module-level on purpose: ``functools.partial(run_pair_task, task)`` is
     what sessions hand to executors, and it pickles by reference."""
+    from repro import obs
     from repro.backends import create_backend
     f_init, f_target = pair
-    device = create_backend(
-        task.backend, **dict(task.options),
-        seed=pair_seed(task.base_seed, f_init, f_target))
-    pm = measure_pair(device, f_init, f_target, task.cal, task.spec,
-                      task.measure)
-    return pm, extract_ground_truth(device)
+    with obs.span("pair", "pair", parent=task.obs_ctx or obs.AMBIENT,
+                  f_init=f_init, f_target=f_target, worker=worker):
+        device = create_backend(
+            task.backend, **dict(task.options),
+            seed=pair_seed(task.base_seed, f_init, f_target))
+        pm = measure_pair(device, f_init, f_target, task.cal, task.spec,
+                          task.measure)
+        return pm, extract_ground_truth(device)

@@ -34,6 +34,7 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.core.calibration import Calibration, calibrate, valid_pairs
 from repro.core.evaluation import (MeasureConfig, PairMeasurement,
                                    measure_pair)
@@ -210,9 +211,11 @@ class MeasurementSession:
             return self.cal
         lc = self.cfg.latest
         spec0 = self._sizing_spec()
-        self.cal = calibrate(self.device, self.frequencies, spec0)
-        worst = probe_latency(self.device, self.frequencies, spec0,
-                              self.cal, lc.measure)
+        with obs.span("session.calibrate", "cal", device=self.device_name,
+                      n_freqs=len(self.frequencies)):
+            self.cal = calibrate(self.device, self.frequencies, spec0)
+            worst = probe_latency(self.device, self.frequencies, spec0,
+                                  self.cal, lc.measure)
         self.spec = size_workload(probe_latency_s=worst,
                                   iter_time_s=lc.base_iter_s,
                                   delay_iters=lc.delay_iters,
@@ -240,6 +243,14 @@ class MeasurementSession:
             return False
 
     def run(self, pair_subset=None, verbose: bool = False) -> LatencyTable:
+        """Measure (or resume) every valid pair; see ``_run``.  The span
+        wrapper makes each session one ``exec``-category profiler span, so
+        stragglers show up as self-time on the unit that ran long."""
+        with obs.span("session.run", "exec", device=self.device_name,
+                      engine=self.engine):
+            return self._run(pair_subset, verbose)
+
+    def _run(self, pair_subset=None, verbose: bool = False) -> LatencyTable:
         self.calibrate()
         pairs = valid_pairs(self.cal)
         if pair_subset is not None:
@@ -279,7 +290,8 @@ class MeasurementSession:
             # pools) can schedule it
             task = PairTask.make(self._backend, self._backend_options,
                                  self.cal, self.spec,
-                                 self.cfg.latest.measure)
+                                 self.cfg.latest.measure,
+                                 obs_ctx=obs.ctx())
             fn = functools.partial(run_pair_task, task)
         else:
             if getattr(executor, "requires_picklable_fn", False):
@@ -290,11 +302,17 @@ class MeasurementSession:
                     "boundaries — use backend=... or a serial/thread "
                     "executor")
             self._ensure_workers(executor.n_workers)
+            session_ctx = obs.ctx()  # thread-pool workers lose the
+            # ambient parent stack, so pair spans carry it explicitly
 
             def fn(pair, worker):
-                pm = measure_pair(self._devices[worker], pair[0], pair[1],
-                                  self.cal, self.spec,
-                                  self.cfg.latest.measure)
+                with obs.span("pair", "pair",
+                              parent=session_ctx or obs.AMBIENT,
+                              f_init=pair[0], f_target=pair[1],
+                              worker=worker):
+                    pm = measure_pair(self._devices[worker], pair[0],
+                                      pair[1], self.cal, self.spec,
+                                      self.cfg.latest.measure)
                 return pm, {}
 
         analysed: dict[tuple[float, float], object] = {}
@@ -324,7 +342,8 @@ class MeasurementSession:
             # batched engine consumes the same picklable spec the
             # executors do, with the same completion callback
             from repro.core.batched_sweep import run_batched_sweep
-            run_batched_sweep(task, todo, on_result=on_result)
+            with obs.span("engine.batched", "exec", pairs=len(todo)):
+                run_batched_sweep(task, todo, on_result=on_result)
         else:
             map_pairs_with_callback(executor, fn, todo, on_result)
         table = LatencyTable(self.device_name, self.device_index,

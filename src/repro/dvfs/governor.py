@@ -22,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.dvfs.planner import Region
 from repro.dvfs.power_model import PowerModel
 
@@ -75,9 +76,17 @@ class Governor:
         f_cur = self._f_cur if self._f_cur is not None else max(self.freqs)
         tgt, reason = self.pick_target(region, f_cur)
         audit = getattr(device, "record_plan", None)
+        audit_id = None
         if audit is not None:
-            audit(f_from=f_cur, f_to=tgt, reason=reason,
-                  region_kind=region.kind, duration_s=region.duration_s)
+            audit_id = audit(f_from=f_cur, f_to=tgt, reason=reason,
+                             region_kind=region.kind,
+                             duration_s=region.duration_s)
+        if obs.enabled():
+            # span-profiler hook, linked to the telemetry trace's plan
+            # audit stream by the event index record_plan returned
+            obs.event("gov.plan", "gov", f_from=f_cur, f_to=tgt,
+                      reason=reason, region_kind=region.kind,
+                      audit=audit_id)
         if device is not None and tgt != self._f_cur:
             device.set_frequency(tgt)
         self._f_cur = tgt

@@ -130,6 +130,17 @@ class ShiftedTransitionModel:
     transition latencies by ``scale`` — for every pair, or (with
     ``only_pair``) for exactly one ``(f_init, f_target)`` transition.
 
+    Two extra drift *shapes* widen what detectors must catch:
+
+    * ``ramp_samples > 0``: instead of stepping to ``scale`` at once, the
+      factor interpolates linearly from 1 to ``scale`` over the next
+      ``ramp_samples`` affected draws — a slow creep whose per-sample
+      increment can stay below a CUSUM allowance while Page-Hinkley's
+      self-centering statistic still accumulates it;
+    * ``direction``: ``"up"`` shifts only frequency increases
+      (``f_to > f_from``), ``"down"`` only decreases — the per-direction
+      asymmetry of paper Fig. 4, drifting on one side of the matrix.
+
     Installing this on a live device's ``model`` mid-stream simulates a
     unit whose switching behavior departs its campaign baseline (aging
     silicon, firmware regression, a swapped board): the ground-truth
@@ -139,17 +150,38 @@ class ShiftedTransitionModel:
     fleet monitor's CI smoke is the consumer."""
 
     def __init__(self, inner, scale: float,
-                 only_pair: tuple[float, float] | None = None):
+                 only_pair: tuple[float, float] | None = None, *,
+                 ramp_samples: int = 0, direction: str = ""):
+        if direction not in ("", "up", "down"):
+            raise ValueError(
+                f"direction must be '', 'up' or 'down', not {direction!r}")
         self.inner = inner
         self.scale = float(scale)
         self.only_pair = (None if only_pair is None else
                           (float(only_pair[0]), float(only_pair[1])))
+        self.ramp_samples = int(ramp_samples)
+        self.direction = direction
+        self._drawn = 0              # affected sample_latency draws so far
 
-    def _factor(self, f_from: float, f_to: float) -> float:
+    def _applies(self, f_from: float, f_to: float) -> bool:
         if self.only_pair is not None and \
                 (float(f_from), float(f_to)) != self.only_pair:
+            return False
+        if self.direction == "up" and not f_to > f_from:
+            return False
+        if self.direction == "down" and not f_to < f_from:
+            return False
+        return True
+
+    def _factor(self, f_from: float, f_to: float) -> float:
+        if not self._applies(f_from, f_to):
             return 1.0
-        return self.scale
+        if self.ramp_samples <= 0:
+            return self.scale
+        # linear creep toward scale across the ramp window; base_latency
+        # queries (no draw) see the current factor without advancing it
+        frac = min(1.0, self._drawn / self.ramp_samples)
+        return 1.0 + (self.scale - 1.0) * frac
 
     @property
     def name(self) -> str:
@@ -160,8 +192,10 @@ class ShiftedTransitionModel:
             * self._factor(f_from, f_to)
 
     def sample_latency(self, f_from: float, f_to: float, rng) -> float:
-        return float(self.inner.sample_latency(f_from, f_to, rng)
-                     * self._factor(f_from, f_to))
+        factor = self._factor(f_from, f_to)
+        if self.ramp_samples > 0 and self._applies(f_from, f_to):
+            self._drawn += 1
+        return float(self.inner.sample_latency(f_from, f_to, rng) * factor)
 
     def trajectory(self, f_from: float, f_to: float, latency: float, rng):
         return self.inner.trajectory(f_from, f_to, latency, rng)

@@ -1,0 +1,78 @@
+"""Bridge from span rows into ``monitor.metrics.MetricsRegistry``.
+
+Campaign profiles and fleet dashboards share one exporter: the spans
+recorded by ``repro.obs`` are folded into the same Prometheus/JSON
+registry the drift monitor already serves, so scheduler health (queue
+depth, requeues, store retry totals, per-stage time) shows up next to
+drift alerts without a second metrics stack.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # import at use time: obs is imported by core/session,
+    # and pulling the monitor package (-> campaign.regression) in at
+    # module load would cycle back through the core layers
+    from repro.monitor.metrics import MetricsRegistry
+
+# per-stage wall-time buckets: orchestration spans span ~100us .. minutes
+_STAGE_BUCKETS = (0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0, 60.0)
+
+# instant-event name -> counter it feeds
+_EVENT_COUNTERS = {
+    "sched.requeue": ("obs_requeued_units_total",
+                      "unit attempts requeued after worker loss/timeout"),
+    "sched.speculate": ("obs_speculative_dispatches_total",
+                        "speculative (straggler-hedge) dispatches"),
+    "sched.worker_lost": ("obs_workers_lost_total",
+                          "workers/nodes declared dead by the heartbeat reaper"),
+    "store.retry": ("obs_store_retries_total",
+                    "remote-store op retries (transient failures + partitions)"),
+    "gov.plan": ("obs_governor_plans_total",
+                 "governor frequency-plan decisions"),
+}
+
+
+def export_to_registry(rows: list[dict],
+                       registry: "MetricsRegistry | None" = None
+                       ) -> "MetricsRegistry":
+    """Fold span rows into a metrics registry and return it."""
+    from repro.monitor.metrics import MetricsRegistry
+    reg = registry if registry is not None else MetricsRegistry()
+
+    stage = reg.histogram(
+        "obs_stage_seconds",
+        "wall seconds per orchestration span, labelled by category",
+        buckets=_STAGE_BUCKETS)
+    spans_total = reg.counter("obs_spans_total",
+                              "spans recorded, labelled by category")
+    events_total = reg.counter("obs_events_total",
+                               "instant events recorded, labelled by name")
+    msgs = reg.counter("obs_msgs_total",
+                       "transport messages, labelled by direction")
+    queue_depth = reg.gauge("obs_queue_depth",
+                            "pending work-queue depth at last dispatch")
+    queue_peak = reg.gauge("obs_queue_depth_peak",
+                           "maximum observed pending work-queue depth")
+
+    peak = 0.0
+    for r in rows:
+        cat = r.get("cat", "?")
+        attrs = r.get("attrs") or {}
+        if r.get("ph", "X") == "X":
+            spans_total.inc(cat=cat)
+            stage.observe(max(0.0, float(r["t1"]) - float(r["t0"])), cat=cat)
+        else:
+            name = r["name"]
+            events_total.inc(name=name)
+            hit = _EVENT_COUNTERS.get(name)
+            if hit is not None:
+                reg.counter(*hit).inc()
+            if name in ("msg.send", "msg.recv"):
+                msgs.inc(direction=name.split(".", 1)[1])
+        if "queue" in attrs:
+            depth = float(attrs["queue"])
+            queue_depth.set(depth)
+            peak = max(peak, depth)
+    queue_peak.set(peak)
+    return reg

@@ -1,0 +1,95 @@
+"""Chrome ``trace_event`` / Perfetto export for span rows.
+
+Produces the JSON object format (``{"traceEvents": [...]}``) that both
+``chrome://tracing`` and https://ui.perfetto.dev load directly: complete
+("X") events for spans, instant ("i") events for point events, and "M"
+metadata events naming one process track per actor.  Timestamps are
+microseconds relative to the earliest recorded instant so traces open
+zoomed to the campaign rather than to the Unix epoch.
+
+``validate_trace_events`` is the schema gate CI runs against the exported
+file; it returns a list of violations (empty = valid).
+"""
+from __future__ import annotations
+
+import json
+
+_PHASES = {"X", "i", "M"}
+
+
+def to_trace_events(rows: list[dict]) -> dict:
+    """Span rows (as written by ``SpanRecorder``) -> trace_event document."""
+    actors: list[str] = sorted({r.get("actor", "?") for r in rows})
+    pid_of = {a: i + 1 for i, a in enumerate(actors)}
+    t_min = min((float(r["t0"]) for r in rows), default=0.0)
+
+    events: list[dict] = []
+    for actor in actors:
+        events.append({"name": "process_name", "ph": "M", "pid": pid_of[actor],
+                       "tid": 0, "ts": 0,
+                       "args": {"name": f"repro/{actor}"}})
+    for r in rows:
+        pid = pid_of[r.get("actor", "?")]
+        tid = int(r.get("tid", 0))
+        ts = (float(r["t0"]) - t_min) * 1e6
+        args = dict(r.get("attrs") or {})
+        args["sid"] = r["sid"]
+        if r.get("parent"):
+            args["parent"] = r["parent"]
+        ev = {"name": r["name"], "cat": r.get("cat", "?"), "pid": pid,
+              "tid": tid, "ts": ts, "args": args}
+        if r.get("ph", "X") == "X":
+            ev["ph"] = "X"
+            ev["dur"] = max(0.0, (float(r["t1"]) - float(r["t0"])) * 1e6)
+        else:
+            ev["ph"] = "i"
+            ev["s"] = "t"  # thread-scoped instant
+        events.append(ev)
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def validate_trace_events(doc: dict) -> list[str]:
+    """Schema check for a trace_event document; returns violations."""
+    errors: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["document must be an object with a 'traceEvents' array"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be an array"]
+    if not events:
+        errors.append("'traceEvents' is empty")
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for key in ("name", "ph", "pid", "tid", "ts"):
+            if key not in ev:
+                errors.append(f"{where}: missing '{key}'")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            errors.append(f"{where}: unsupported phase {ph!r}")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                errors.append(f"{where}: 'X' event needs dur >= 0")
+        if ph == "i" and ev.get("s") not in ("g", "p", "t"):
+            errors.append(f"{where}: instant event needs scope s in g/p/t")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"{where}: ts must be a non-negative number")
+        if len(errors) > 20:
+            errors.append("... (truncated)")
+            break
+    return errors
+
+
+def write_trace_events(path: str, rows: list[dict]) -> dict:
+    """Export rows to ``path``; raises ``ValueError`` if the produced
+    document fails its own schema check (the export is a contract)."""
+    doc = to_trace_events(rows)
+    errors = validate_trace_events(doc)
+    if errors:
+        raise ValueError("invalid trace_event export: " + "; ".join(errors))
+    with open(path, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+    return doc

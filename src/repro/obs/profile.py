@@ -1,0 +1,147 @@
+"""Campaign-level profile assembly: span files -> merged tree -> report.
+
+``profile_campaign`` is the engine behind ``campaign profile <id>``: it
+merges every per-actor span file recorded under the campaign directory,
+runs the critical-path analyzer, cross-references dead-letter entries
+(which carry the span id active when the op exhausted its retries), and
+returns one JSON-ready document.  ``profile_markdown`` renders it for
+humans.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs.spans import load_span_rows
+from repro.obs.tree import analyze, build_forest
+
+
+def collect_span_rows(campaign) -> list[dict]:
+    rows: list[dict] = []
+    for path in campaign.list_span_files():
+        rows.extend(load_span_rows(path))
+    return rows
+
+
+def collect_dead_letters(campaign) -> list[dict]:
+    """Every dead-letter doc recorded for this campaign (driver + nodes),
+    tagged with the file it came from."""
+    docs: list[dict] = []
+    d = campaign.deadletter_dir()
+    if not os.path.isdir(d):
+        return docs
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".jsonl"):
+            continue
+        with open(os.path.join(d, name)) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    doc = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                doc["source"] = name[: -len(".jsonl")]
+                docs.append(doc)
+    return docs
+
+
+def profile_campaign(campaign) -> dict:
+    """Merged span tree + critical path + dead-letter cross-references."""
+    rows = collect_span_rows(campaign)
+    doc = analyze(build_forest(rows))
+    doc["campaign_id"] = campaign.campaign_id
+    doc["name"] = campaign.spec.name
+    doc["span_files"] = [os.path.basename(p)
+                         for p in campaign.list_span_files()]
+
+    crit_sids = ({seg["sid"] for seg in doc["critical_path"]["segments"]}
+                 if "critical_path" in doc else set())
+    letters = []
+    for dl in collect_dead_letters(campaign):
+        sid = dl.get("span")
+        letters.append({
+            "op": dl.get("op"), "key": dl.get("key"),
+            "attempts": dl.get("attempts"), "error": dl.get("error"),
+            "source": dl.get("source"), "span": sid,
+            "elapsed_s": dl.get("elapsed_s"),
+            "on_critical_path": bool(sid and sid in crit_sids),
+        })
+    doc["dead_letters"] = letters
+    return doc
+
+
+def _fmt_s(seconds) -> str:
+    return "-" if seconds is None else f"{float(seconds):.3f}s"
+
+
+def profile_markdown(doc: dict) -> str:
+    """Human-readable cost breakdown for ``campaign profile``."""
+    lines = [f"# Campaign profile — {doc.get('name', '?')} "
+             f"(`{doc.get('campaign_id', '?')}`)", ""]
+    if doc.get("empty") or "root" not in doc:
+        lines.append("No spans recorded. Re-run with `campaign run --spans`.")
+        return "\n".join(lines) + "\n"
+
+    root = doc["root"]
+    lines += [
+        f"- wall time: **{_fmt_s(root['wall_s'])}** "
+        f"(root span `{root['name']}`)",
+        f"- spans: {doc['spans']}  ·  events: {doc['events']}  ·  "
+        f"actors: {', '.join(doc['actors'])}",
+        "",
+    ]
+
+    dom = doc.get("dominant")
+    if dom:
+        lines += [
+            "## Dominant cost",
+            "",
+            f"**{dom['label']}** — {_fmt_s(dom['seconds'])} "
+            f"({dom['frac'] * 100.0:.1f}% of the critical path), "
+            f"led by span `{dom['span']['name']}` "
+            f"[`{dom['span']['sid']}`]"
+            + (f" on unit `{dom['span']['unit']}`"
+               if dom["span"].get("unit") else ""),
+            "",
+        ]
+
+    crit = doc["critical_path"]
+    lines += ["## Critical path by category", "",
+              "| category | seconds | share |", "| --- | ---: | ---: |"]
+    total = crit["total_s"] or 1.0
+    for cat, sec in crit["by_category"].items():
+        lines.append(f"| {cat} | {sec:.3f} | {sec / total * 100.0:.1f}% |")
+    lines.append("")
+
+    if doc.get("self_time_top"):
+        lines += ["## Top spans by self time", "",
+                  "| span | cat | actor | unit | self time |",
+                  "| --- | --- | --- | --- | ---: |"]
+        for row in doc["self_time_top"]:
+            lines.append(f"| `{row['name']}` | {row['cat']} | {row['actor']} "
+                         f"| {row.get('unit') or '-'} "
+                         f"| {_fmt_s(row['seconds'])} |")
+        lines.append("")
+
+    if doc.get("event_counts"):
+        lines += ["## Event counters", "",
+                  "| event | count |", "| --- | ---: |"]
+        for name in sorted(doc["event_counts"]):
+            lines.append(f"| `{name}` | {doc['event_counts'][name]} |")
+        lines.append("")
+
+    if doc.get("dead_letters"):
+        lines += ["## Dead letters (cross-referenced to spans)", "",
+                  "| op | key | attempts | elapsed | span | on critical path |",
+                  "| --- | --- | ---: | ---: | --- | --- |"]
+        for dl in doc["dead_letters"]:
+            lines.append(
+                f"| `{dl['op']}` | {dl['key'] or '-'} | {dl['attempts']} "
+                f"| {_fmt_s(dl.get('elapsed_s'))} "
+                f"| `{dl['span'] or '-'}` "
+                f"| {'yes' if dl['on_critical_path'] else 'no'} |")
+        lines.append("")
+
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,257 @@
+"""Span-tree assembly and critical-path / self-time analysis.
+
+``build_forest`` stitches rows from any number of per-actor span files into
+trees via the propagated parent ids.  On top of the tree:
+
+* ``self_time``   — span duration minus the union of its children's
+  intervals (overlapping children, e.g. concurrent unit attempts under the
+  campaign root, are interval-merged, not double-counted).
+* ``critical_path`` — Jaeger-style backward walk from the root's end: at
+  any instant the walk attributes time to the deepest span that was
+  actually running, producing segments that tile the root interval exactly
+  (their durations sum to the root's wall time by construction).
+* ``analyze``     — aggregates critical-path time per category and names
+  the dominant cost in operator terms ("straggler unit …", "remote-store
+  retries …", "scheduler idle").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class SpanNode:
+    sid: str
+    parent: str | None
+    actor: str
+    name: str
+    cat: str
+    t0: float
+    t1: float
+    tid: int = 0
+    ph: str = "X"
+    attrs: dict = field(default_factory=dict)
+    children: list["SpanNode"] = field(default_factory=list)
+    up: "SpanNode | None" = None  # parent backlink (None for roots)
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+
+@dataclass
+class Segment:
+    """One critical-path slice: ``node`` was the deepest running span over
+    ``[t0, t1]``."""
+    node: SpanNode
+    t0: float
+    t1: float
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+
+def build_forest(rows: list[dict]) -> list[SpanNode]:
+    """Rows (dicts as written by ``SpanRecorder``) -> list of root nodes,
+    sorted by start time.  Rows whose parent id is unknown (its actor's
+    file was lost) become roots; children are clamped into their parent's
+    interval so cross-process clock skew cannot break nesting."""
+    nodes: dict[str, SpanNode] = {}
+    for r in rows:
+        node = SpanNode(sid=r["sid"], parent=r.get("parent"),
+                        actor=r.get("actor", "?"), name=r["name"],
+                        cat=r.get("cat", "?"), t0=float(r["t0"]),
+                        t1=float(r["t1"]), tid=int(r.get("tid", 0)),
+                        ph=r.get("ph", "X"), attrs=r.get("attrs") or {})
+        if node.t1 < node.t0:
+            node.t1 = node.t0
+        nodes[node.sid] = node
+    roots: list[SpanNode] = []
+    for node in nodes.values():
+        parent = nodes.get(node.parent) if node.parent else None
+        if parent is None or parent is node:
+            roots.append(node)
+        else:
+            parent.children.append(node)
+            node.up = parent
+    # clamp children into parents top-down so nesting is exact
+    def _clamp(n: SpanNode) -> None:
+        for c in n.children:
+            c.t0 = min(max(c.t0, n.t0), n.t1)
+            c.t1 = max(min(c.t1, n.t1), c.t0)
+            _clamp(c)
+    for root in roots:
+        root.children.sort(key=lambda c: (c.t0, c.sid))
+        _clamp(root)
+    for node in nodes.values():
+        node.children.sort(key=lambda c: (c.t0, c.sid))
+    roots.sort(key=lambda n: (n.t0, n.sid))
+    return roots
+
+
+def walk(node: SpanNode):
+    yield node
+    for c in node.children:
+        yield from walk(c)
+
+
+def _interval_union(intervals: list[tuple[float, float]]) -> float:
+    if not intervals:
+        return 0.0
+    intervals = sorted(intervals)
+    total = 0.0
+    cur0, cur1 = intervals[0]
+    for a, b in intervals[1:]:
+        if a > cur1:
+            total += cur1 - cur0
+            cur0, cur1 = a, b
+        else:
+            cur1 = max(cur1, b)
+    return total + (cur1 - cur0)
+
+
+def self_time(node: SpanNode) -> float:
+    """Span duration not covered by any child interval."""
+    kids = [(c.t0, c.t1) for c in node.children if c.ph == "X" and c.t1 > c.t0]
+    return max(0.0, node.duration - _interval_union(kids))
+
+
+def critical_path(root: SpanNode) -> list[Segment]:
+    """Backward walk from ``root.t1``: repeatedly find the child that was
+    running latest before the cursor, attribute the gap to the current
+    span, recurse into that child, and continue from the child's start.
+    The returned segments tile ``[root.t0, root.t1]``."""
+    segments: list[Segment] = []
+
+    def _walk(node: SpanNode, t_end: float) -> None:
+        cursor = t_end
+        # children that could contribute, latest-ending first
+        kids = sorted((c for c in node.children if c.ph == "X"),
+                      key=lambda c: (c.t1, c.t0))
+        while cursor > node.t0:
+            running = None
+            while kids:
+                c = kids[-1]
+                if c.t0 >= cursor:
+                    kids.pop()
+                    continue
+                running = c
+                break
+            if running is None:
+                segments.append(Segment(node, node.t0, cursor))
+                return
+            kids.pop()
+            child_end = min(running.t1, cursor)
+            if child_end < cursor:
+                segments.append(Segment(node, child_end, cursor))
+            _walk(running, child_end)
+            cursor = min(cursor, running.t0)
+        # nothing left of this span
+
+    _walk(root, root.t1)
+    segments.reverse()
+    return segments
+
+
+_CAT_LABELS = {
+    "campaign": "scheduler idle / orchestration",
+    "unit": "unit orchestration",
+    "sched": "dispatch & queueing",
+    "exec": "unit execution",
+    "pair": "pair measurement",
+    "cal": "calibration",
+    "store": "remote-store ops (retries / partition healing)",
+    "msg": "transport messaging",
+    "gov": "governor planning",
+}
+
+
+def unit_of(node: SpanNode) -> str | None:
+    """Nearest ``unit`` attribute on the node or its ancestors."""
+    cur: SpanNode | None = node
+    while cur is not None:
+        unit = cur.attrs.get("unit")
+        if unit:
+            return str(unit)
+        cur = cur.up
+    return None
+
+
+def _dominant_label(cat: str, top: SpanNode | None) -> str:
+    unit = unit_of(top) if top is not None else None
+    if cat in ("exec", "pair", "cal"):
+        base = _CAT_LABELS.get(cat, cat)
+        return f"straggler unit {unit} ({base})" if unit else base
+    if cat == "store":
+        op = top.name if top is not None else "store op"
+        suffix = f" on unit {unit}" if unit else ""
+        return f"remote-store retries / partition healing ({op}{suffix})"
+    if cat in ("campaign", "sched"):
+        return "scheduler idle / dispatch overhead"
+    return _CAT_LABELS.get(cat, cat)
+
+
+def analyze(roots: list[SpanNode]) -> dict:
+    """Full profile document for a span forest.
+
+    The campaign root is the longest-duration root (campaign runs have
+    exactly one; orphaned subtrees from lost files rank behind it)."""
+    if not roots:
+        return {"empty": True, "spans": 0}
+    root = max(roots, key=lambda n: n.duration)
+    segments = critical_path(root)
+
+    by_cat: dict[str, float] = {}
+    top_by_cat: dict[str, tuple[float, SpanNode]] = {}
+    span_crit: dict[str, float] = {}
+    for seg in segments:
+        cat = seg.node.cat
+        by_cat[cat] = by_cat.get(cat, 0.0) + seg.duration
+        span_crit[seg.node.sid] = span_crit.get(seg.node.sid, 0.0) + seg.duration
+        best = top_by_cat.get(cat)
+        if best is None or span_crit[seg.node.sid] > best[0]:
+            top_by_cat[cat] = (span_crit[seg.node.sid], seg.node)
+
+    wall = root.duration
+    dom_cat = max(by_cat, key=lambda c: by_cat[c]) if by_cat else None
+    dom_top = top_by_cat[dom_cat][1] if dom_cat else None
+
+    all_nodes = [n for r in roots for n in walk(r)]
+    spans = [n for n in all_nodes if n.ph == "X"]
+    events = [n for n in all_nodes if n.ph != "X"]
+    self_top = sorted(((self_time(n), n) for n in spans),
+                      key=lambda p: -p[0])[:10]
+
+    counters: dict[str, int] = {}
+    for ev in events:
+        counters[ev.name] = counters.get(ev.name, 0) + 1
+
+    def _node_doc(n: SpanNode, seconds: float) -> dict:
+        return {"sid": n.sid, "name": n.name, "cat": n.cat, "actor": n.actor,
+                "seconds": seconds, "unit": unit_of(n), "attrs": n.attrs}
+
+    return {
+        "root": {"sid": root.sid, "name": root.name, "wall_s": wall,
+                 "attrs": root.attrs},
+        "spans": len(spans),
+        "events": len(events),
+        "actors": sorted({n.actor for n in all_nodes}),
+        "critical_path": {
+            "total_s": sum(s.duration for s in segments),
+            "by_category": {c: by_cat[c]
+                            for c in sorted(by_cat, key=lambda c: -by_cat[c])},
+            "segments": [{"sid": s.node.sid, "name": s.node.name,
+                          "cat": s.node.cat, "t0": s.t0, "t1": s.t1,
+                          "seconds": s.duration} for s in segments],
+        },
+        "dominant": None if dom_cat is None else {
+            "cat": dom_cat,
+            "seconds": by_cat[dom_cat],
+            "frac": (by_cat[dom_cat] / wall) if wall > 0 else 1.0,
+            "span": _node_doc(dom_top, span_crit.get(dom_top.sid, 0.0)),
+            "label": _dominant_label(dom_cat, dom_top),
+        },
+        "self_time_top": [_node_doc(n, s) for s, n in self_top if s > 0],
+        "event_counts": counters,
+    }

@@ -584,7 +584,9 @@ class TracedBackend:
 
     # annotation ---------------------------------------------------- #
     def record_plan(self, *, f_from: float, f_to: float, reason: str,
-                    region_kind: str, duration_s: float) -> None:
-        """Governor audit hook (called by :meth:`Governor.plan`)."""
-        self._recorder.record_plan(self._device.host_now(), f_from, f_to,
-                                   reason, region_kind, duration_s)
+                    region_kind: str, duration_s: float) -> int:
+        """Governor audit hook (called by :meth:`Governor.plan`).  Returns
+        the recorded event's index — the audit id span profiles link to."""
+        return self._recorder.record_plan(
+            self._device.host_now(), f_from, f_to, reason, region_kind,
+            duration_s)

@@ -188,6 +188,17 @@ def test_fault_plan_drift_spec_parsing():
     assert fp.drift_for("c") is None
 
 
+def test_fault_plan_ramp_and_direction_spec_parsing():
+    fp = FaultPlan.make(drift_ramp_pairs={"a": (2, 1.5, 64)},
+                        drift_direction="up")
+    assert not fp.empty
+    assert fp.drift_ramp_for("a") == (2, 1.5, 64)
+    assert fp.drift_ramp_for("b") is None
+    assert fp.drift_direction == "up"
+    with pytest.raises(ValueError, match="drift_direction"):
+        FaultPlan.make(drift_direction="sideways")
+
+
 def test_activate_drift_wraps_the_live_model_idempotently():
     from repro.backends import create_backend
     from repro.campaign.workqueue import activate_drift
@@ -251,3 +262,36 @@ def test_drift_injection_departs_baseline_mid_unit(tmp_path):
     assert flagged, "a 4x latency scale must be visible to the differ"
     # the two pairs measured before activation stayed on-baseline
     assert len(flagged) < n_pairs
+
+
+def test_ramped_direction_gated_drift_only_hits_up_transitions(tmp_path):
+    """`drift_ramp_pairs` + `drift_direction="up"`: the scale creeps in
+    over the next few draws and only frequency *increases* depart the
+    baseline — downward transitions stay bit-comparable, so the batch
+    differ flags up-pairs exclusively (the Fig. 4 asymmetry, drifting
+    on one side of the matrix)."""
+    from repro.campaign import diff_campaigns
+
+    spec = _fleet(1)
+    key = spec.units()[0].key
+    clean = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "clean")), executor="processes",
+        max_workers=1, trace=True).run()
+    assert clean.ok
+
+    drifted = CampaignRunner(
+        spec, ArtifactStore(str(tmp_path / "ramp")), executor="processes",
+        max_workers=1, trace=True,
+        fault_plan=FaultPlan.make(
+            drift_ramp_pairs={key: (1, 4.0, 4)},
+            drift_direction="up")).run()
+    assert drifted.ok, [(o.key, o.error) for o in drifted.failed()]
+    assert os.path.exists(
+        fault_marker_path(drifted.campaign, key, "drift"))
+
+    diff = diff_campaigns(clean.campaign, drifted.campaign)
+    flagged = diff.flagged()
+    assert flagged, "a ramped 4x up-scale must be visible to the differ"
+    assert all(p.f_target > p.f_init for p in flagged), (
+        "direction='up' drift leaked into downward transitions: "
+        + str([(p.f_init, p.f_target) for p in flagged]))

@@ -1,11 +1,16 @@
 """Streaming drift detection: sequential triggers (CUSUM, Page-Hinkley),
-the batch-rule confirm gate, cooldown, and the unpowered-baseline delta
-floor.  Synthetic streams only — service/ingest integration lives in
+the batch-rule confirm gate, cooldown, the unpowered-baseline delta
+floor, and the slow-ramp / per-direction drift shapes the FaultPlan can
+inject.  Synthetic streams only — service/ingest integration lives in
 test_monitor_service.py / test_monitor_ingest.py."""
 import numpy as np
+import pytest
 
+from repro.campaign.regression import DiffConfig as PairDiffConfig
 from repro.core.latency_table import analyse_pair
 from repro.core.stats import Cusum, PageHinkley
+from repro.dvfs.transition_models import (ShiftedTransitionModel,
+                                          TransitionModel)
 from repro.monitor import DriftConfig, PairMonitor
 
 BASE_MEAN, BASE_STD = 15e-3, 0.4e-3
@@ -153,3 +158,154 @@ def test_unpowered_baseline_needs_the_wide_delta_floor():
     assert event is not None, "a 3x shift must clear the delta floor"
     assert event.drift.p_value != event.drift.p_value        # NaN: no test
     assert abs(event.drift.rel_delta) > DriftConfig().unpowered_delta
+
+
+# ------------------------------------------------------------------ #
+# slow-ramp drift: Page-Hinkley's target shape
+# ------------------------------------------------------------------ #
+# A creep this slow never hands CUSUM a per-sample excess over its
+# allowance, but PH's self-centered statistic accumulates the trend.
+# The baseline is near-degenerate (jitter far below the sigma floor) so
+# the monitor standardizes against the floor and the batch rule can flag
+# a ~1.2% worst-case delta — i.e. the confirm gate is satisfiable while
+# the window is still inside CUSUM's blind spot.
+RAMP_SLOPE_SIGMA = 0.03              # z-units gained per sample
+RAMP_THRESHOLD = 0.012               # batch-rule worst-case delta to flag
+
+
+def _tight_baseline(n=24, seed=0, jitter=0.02e-3):
+    rng = np.random.default_rng(seed)
+    pr = analyse_pair(705.0, 210.0, rng.normal(BASE_MEAN, jitter, n),
+                      with_silhouette=False)
+    assert pr.status == "ok" and pr.clean.size
+    return pr
+
+
+def _ramp_monitor(**cfg_kw):
+    cfg = DriftConfig(
+        diff=PairDiffConfig(worst_delta_threshold=RAMP_THRESHOLD), **cfg_kw)
+    return PairMonitor("u0@fast", 705.0, 210.0, _tight_baseline(), cfg)
+
+
+def _drive_ramp(mon, n=250, seed=3, jitter=0.02e-3):
+    """Feed a slow linear ramp; return the first DriftEvent (or None)."""
+    sigma = DriftConfig().sigma_floor_frac * BASE_MEAN
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        v = BASE_MEAN + RAMP_SLOPE_SIGMA * i * sigma \
+            + rng.normal(0.0, jitter)
+        event = mon.observe(float(v), t_stream=float(i))
+        if event is not None:
+            return event
+    return None
+
+
+def test_slow_ramp_page_hinkley_fires_before_cusum():
+    """Detection-delay race on the same deterministic creep: a PH-only
+    monitor confirms several samples before a CUSUM-only one, and the
+    combined monitor's deciding event is PH's (its CUSUM statistic is
+    still under threshold when the alert fires)."""
+    ph_event = _drive_ramp(_ramp_monitor(cusum_h=float("inf")))
+    cu_event = _drive_ramp(_ramp_monitor(ph_lambda=float("inf")))
+    assert ph_event is not None and cu_event is not None
+    assert ph_event.sample_index <= 40       # detection-delay budget
+    delay_gap = cu_event.sample_index - ph_event.sample_index
+    assert delay_gap >= 3, (
+        f"PH should lead CUSUM on a slow ramp, gap={delay_gap}")
+
+    event = _drive_ramp(_ramp_monitor())
+    assert event is not None
+    assert event.sample_index == ph_event.sample_index
+    cfg = DriftConfig()
+    assert event.ph_score >= cfg.ph_lambda           # PH tripped it ...
+    assert event.cusum_score < cfg.cusum_h           # ... CUSUM had not
+    assert event.drift.flagged
+    assert abs(event.drift.rel_delta) > RAMP_THRESHOLD
+
+
+def test_step_shift_still_beats_the_ramp_budget():
+    """Sanity for the budget above: the same monitor confirms an abrupt
+    3x step within a handful of samples, so the ramp test's 40-sample
+    budget genuinely measures slow-creep delay, not monitor slack."""
+    mon = _ramp_monitor()
+    rng = np.random.default_rng(4)
+    event = None
+    for i, v in enumerate(rng.normal(3 * BASE_MEAN, 0.02e-3, 16)):
+        event = mon.observe(float(v), t_stream=float(i))
+        if event is not None:
+            break
+    assert event is not None and event.sample_index <= 8
+
+
+# ------------------------------------------------------------------ #
+# injected ramp + per-direction drift (FaultPlan's model wrapper)
+# ------------------------------------------------------------------ #
+class _FlatModel(TransitionModel):
+    """Constant-latency inner model: the wrapper's ramp is the signal."""
+
+    def base_latency(self, f_from, f_to):
+        return BASE_MEAN
+
+    def sample_latency(self, f_from, f_to, rng):
+        return float(BASE_MEAN * (1.0 + rng.normal(0.0, 0.00133)))
+
+
+def test_shifted_model_ramp_interpolates_and_plateaus():
+    m = ShiftedTransitionModel(_FlatModel(), 3.0, ramp_samples=4)
+    rng = np.random.default_rng(0)
+    factors = []
+    for _ in range(6):
+        # base_latency peeks at the current factor without advancing it
+        factors.append(m.base_latency(210.0, 705.0) / BASE_MEAN)
+        m.sample_latency(210.0, 705.0, rng)
+    assert factors == pytest.approx([1.0, 1.5, 2.0, 2.5, 3.0, 3.0])
+
+
+def test_shifted_model_base_latency_does_not_advance_the_ramp():
+    m = ShiftedTransitionModel(_FlatModel(), 2.0, ramp_samples=10)
+    for _ in range(50):
+        m.base_latency(210.0, 705.0)
+    assert m._drawn == 0
+    assert m.base_latency(210.0, 705.0) == pytest.approx(BASE_MEAN)
+
+
+def test_shifted_model_direction_gates_the_shift():
+    up = ShiftedTransitionModel(_FlatModel(), 3.0, direction="up")
+    assert up.base_latency(210.0, 705.0) == pytest.approx(3 * BASE_MEAN)
+    assert up.base_latency(705.0, 210.0) == pytest.approx(BASE_MEAN)
+    down = ShiftedTransitionModel(_FlatModel(), 3.0, direction="down")
+    assert down.base_latency(210.0, 705.0) == pytest.approx(BASE_MEAN)
+    assert down.base_latency(705.0, 210.0) == pytest.approx(3 * BASE_MEAN)
+    with pytest.raises(ValueError, match="direction"):
+        ShiftedTransitionModel(_FlatModel(), 2.0, direction="sideways")
+
+
+def test_direction_gated_ramp_detected_only_on_the_drifted_side():
+    """End-to-end injection shape: a 'down'-gated slow ramp drifts the
+    705->210 stream while the interleaved 210->705 stream stays on
+    baseline — one monitor confirms (via PH, within budget), the other
+    never alerts, and only the applicable draws advanced the ramp."""
+    m = ShiftedTransitionModel(_FlatModel(), 1.12, ramp_samples=200,
+                               direction="down")
+    cfg = lambda: DriftConfig(                              # noqa: E731
+        diff=PairDiffConfig(worst_delta_threshold=RAMP_THRESHOLD))
+    base = _tight_baseline()
+    mon_down = PairMonitor("u0@fast", 705.0, 210.0, base, cfg())
+    mon_up = PairMonitor("u0@fast", 210.0, 705.0, base, cfg())
+    rng = np.random.default_rng(3)
+    event = None
+    rounds = 0
+    for i in range(300):
+        rounds += 1
+        assert mon_up.observe(m.sample_latency(210.0, 705.0, rng),
+                              t_stream=float(i)) is None
+        event = mon_down.observe(m.sample_latency(705.0, 210.0, rng),
+                                 t_stream=float(i))
+        if event is not None:
+            break
+    assert event is not None, "down-gated ramp never confirmed"
+    assert event.sample_index <= 60          # detection-delay budget
+    assert event.ph_score >= DriftConfig().ph_lambda
+    assert event.cusum_score < DriftConfig().cusum_h
+    # the up draws were inapplicable: they must not advance the ramp
+    assert m._drawn == rounds
