@@ -1,0 +1,87 @@
+"""Cross-architecture switching-latency report, fully offline.
+
+The paper's Table II compares switching latency across three GPUs — all
+single-clock devices. This walkthrough extends the comparison across
+*architectures* with different frequency-domain structure:
+
+  rtx6000-like GPU   one clock ladder, bare-MHz frequency keys
+  multi-domain-sim   independent core + uncore/memory ladders; latency
+                     depends on which domain moves, and cross-domain
+                     transitions pay both legs plus a coupling penalty
+  pstate-sim         m1n1-style e-/p-core pstate clusters on different
+                     ladders, with a cluster-migration cost
+
+One campaign spec covers all three (operating points spelled
+"domain:mhz" — see docs/backends.md), the scheduler measures each unit
+through the identical phase 1-3 pipeline, and the report renders:
+
+  * the classic cross-device Table II, and
+  * the domain breakdown — per-unit latency by transition class
+    ("core", "uncore", "core->uncore", "ecore->pcore", ...) — which
+    only appears because the campaign measured domain-encoded points;
+    single-domain campaigns keep byte-identical report output.
+
+  PYTHONPATH=src python examples/cross_arch_report.py
+
+Equivalent CLI round-trip:
+
+  PYTHONPATH=src python -m repro.campaign run spec.json
+  PYTHONPATH=src python -m repro.campaign report <campaign-id>
+"""
+from repro.campaign import (ArtifactStore, CampaignSpec, DeviceSpec,
+                            MeasureSpec, report_markdown, run_campaign)
+from repro.campaign.aggregate import campaign_has_domains, domain_rows
+from repro.core.freqkey import transition_class
+
+FAST = MeasureSpec(key="fast", min_measurements=6, max_measurements=8,
+                   rse_check_every=6)
+
+spec = CampaignSpec(
+    name="cross-arch",
+    devices=(
+        # the paper's GPU shape: one ladder, bare MHz
+        DeviceSpec.make("rtx6000", "vmapped-sim",
+                        {"kind": "rtx6000", "n_cores": 6}, n_freqs=3),
+        # two clock domains; ops spelled "domain:mhz"
+        DeviceSpec.make("multidomain", "multi-domain-sim",
+                        {"n_cores": 8},
+                        frequencies=["core:600", "core:1500",
+                                     "uncore:300", "uncore:600"]),
+        # per-cluster pstates, m1n1 M1 ladders
+        DeviceSpec.make("pstate", "pstate-sim",
+                        {"n_cores": 6},
+                        frequencies=["ecore:600", "ecore:2064",
+                                     "pcore:600", "pcore:3204"]),
+    ),
+    measures=(FAST,))
+
+store = ArtifactStore()    # $REPRO_RESULTS_DIR/campaigns
+print(f"running campaign {spec.campaign_id()} "
+      f"({len(spec.units())} units)...")
+result = run_campaign(spec, store, verbose=True)
+assert result.ok, [o.error for o in result.failed()]
+
+print()
+print(report_markdown(result.campaign))
+
+# the domain breakdown is also available as flat rows for tooling
+assert campaign_has_domains(result.campaign)
+rows = domain_rows(result.campaign)
+cross = [r for r in rows if "->" in r["transition"]]
+same = [r for r in rows if "->" not in r["transition"]]
+assert cross, "cross-domain transitions must be measured"
+print(f"{len(same)} same-domain and {len(cross)} cross-domain "
+      "transition classes measured.")
+
+# the paper's qualitative finding, now across architectures: WHICH clock
+# moves matters as much as which device you bought
+md = result.campaign.load_table("multidomain@fast")
+by_class = {}
+for (fi, ft), pr in md.pairs.items():
+    by_class.setdefault(transition_class(fi, ft), []).append(pr.mean)
+core = min(by_class["core"])
+uncore = min(by_class["uncore"])
+assert core < uncore, "core relocks are faster than uncore retrains"
+print(f"multidomain: fastest core switch {core * 1e3:.1f} ms vs fastest "
+      f"uncore switch {uncore * 1e3:.1f} ms — same device, "
+      f"{uncore / core:.0f}x apart by domain alone.")

@@ -7,6 +7,10 @@ Importing this package populates the registry with the built-in backends:
                 multi-kernel passes
   cuda-nvml     real-hardware contract stub (needs pynvml + a GPU)
   trace-replay  re-execute a recorded telemetry trace offline (repro.trace)
+  multi-domain-sim  independent core + uncore/memory clock ladders with
+                domain-dependent and cross-domain switching latency
+  pstate-sim    m1n1-style per-cluster pstate device (e-/p-core ladders,
+                timelog-resolution latency sampling)
 """
 from repro.backends.base import AcceleratorBackend, BackendUnavailableError
 from repro.backends.registry import (BackendEntry, create_backend,
@@ -18,11 +22,16 @@ from repro.backends import simulated as _simulated            # noqa: F401
 from repro.backends import vmapped_sim as _vmapped_sim        # noqa: F401
 from repro.backends import cuda_nvml as _cuda_nvml            # noqa: F401
 from repro.trace import replay as _trace_replay               # noqa: F401
+from repro.backends import multi_domain as _multi_domain      # noqa: F401
+from repro.backends import pstate as _pstate                  # noqa: F401
 from repro.backends.vmapped_sim import VmappedSimAccelerator
 from repro.backends.cuda_nvml import CudaNvmlBackend
+from repro.backends.multi_domain import MultiDomainAccelerator
+from repro.backends.pstate import PStateAccelerator
 
 __all__ = [
     "AcceleratorBackend", "BackendUnavailableError", "BackendEntry",
     "register_backend", "create_backend", "get_backend", "list_backends",
     "VmappedSimAccelerator", "CudaNvmlBackend",
+    "MultiDomainAccelerator", "PStateAccelerator",
 ]

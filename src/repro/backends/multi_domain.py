@@ -1,0 +1,137 @@
+"""`multi-domain-sim` backend: independent core and uncore/memory clocks.
+
+Everything measured through PR 9 had one clock domain; this device has two
+ladders whose operating points are domain-encoded frequency keys
+(:mod:`repro.core.freqkey`): ``"core:1200"`` runs the core ladder with the
+uncore at its default, ``"uncore:450"`` drops the fabric/memory clock with
+the core at its default.  Switching latency depends on which domain moves
+— core relocks are fast, uncore retrains are ~4-6x slower, and a
+cross-domain transition pays both legs plus a coupling penalty
+(:class:`repro.dvfs.domain_models.MultiDomainModel`).
+
+The measurement pipeline needs no special casing: ``device.frequencies``
+is the encoded union of both ladders, phase 1 calibrates one iteration-time
+baseline per operating point (uncore settings shave effective throughput
+via the model's ``effective_frequency``), and phase 2/3 measure encoded
+``(f_init, f_target)`` pairs exactly like bare-MHz ones.  The backend is
+``virtual`` (pair-seeded deterministic sweeps) but NOT ``batchable``: the
+batched engine's fused lane evaluator assumes one shared ``f_max``
+normalization per backend kind, which a per-domain effective-rate map
+breaks — sessions reject ``engine="batched"`` with a clear error instead.
+"""
+from __future__ import annotations
+
+from repro.backends.registry import register_backend
+from repro.core.freqkey import (canon_freq, domain_index, encode_freq,
+                                format_freq, freq_domain, freq_mhz,
+                                split_freq)
+from repro.dvfs.device_model import DeviceConfig, SimulatedAccelerator
+from repro.dvfs.domain_models import MultiDomainModel, _encode_raw
+
+
+class MultiDomainAccelerator(SimulatedAccelerator):
+    """SimulatedAccelerator over domain-encoded operating points.
+
+    The committed frequency timeline holds *effective* clock rates (what
+    iteration durations scale by), so the unmodified wait evaluators, the
+    trace recorder and clock sync all work untouched; setpoints, history
+    entries and throttle bookkeeping stay in encoded operating-point keys,
+    so ground truth and pair artifacts are keyed exactly like the
+    session's pairs."""
+
+    def __init__(self, model, cfg: DeviceConfig, seed: int = 0):
+        # super().__init__ commits the idle operating point through
+        # _timeline_freq, so the effective-rate map must exist first
+        self._eff = model.effective_frequency
+        super().__init__(model, cfg, seed=seed)
+        self._f_max_eff = max(self._eff(f) for f in cfg.frequencies)
+
+    # -------------------------------------------------------------- #
+    # the domain-aware seams (see SimulatedAccelerator hook docstrings)
+    # -------------------------------------------------------------- #
+    def _timeline_freq(self, f: float) -> float:
+        return self._eff(f)
+
+    def _f_max(self) -> float:
+        return self._f_max_eff
+
+    def _thermal_cap(self) -> float:
+        domain, mhz = split_freq(self._set_freq)
+        if domain is None:
+            return super()._thermal_cap()
+        top = max(v for v in self.domain_frequencies()[domain])
+        return _encode_raw(domain, min(mhz, 0.8 * top))
+
+    def set_frequency(self, mhz) -> None:
+        """Accepts any :func:`repro.core.freqkey.canon_freq` spelling —
+        encoded float, ``(domain, mhz)`` tuple, or ``"domain:mhz"``."""
+        key = canon_freq(mhz)
+        if key not in self._freq_set:
+            raise ValueError(
+                f"unsupported operating point {format_freq(key)}; this "
+                f"device offers "
+                f"{[format_freq(f) for f in self.cfg.frequencies]}")
+        super().set_frequency(key)
+
+    # -------------------------------------------------------------- #
+    # introspection (docs, reports, error messages)
+    # -------------------------------------------------------------- #
+    @property
+    def domains(self) -> tuple[str, ...]:
+        """Domain names present on this device, ladder order."""
+        seen: list[str] = []
+        for f in self.cfg.frequencies:
+            d = freq_domain(f)
+            if d not in seen:
+                seen.append(d)
+        return tuple(seen)
+
+    def domain_frequencies(self) -> dict[str, tuple[float, ...]]:
+        """domain -> its ladder in physical MHz, ascending."""
+        out: dict[str, list[float]] = {}
+        for f in self.cfg.frequencies:
+            out.setdefault(freq_domain(f), []).append(freq_mhz(f))
+        return {d: tuple(sorted(v)) for d, v in out.items()}
+
+
+def _canon_ladder(domain: str, freqs) -> list[float]:
+    keys = sorted(encode_freq(domain, float(f)) for f in freqs)
+    if not keys:
+        raise ValueError(f"{domain} ladder must be non-empty")
+    return keys
+
+
+@register_backend(
+    "multi-domain-sim",
+    description="simulated device with independent core and uncore/memory "
+                "clock ladders; switching latency depends on which domain "
+                "moves and cross-domain transitions interact",
+    virtual=True, batchable=False, domains=("core", "uncore"))
+def make_multi_domain(*, seed: int = 0, unit_seed: int = 0,
+                      n_cores: int = 24,
+                      core_freqs=(600.0, 900.0, 1200.0, 1500.0),
+                      uncore_freqs=(300.0, 450.0, 600.0),
+                      uncore_default: float = 750.0,
+                      uncore_floor: float = 0.45,
+                      **overrides):
+    """Build a two-domain device.  ``core_freqs`` / ``uncore_freqs`` are
+    physical MHz ladders (whole numbers — the operating-point encoding
+    requires it); the device's ``frequencies`` tuple is their encoded
+    union, core entries first."""
+    model = MultiDomainModel(unit_seed=unit_seed,
+                             core_default=float(max(core_freqs)),
+                             uncore_default=float(uncore_default),
+                             uncore_floor=float(uncore_floor))
+    keys = _canon_ladder("core", core_freqs) \
+        + _canon_ladder("uncore", uncore_freqs)
+    assert keys == sorted(keys), "core domain index precedes uncore"
+    if "power_throttle_freqs" in overrides:
+        overrides["power_throttle_freqs"] = tuple(
+            canon_freq(f) for f in overrides["power_throttle_freqs"])
+    cfg = DeviceConfig(n_cores=int(n_cores), frequencies=tuple(keys),
+                       **overrides)
+    return MultiDomainAccelerator(model, cfg, seed=seed)
+
+
+# re-exported for backends that share the encoding helpers
+__all__ = ["MultiDomainAccelerator", "make_multi_domain", "domain_index"]

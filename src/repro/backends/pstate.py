@@ -1,0 +1,127 @@
+"""`pstate-sim` backend: per-cluster pstate registers, m1n1-style.
+
+Modeled on AsahiLinux m1n1's ``cpu_pstate_latencies.py`` experiment
+(SNIPPETS.md): an e-core and a p-core cluster, each with its own pstate
+ladder behind a per-cluster register, and transition latency observed by
+sampling a high-rate *timelog* — (timestamp, frequency) pairs polled from
+a cycle counter — rather than inferring it from kernel-iteration timing.
+
+Operating points are domain-encoded keys (:mod:`repro.core.freqkey`):
+``"ecore:1332"`` runs the workload on the e-cluster at 1332 MHz,
+``"pcore:2988"`` on the p-cluster.  The default ladders are the M1's
+published pstate tables.  Two measurement paths coexist:
+
+* the standard phases 1-3 pipeline works unmodified (the device is a full
+  :class:`AcceleratorBackend`; iteration durations scale with the active
+  cluster's IPC-adjusted clock), and
+* :meth:`PStateAccelerator.measure_pstate_latency` reproduces the m1n1
+  experiment natively: issue the register write, poll the timelog at
+  ``rate_hz``, report when the observed clock settles on the target —
+  resolution is one sample period instead of one kernel iteration.  Tests
+  cross-check both paths against the simulator's ground truth.
+
+Like ``multi-domain-sim`` this backend is ``virtual`` (pair-seeded
+deterministic parallel sweeps) but not ``batchable``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.backends.registry import register_backend
+from repro.core.freqkey import canon_freq, encode_freq, format_freq
+from repro.dvfs.device_model import DeviceConfig
+from repro.backends.multi_domain import MultiDomainAccelerator
+from repro.dvfs.domain_models import PStateClusterModel
+
+# the M1 pstate tables from m1n1's experiment (MHz)
+E_CORE_PSTATES = (600.0, 972.0, 1332.0, 1704.0, 2064.0)
+P_CORE_PSTATES = (600.0, 828.0, 1056.0, 1284.0, 1500.0, 1728.0, 1956.0,
+                  2184.0, 2388.0, 2592.0, 2772.0, 2988.0, 3096.0, 3144.0,
+                  3204.0)
+
+_TIMEBASE_HZ = 24e6            # ARM generic timer (CNTFRQ) on the M1
+
+
+class PStateAccelerator(MultiDomainAccelerator):
+    """Two pstate clusters behind the multi-domain operating-point seams,
+    plus the m1n1 timelog measurement surface."""
+
+    # -------------------------------------------------------------- #
+    # high-rate timelog sampling
+    # -------------------------------------------------------------- #
+    def read_timelog(self, t_start_dev: float, duration_s: float,
+                     rate_hz: float = 200e3) -> np.ndarray:
+        """Sample the committed frequency timeline like m1n1's ``timelog``
+        loop polls (CNTPCT, cycle counter) pairs: returns ``(n, 2)`` rows
+        of ``[t_dev, effective_mhz]`` on a uniform ``1/rate_hz`` grid.
+        The simulator's timeline is committed eagerly at command time, so
+        the log can cover a transition that is still "in flight" on the
+        host clock."""
+        n = max(2, int(round(duration_s * rate_hz)))
+        ts = t_start_dev + np.arange(n) / rate_hz
+        freqs = np.array([self._freq_at(float(t)) for t in ts])
+        return np.column_stack([ts, freqs])
+
+    def measure_pstate_latency(self, f_from, f_to, *, window_s: float = 0.02,
+                               rate_hz: float = 200e3
+                               ) -> tuple[float, np.ndarray]:
+        """The m1n1 ``bench_latency`` shape: settle at ``f_from``, write
+        the target pstate, poll the timelog, and report when the observed
+        clock first settles on (and stays at) the target.  Returns
+        ``(latency_estimate_s, samples)``; the estimate resolves to one
+        sample period (``1/rate_hz``), NOT one kernel iteration — the
+        point of the timelog path.  Ground truth for the same transition
+        lands in ``self.history[-1]["true_latency"]``."""
+        f_from, f_to = canon_freq(f_from), canon_freq(f_to)
+        self.set_frequency(f_from)
+        # let the first transition land before the measured one is issued
+        self.usleep(max(window_s, 0.05))
+        self.set_frequency(f_to)
+        arrive = self.history[-1]["arrive_dev"]
+        samples = self.read_timelog(arrive, window_s, rate_hz)
+        target_eff = self._timeline_freq(f_to)
+        at_target = samples[:, 1] == target_eff
+        # first index from which the clock never leaves the target again
+        # (cross-cluster trajectories pass through the default point, which
+        # can momentarily equal the target's effective rate)
+        settled = np.flatnonzero(~at_target)
+        first = 0 if not settled.size else int(settled[-1]) + 1
+        if first >= len(samples):
+            raise RuntimeError(
+                f"clock never settled on {format_freq(f_to)} within "
+                f"{window_s * 1e3:.1f} ms; widen window_s")
+        return float(samples[first, 0] - arrive), samples
+
+    # -------------------------------------------------------------- #
+    # introspection, cluster vocabulary
+    # -------------------------------------------------------------- #
+    @property
+    def clusters(self) -> tuple[str, ...]:
+        return self.domains
+
+    def cluster_frequencies(self) -> dict[str, tuple[float, ...]]:
+        return self.domain_frequencies()
+
+
+@register_backend(
+    "pstate-sim",
+    description="m1n1-style per-cluster pstate device: e-/p-core clusters "
+                "on different frequency ladders, timelog-resolution "
+                "latency sampling",
+    virtual=True, batchable=False, domains=("ecore", "pcore"))
+def make_pstate(*, seed: int = 0, unit_seed: int = 0, n_cores: int = 8,
+                ecore_freqs=E_CORE_PSTATES, pcore_freqs=P_CORE_PSTATES,
+                e_ipc: float = 0.55, p_ipc: float = 1.0, **overrides):
+    model = PStateClusterModel(unit_seed=unit_seed, e_ipc=float(e_ipc),
+                               p_ipc=float(p_ipc),
+                               e_default=float(max(ecore_freqs)),
+                               p_default=float(max(pcore_freqs)))
+    keys = sorted(encode_freq("ecore", f) for f in ecore_freqs) \
+        + sorted(encode_freq("pcore", f) for f in pcore_freqs)
+    if "power_throttle_freqs" in overrides:
+        overrides["power_throttle_freqs"] = tuple(
+            canon_freq(f) for f in overrides["power_throttle_freqs"])
+    overrides.setdefault("timer_resolution_s", 1.0 / _TIMEBASE_HZ)
+    cfg = DeviceConfig(n_cores=int(n_cores), frequencies=tuple(keys),
+                       **overrides)
+    return PStateAccelerator(model, cfg, seed=seed)

@@ -41,6 +41,12 @@ class BackendEntry:
     # reject engine="batched" on unsuitable backends before building a
     # single device.
     batchable: bool = False
+    # frequency domains the backend's operating points span, in
+    # repro.core.freqkey's canonical names.  Empty = one implicit domain
+    # (bare-MHz keys, every backend before the heterogeneous families).
+    # Informational: error messages and the docs-check completeness gate
+    # read it; the measurement pipeline itself is domain-agnostic.
+    domains: tuple[str, ...] = ()
 
     def missing_requirements(self) -> list[str]:
         return [m for m in self.requires
@@ -56,12 +62,13 @@ _REGISTRY: dict[str, BackendEntry] = {}
 
 def register_backend(name: str, *, description: str = "",
                      requires: tuple[str, ...] = (), virtual: bool = False,
-                     batchable: bool = False):
+                     batchable: bool = False,
+                     domains: tuple[str, ...] = ()):
     """Decorator registering ``factory`` under ``name`` (idempotent per
     name: re-registration overwrites, so module reloads are harmless)."""
     def deco(factory: Callable[..., AcceleratorBackend]):
         _REGISTRY[name] = BackendEntry(name, factory, description, requires,
-                                       virtual, batchable)
+                                       virtual, batchable, domains)
         return factory
     return deco
 

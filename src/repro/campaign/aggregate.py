@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.campaign.store import Campaign
+from repro.core.freqkey import has_domain, transition_class
 
 
 def unit_summaries(campaign: Campaign) -> dict[str, dict]:
@@ -62,6 +63,55 @@ def comparison_markdown(campaign: Campaign) -> str:
     return "\n".join(lines)
 
 
+def campaign_has_domains(campaign: Campaign) -> bool:
+    """True iff any finished unit measured domain-encoded operating points.
+    The gate for every domain-aware report section: campaigns of purely
+    single-domain devices keep byte-identical report output."""
+    return any(has_domain(fi) or has_domain(ft)
+               for table in campaign.tables().values()
+               for fi, ft in table.pairs)
+
+
+def domain_rows(campaign: Campaign) -> list[dict]:
+    """Per-unit latency breakdown by transition class — the
+    cross-architecture extension of Table II.  One row per (unit,
+    class), where a class is a domain ("core", "uncore", "ecore", ...)
+    for same-domain moves or "a->b" for cross-domain ones; bare-MHz pairs
+    land in the implicit "core" class."""
+    rows = []
+    for key, table in sorted(campaign.tables().items()):
+        groups: dict[str, list] = {}
+        for (fi, ft), p in table.pairs.items():
+            if p.status != "ok" or not p.clean.size:
+                continue
+            groups.setdefault(transition_class(fi, ft), []).append(p)
+        for cls in sorted(groups):
+            worst = np.array([p.worst_case for p in groups[cls]])
+            best = np.array([p.best_case for p in groups[cls]])
+            rows.append({
+                "unit": key, "transition": cls, "n_pairs": int(worst.size),
+                "worst_mean_ms": float(worst.mean()) * 1e3,
+                "worst_max_ms": float(worst.max()) * 1e3,
+                "best_mean_ms": float(best.mean()) * 1e3,
+            })
+    return rows
+
+
+def domain_markdown(campaign: Campaign) -> str:
+    """Markdown twin of :func:`domain_rows`."""
+    lines = [
+        "| device unit | transition | pairs | worst mean/max (ms) | "
+        "best mean (ms) |",
+        "|---|---|---:|---|---:|",
+    ]
+    for r in domain_rows(campaign):
+        lines.append(
+            f"| {r['unit']} | {r['transition']} | {r['n_pairs']} "
+            f"| {r['worst_mean_ms']:.1f} / {r['worst_max_ms']:.1f} "
+            f"| {r['best_mean_ms']:.1f} |")
+    return "\n".join(lines)
+
+
 def asymmetry_rows(campaign: Campaign) -> list[dict]:
     """Fig. 4 analogue per unit, as flat rows (None = no data)."""
     rows = []
@@ -107,7 +157,7 @@ def report_dict(campaign: Campaign) -> dict:
     machine-readable twin of :func:`report_markdown` (``campaign report
     --json``), mirroring the ``diff --json`` precedent."""
     states = campaign.unit_states()
-    return {
+    doc = {
         "campaign_id": campaign.campaign_id,
         "name": campaign.spec.name,
         "units_total": len(states),
@@ -117,6 +167,9 @@ def report_dict(campaign: Campaign) -> dict:
         "comparison": comparison_rows(campaign),
         "asymmetry": asymmetry_rows(campaign),
     }
+    if campaign_has_domains(campaign):
+        doc["domains"] = domain_rows(campaign)
+    return doc
 
 
 def report_markdown(campaign: Campaign) -> str:
@@ -142,7 +195,10 @@ def report_markdown(campaign: Campaign) -> str:
         if st.get("error"):
             lines.append(f"| | `{st['error']}` | | | |")
     lines += ["", "## Cross-device switching latency (Table II analogue)",
-              "", comparison_markdown(campaign),
-              "", "## Transition asymmetry (Fig. 4 analogue)",
+              "", comparison_markdown(campaign)]
+    if campaign_has_domains(campaign):
+        lines += ["", "## Latency by transition class (domain breakdown)",
+                  "", domain_markdown(campaign)]
+    lines += ["", "## Transition asymmetry (Fig. 4 analogue)",
               "", asymmetry_markdown(campaign), ""]
     return "\n".join(lines)

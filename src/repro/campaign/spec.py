@@ -31,6 +31,8 @@ import json
 import re
 
 from repro.core.evaluation import MeasureConfig
+from repro.core.freqkey import (canon_freq, format_freq, freq_domain,
+                                has_domain, spec_form)
 from repro.core.session import LatestConfig, MeasurementSession, SessionConfig
 
 _KEY_RE = re.compile(r"[A-Za-z0-9._-]+")
@@ -43,7 +45,7 @@ class DeviceSpec:
     key: str                                  # unique label within the campaign
     backend: str = "simulated"
     options: tuple = ()                       # sorted (name, value) pairs
-    frequencies: tuple | None = None          # explicit MHz list, or None
+    frequencies: tuple | None = None          # canonical freq keys, or None
     n_freqs: int = 3                          # evenly-spaced subset when None
 
     @staticmethod
@@ -51,7 +53,14 @@ class DeviceSpec:
              frequencies=None, n_freqs: int = 3) -> "DeviceSpec":
         opts = tuple(sorted((options or {}).items()))
         if frequencies is not None:
-            freqs = tuple(float(f) for f in frequencies)
+            # any freqkey spelling is accepted ("uncore:450", ("core", 900),
+            # bare MHz) and canonicalized, so equivalent specs share one
+            # campaign_id; bare floats pass through untouched
+            try:
+                freqs = tuple(canon_freq(f) for f in frequencies)
+            except (KeyError, ValueError) as e:
+                raise ValueError(
+                    f"device {key!r}: bad frequency spec: {e}") from None
             if not freqs:
                 raise ValueError(
                     f"device {key!r}: frequencies must be non-empty when "
@@ -69,17 +78,37 @@ class DeviceSpec:
         return create_backend(self.backend, **self.options_dict)
 
     def resolve_frequencies(self, device) -> list[float]:
-        if self.frequencies is not None:
-            return [float(f) for f in self.frequencies]
         fs = list(device.frequencies)
+        if self.frequencies is not None:
+            # domain-aware devices get membership validation: a bare-MHz
+            # request against a multi-domain ladder (or an op point the
+            # device doesn't offer) fails here with the domain vocabulary,
+            # not deep inside phase 1.  Single-domain specs keep the
+            # historical pass-through.
+            if any(has_domain(f) for f in fs):
+                supported = set(fs)
+                bad = [f for f in self.frequencies if f not in supported]
+                if bad:
+                    domains = sorted({freq_domain(f) for f in fs})
+                    raise ValueError(
+                        f"device {self.key!r}: operating point(s) "
+                        f"{[format_freq(f) for f in bad]} not offered by "
+                        f"backend {self.backend!r} (domains {domains}; "
+                        f"spell points as 'domain:mhz', e.g. "
+                        f"{format_freq(fs[0])!r})")
+            return [float(f) for f in self.frequencies]
         n = max(2, min(self.n_freqs, len(fs)))
         idx = [round(i * (len(fs) - 1) / (n - 1)) for i in range(n)]
         return [float(fs[i]) for i in sorted(set(idx))]
 
     def to_dict(self) -> dict:
+        # spec_form keeps bare MHz as JSON numbers (campaign_id stability
+        # for every pre-domain spec) and renders encoded operating points
+        # as "domain:mhz" strings
         return {"key": self.key, "backend": self.backend,
                 "options": self.options_dict,
-                "frequencies": list(self.frequencies) if self.frequencies else None,
+                "frequencies": [spec_form(f) for f in self.frequencies]
+                if self.frequencies else None,
                 "n_freqs": self.n_freqs}
 
     @classmethod

@@ -403,7 +403,10 @@ class BatchedSweepEngine:
         n_iters = spec.iters_per_kernel
         warm_iters = spec.iters_per_kernel // 2
         flops = spec.flops_per_iter
-        f_max = max(lanes[0].device.cfg.frequencies) if lanes else 0.0
+        # identical to max(cfg.frequencies) on every batchable backend
+        # (single clock domain; multi-domain backends register
+        # batchable=False and never reach this engine)
+        f_max = lanes[0].device._f_max() if lanes else 0.0
         det_cache: dict = {}
         while active:
             # --- one Alg. 2 pass for every still-active lane ---------- #

@@ -1,0 +1,155 @@
+"""Domain-aware frequency keys.
+
+The paper's methodology only assumes "a settable frequency", but every
+device measured through PR 9 had exactly one clock domain, so the whole
+pipeline flows bare MHz floats: calibration baselines are ``dict[float,
+FreqStats]``, pairs are ``(float, float)`` tuples, CSV names embed
+``int(f)``, and :func:`repro.core.pairtask.pair_seed` hashes ``f"{f:.6g}"``.
+Heterogeneous devices (core + uncore/memory clocks, e-/p-core pstate
+clusters) need to say *which* domain a frequency belongs to — without
+perturbing a single bit of the existing single-domain artifacts.
+
+The canonical wire form therefore stays a ``float``:
+
+* a **bare MHz value** is its own key (today's devices, unchanged);
+* a **domain-qualified** frequency ``(domain, mhz)`` encodes as
+  ``DOMAIN_STRIDE * index(domain) + mhz`` — e.g. ``("core", 1410)`` ->
+  ``101410.0``, ``("uncore", 600)`` -> ``200600.0``.
+
+Encoded keys ride through every float-shaped seam for free: dict keys,
+``(f_init, f_target)`` pair tuples, numpy arrays, CSV names
+(``201410_100600_node0_0.csv``), content digests, the trace event stream,
+and the blake2s pair seed.  Domains come from the fixed table below (not a
+runtime registry) so every process — thread workers, process pools, cluster
+nodes — decodes identically without coordination.
+
+An encoded key names an *operating point*: the given domain at the given
+MHz with every other domain at its device-default value.  That keeps phase
+1 well-posed (one operating point = one iteration-time baseline) and makes
+cross-domain pairs ordinary ``(f_init, f_target)`` pairs: the transition
+from ``("core", v)`` to ``("uncore", w)`` moves BOTH clocks, which is
+exactly the interaction the multi-domain backends model.
+
+Constraints enforced by :func:`canon_freq`:
+
+* domain-qualified MHz must be whole numbers in ``(0, DOMAIN_STRIDE)``,
+  so the encoded float renders exactly under the ``%.6g`` formatting
+  :func:`repro.core.pairtask.pair_seed` applies (6 significant digits
+  cover every integer below 1e6 — a rounding collision there would merge
+  two pairs' RNG streams);
+* bare floats below ``DOMAIN_STRIDE`` pass through untouched (bit-identity
+  for single-domain backends is by construction, not by convention).
+"""
+from __future__ import annotations
+
+# Fixed canonical domain table.  Index 0 is reserved for the implicit
+# domain of single-domain devices (bare floats, never encoded); real
+# domains start at 1.  Append-only: reordering would re-key every stored
+# multi-domain artifact.
+DOMAINS: tuple[str, ...] = ("core", "uncore", "mem", "ecore", "pcore")
+
+DOMAIN_STRIDE = 100_000.0
+
+_INDEX = {name: i + 1 for i, name in enumerate(DOMAINS)}
+
+
+def domain_index(domain: str) -> int:
+    """1-based index of ``domain`` in the canonical table."""
+    try:
+        return _INDEX[domain]
+    except KeyError:
+        raise KeyError(
+            f"unknown frequency domain {domain!r}; canonical domains: "
+            f"{list(DOMAINS)}") from None
+
+
+def encode_freq(domain: str, mhz: float) -> float:
+    """Encode one (domain, MHz) operating point as a canonical float."""
+    idx = domain_index(domain)
+    mhz = float(mhz)
+    if not 0.0 < mhz < DOMAIN_STRIDE:
+        raise ValueError(
+            f"domain-qualified frequency {domain}:{mhz:g} out of range "
+            f"(0, {DOMAIN_STRIDE:g}) MHz")
+    if mhz != int(mhz):
+        raise ValueError(
+            f"domain-qualified frequency {domain}:{mhz} must be a whole "
+            "number of MHz: the encoded key must survive the pair-seed's "
+            "%.6g formatting bit-exactly")
+    return DOMAIN_STRIDE * idx + mhz
+
+
+def canon_freq(f) -> float:
+    """Canonicalize any accepted spelling of a frequency key to its float
+    wire form.
+
+    Accepts a bare number (returned as ``float``, untouched), a
+    ``(domain, mhz)`` tuple/list, a ``"domain:mhz"`` string, a numeric
+    string ``"1410"``, or an already-encoded float (idempotent).
+    """
+    if isinstance(f, str):
+        if ":" in f:
+            domain, _, mhz = f.partition(":")
+            return encode_freq(domain.strip(), float(mhz))
+        return float(f)
+    if isinstance(f, (tuple, list)):
+        if len(f) != 2:
+            raise ValueError(
+                f"frequency key {f!r} must be (domain, mhz), got "
+                f"{len(f)} elements")
+        return encode_freq(str(f[0]), float(f[1]))
+    return float(f)
+
+
+def has_domain(f: float) -> bool:
+    """True when ``f`` is a domain-encoded key (not a bare MHz value)."""
+    return float(f) >= DOMAIN_STRIDE
+
+
+def split_freq(f: float) -> tuple[str | None, float]:
+    """Decode a canonical key to ``(domain, mhz)``; bare values decode to
+    ``(None, mhz)``."""
+    f = float(f)
+    if f < DOMAIN_STRIDE:
+        return None, f
+    idx = int(f // DOMAIN_STRIDE)
+    if idx > len(DOMAINS):
+        raise ValueError(
+            f"encoded frequency {f:g} names domain index {idx}, beyond "
+            f"the canonical table {list(DOMAINS)}")
+    return DOMAINS[idx - 1], f - DOMAIN_STRIDE * idx
+
+
+def freq_domain(f: float, default: str = "core") -> str:
+    """Domain name of a key; bare MHz values report ``default``."""
+    domain, _ = split_freq(f)
+    return default if domain is None else domain
+
+
+def freq_mhz(f: float) -> float:
+    """The physical MHz value of a key, domain stripped."""
+    return split_freq(f)[1]
+
+
+def format_freq(f: float) -> str:
+    """Human form: ``"1410"`` for bare keys, ``"uncore:600"`` for
+    domain-qualified ones."""
+    domain, mhz = split_freq(f)
+    text = f"{mhz:g}"
+    return text if domain is None else f"{domain}:{text}"
+
+
+def transition_class(f_init: float, f_target: float) -> str:
+    """Label one pair by which domain(s) move: ``"core"`` (same-domain),
+    or ``"core->uncore"`` for cross-domain transitions.  Bare keys count
+    as the implicit ``"core"`` domain."""
+    a, b = freq_domain(f_init), freq_domain(f_target)
+    return a if a == b else f"{a}->{b}"
+
+
+def spec_form(f: float):
+    """The JSON-spec spelling of a key: bare floats stay numbers (so
+    existing campaign specs keep byte-identical canonical JSON and ids);
+    domain-qualified keys render as ``"domain:mhz"`` strings."""
+    f = float(f)
+    return format_freq(f) if has_domain(f) else f

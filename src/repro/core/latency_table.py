@@ -9,6 +9,7 @@ import os
 import numpy as np
 
 from repro.core.dbscan import NOISE, adaptive_dbscan, split_clusters
+from repro.core.freqkey import freq_domain
 from repro.core.paths import atomic_replace
 from repro.core.silhouette import silhouette_score
 
@@ -155,11 +156,17 @@ class LatencyTable:
 
     def asymmetry(self) -> dict:
         """Fig. 4 analogue: worst-case latency distributions for increasing
-        (init < target) vs decreasing (init > target) transitions."""
-        up = [p.worst_case for p in self.pairs.values()
-              if p.status == "ok" and p.clean.size and p.f_init < p.f_target]
-        down = [p.worst_case for p in self.pairs.values()
-                if p.status == "ok" and p.clean.size and p.f_init > p.f_target]
+        (init < target) vs decreasing (init > target) transitions.
+        Cross-domain pairs are excluded — "up" vs "down" is only meaningful
+        within one clock ladder (comparing a core MHz against an uncore MHz
+        orders nothing physical); within a domain the encoded keys order
+        exactly like the physical MHz, so single-domain tables are
+        unaffected."""
+        same = [p for p in self.pairs.values()
+                if p.status == "ok" and p.clean.size
+                and freq_domain(p.f_init) == freq_domain(p.f_target)]
+        up = [p.worst_case for p in same if p.f_init < p.f_target]
+        down = [p.worst_case for p in same if p.f_init > p.f_target]
         def dist(v):
             v = np.asarray(v)
             if not v.size:

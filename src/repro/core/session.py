@@ -39,6 +39,7 @@ from repro.core.calibration import Calibration, calibrate, valid_pairs
 from repro.core.evaluation import (MeasureConfig, PairMeasurement,
                                    measure_pair)
 from repro.core.executors import get_executor, map_pairs_with_callback
+from repro.core.freqkey import format_freq
 from repro.core.latency_table import LatencyTable, analyse_pair
 from repro.core.pairtask import (PairTask, extract_ground_truth,
                                  run_pair_task)
@@ -331,7 +332,8 @@ class MeasurementSession:
                 pr = analyse_pair(pm.f_init, pm.f_target, pm.latencies,
                                   pm.status)
                 analysed[pair] = pr
-                print(f"  {pm.f_init:.0f}->{pm.f_target:.0f} MHz: "
+                print(f"  {format_freq(pm.f_init)}->"
+                      f"{format_freq(pm.f_target)} MHz: "
                       f"n={pm.latencies.size} "
                       f"status={pm.status} worst={pr.worst_case*1e3:.2f}ms "
                       f"best={pr.best_case*1e3:.2f}ms "

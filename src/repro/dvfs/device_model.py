@@ -69,10 +69,15 @@ class SimulatedAccelerator:
         self._freq_set = frozenset(cfg.frequencies)
         # committed frequency timeline: sorted [(device_time, freq)], with
         # parallel times/freqs lists so lookups bisect and batch padding
-        # slices without rebuilding arrays or unpacking tuples
-        self._events: list[tuple[float, float]] = [(-np.inf, idle)]
+        # slices without rebuilding arrays or unpacking tuples.  Entries are
+        # *timeline* frequencies — what iteration durations scale by — which
+        # for this class is the setpoint itself (_timeline_freq is identity);
+        # multi-domain subclasses map operating-point keys to an effective
+        # clock rate here instead.
+        idle_eff = self._timeline_freq(idle)
+        self._events: list[tuple[float, float]] = [(-np.inf, idle_eff)]
         self._ev_t: list[float] = [-np.inf]
-        self._ev_f: list[float] = [idle]
+        self._ev_f: list[float] = [idle_eff]
         self._busy_until_dev = -np.inf
         self._last_activity_dev = -np.inf
         self._seq = 0
@@ -117,6 +122,31 @@ class SimulatedAccelerator:
     # ------------------------------------------------------------------ #
     # frequency control
     # ------------------------------------------------------------------ #
+    def _timeline_freq(self, f: float) -> float:
+        """Map a frequency *setpoint* to the timeline frequency iteration
+        durations scale by (``dur = base * f_max / f_timeline``).  Identity
+        here — a setpoint IS the core clock.  Heterogeneous backends
+        (``multi-domain-sim``, ``pstate-sim``) override this to translate a
+        domain-encoded operating point (:mod:`repro.core.freqkey`) into the
+        workload-visible effective clock rate, keeping every timeline
+        consumer (the wait evaluators, the trace recorder's event stream)
+        untouched."""
+        return f
+
+    def _f_max(self) -> float:
+        """The timeline frequency iteration durations are normalized to
+        (``base_iter_s`` is the duration at ``_f_max``).  Identity pairing
+        of :meth:`_timeline_freq`: ``max(frequencies)`` here, the best
+        effective rate over all operating points for multi-domain
+        subclasses."""
+        return max(self.cfg.frequencies)
+
+    def _thermal_cap(self) -> float:
+        """Setpoint a thermal-throttle event caps the device to.  Single
+        clock domain: 80% of the top frequency (or the current setpoint if
+        already below)."""
+        return min(self._set_freq, 0.8 * max(self.cfg.frequencies))
+
     def _freq_at(self, t_dev: float) -> float:
         i = bisect.bisect_right(self._ev_t, t_dev) - 1
         return self._events[max(0, i)][1]
@@ -140,7 +170,7 @@ class SimulatedAccelerator:
         f_from = self._set_freq
         lat = self.model.sample_latency(f_from, mhz, self.rng)
         for dt, f in self.model.trajectory(f_from, mhz, lat, self.rng):
-            self._commit(arrive_dev + dt, f)
+            self._commit(arrive_dev + dt, self._timeline_freq(f))
         self._set_freq = mhz
         if mhz in self.cfg.power_throttle_freqs:
             self._pending_power_throttle = True
@@ -168,14 +198,14 @@ class SimulatedAccelerator:
         if (start - max(self._last_activity_dev, -1e18)) > self.cfg.idle_timeout_s \
                 and self._set_freq != self._idle_freq:
             # device had fallen back to idle; it ramps back up after wake-up
-            self._commit(start, self._idle_freq)
-            self._commit(start + self.model.wakeup_s, self._set_freq)
+            self._commit(start, self._timeline_freq(self._idle_freq))
+            self._commit(start + self.model.wakeup_s,
+                         self._timeline_freq(self._set_freq))
         if self.cfg.thermal_throttle_prob > 0 and \
                 self.rng.random() < self.cfg.thermal_throttle_prob:
             self._throttle_flags.add("thermal")
-            cap = min(self._set_freq, 0.8 * max(self.cfg.frequencies))
-            self._commit(start, cap)
-            self._commit(start + 5e-3, self._set_freq)
+            self._commit(start, self._timeline_freq(self._thermal_cap()))
+            self._commit(start + 5e-3, self._timeline_freq(self._set_freq))
         if self._pending_power_throttle:
             self._throttle_flags.add("power")
         h = KernelHandle(start_dev=start, n_iters=n_iters,
@@ -216,7 +246,7 @@ class SimulatedAccelerator:
         """Block until the kernel finishes; returns device timestamps
         (n_cores, n_iters, 2) [start, end], timer-quantized."""
         c = self.cfg
-        f_max = max(c.frequencies)
+        f_max = self._f_max()
         t0, noise = self._wait_draw(h)
         ev_t = np.array(self._ev_t)
         ev_f = np.array(self._ev_f)

@@ -1,0 +1,214 @@
+"""Transition models for heterogeneous frequency-domain devices.
+
+The single-domain models in :mod:`repro.dvfs.transition_models` are keyed
+by bare MHz; the two families here work in the encoded operating-point
+space of :mod:`repro.core.freqkey`, where a key names ONE domain's setting
+with every other domain at its default:
+
+  MultiDomainModel     independent core and uncore/memory clock ladders
+                       ("Exploring Uncore Frequency Scaling for
+                       Heterogeneous Computing", PAPERS.md): core
+                       transitions are fast PLL relocks, uncore transitions
+                       retrain the fabric/memory path and run ~4-6x slower,
+                       and a cross-domain move pays BOTH legs plus a
+                       coupling penalty (the domains handshake).
+
+  PStateClusterModel   m1n1-style per-cluster pstate registers
+                       (AsahiLinux cpu_pstate_latencies.py): e-core and
+                       p-core clusters with different frequency ladders,
+                       per-cluster ramp cost roughly linear in the MHz
+                       distance, and a migration cost when the workload's
+                       operating point hops clusters.
+
+Both expose ``effective_frequency(key)``: the workload-visible clock rate
+at an operating point, which the device subclasses commit to their event
+timelines (``SimulatedAccelerator._timeline_freq``) so the unmodified wait
+evaluators, trace recorder and batched stats all keep working in plain
+duration space.  Like the GPU models, everything deterministic derives
+from ``_pair_hash`` so ground truth is reproducible per (pair, unit_seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.freqkey import (DOMAIN_STRIDE, domain_index, freq_domain,
+                                freq_mhz, split_freq)
+from repro.dvfs.transition_models import TransitionModel, _pair_hash
+
+
+def _encode_raw(domain: str, mhz: float) -> float:
+    """Encode without the whole-MHz guard: trajectory intermediates and
+    thermal caps may be off-ladder values that never become dict keys."""
+    return DOMAIN_STRIDE * domain_index(domain) + float(mhz)
+
+
+@dataclasses.dataclass
+class MultiDomainModel(TransitionModel):
+    """Core + uncore clock domains with interacting transitions.
+
+    Latency structure (all pair-hash spread, per unit_seed):
+
+    * core->core: 3.5-5 ms down, 7-13 ms up (PLL relock; a100-ish)
+    * uncore->uncore: 22-28 ms down, 30-40 ms up (fabric retrain)
+    * cross-domain: the leaving domain returns to its default AND the
+      entering domain ramps — both legs serialized, scaled by a 1.15-1.35x
+      coupling factor.  The trajectory passes through the all-default
+      operating point when the core leg completes first.
+
+    ``uncore_floor`` sets how much of the workload's throughput survives
+    the slowest uncore setting: effective rate at ``("uncore", v)`` is
+    ``core_default * (floor + (1 - floor) * v / uncore_default)``.
+    """
+
+    name: str = "multidomain"
+    core_default: float = 1500.0
+    uncore_default: float = 750.0
+    uncore_floor: float = 0.45
+    coupling: float = 1.15          # cross-domain penalty floor
+    comm_delay_s: float = 50e-6
+    wakeup_s: float = 8e-3
+
+    # ---------------------------------------------------------------- #
+    # operating point -> workload-visible clock
+    # ---------------------------------------------------------------- #
+    def _uncore_scale(self, v: float) -> float:
+        return self.uncore_floor + \
+            (1.0 - self.uncore_floor) * v / self.uncore_default
+
+    def effective_frequency(self, key: float) -> float:
+        domain, mhz = split_freq(key)
+        if domain in (None, "core"):
+            return mhz * self._uncore_scale(self.uncore_default)   # = mhz
+        if domain == "uncore":
+            return self.core_default * self._uncore_scale(mhz)
+        raise ValueError(
+            f"multi-domain model has no domain {domain!r} "
+            "(core | uncore)")
+
+    @property
+    def default_key(self) -> float:
+        """The all-default operating point (cross-domain waypoint)."""
+        return _encode_raw("core", self.core_default)
+
+    # ---------------------------------------------------------------- #
+    # switching latency
+    # ---------------------------------------------------------------- #
+    def _leg(self, domain: str, v_from: float, v_to: float) -> float:
+        """One domain's ladder move, in seconds."""
+        if v_from == v_to:
+            return 0.0
+        u = _pair_hash(v_from, v_to, self.unit_seed + domain_index(domain))
+        if domain == "core":
+            if v_to < v_from:
+                return 3.5e-3 + 1.5e-3 * u
+            return 7.0e-3 + 6.0e-3 * u
+        if v_to < v_from:
+            return 22e-3 + 6e-3 * u
+        return 30e-3 + 10e-3 * u
+
+    def _default_of(self, domain: str) -> float:
+        return self.core_default if domain == "core" else self.uncore_default
+
+    def base_latency(self, f_from: float, f_to: float) -> float:
+        da, va = split_freq(f_from)
+        db, vb = split_freq(f_to)
+        da, db = da or "core", db or "core"
+        if da == db:
+            return self._leg(da, va, vb)
+        # cross-domain: domain `da` returns to default, `db` ramps from
+        # default to vb; legs serialize and couple
+        u = _pair_hash(f_from, f_to, self.unit_seed + 11)
+        legs = self._leg(da, va, self._default_of(da)) \
+            + self._leg(db, self._default_of(db), vb)
+        return legs * (self.coupling + 0.2 * u)
+
+    def sample_latency(self, f_from, f_to, rng):
+        base = self.base_latency(f_from, f_to)
+        da, db = freq_domain(f_from), freq_domain(f_to)
+        sigma = 0.04 if da == db == "core" else \
+            0.05 if da == db else 0.07
+        return float(base * rng.lognormal(0.0, sigma))
+
+    def trajectory(self, f_from, f_to, latency, rng):
+        if freq_domain(f_from) == freq_domain(f_to):
+            return [(latency, f_to)]
+        # the leaving domain's leg lands first: the device passes through
+        # the all-default operating point before the target domain settles
+        return [(0.45 * latency, self.default_key), (latency, f_to)]
+
+
+@dataclasses.dataclass
+class PStateClusterModel(TransitionModel):
+    """Per-cluster pstate-register transitions, m1n1-style.
+
+    A cluster's pstate write costs a fixed register/handshake overhead
+    plus a ramp roughly linear in the MHz distance; the e-cluster ramps
+    cheaper than the p-cluster, increases cost more than decreases (the
+    voltage regulator leads the clock on the way up), and a cross-cluster
+    move — the workload's operating point migrating between clusters —
+    pays both clusters' legs plus a fixed migration cost.
+
+    ``effective_frequency`` models the clusters' IPC gap: the workload
+    runs on the named cluster, so ``("ecore", v)`` delivers
+    ``v * e_ipc`` while ``("pcore", v)`` delivers ``v * p_ipc``.
+    """
+
+    name: str = "pstate"
+    e_ipc: float = 0.55
+    p_ipc: float = 1.0
+    e_base_s: float = 0.45e-3        # register write + uncontended ramp
+    p_base_s: float = 0.7e-3
+    e_ramp_s_per_mhz: float = 0.9e-6
+    p_ramp_s_per_mhz: float = 1.1e-6
+    up_factor: float = 1.4           # regulator leads the clock going up
+    migrate_s: float = 2.5e-3        # cross-cluster workload migration
+    e_default: float = 2064.0
+    p_default: float = 3204.0
+    comm_delay_s: float = 20e-6      # MMIO register write, not a driver RPC
+    wakeup_s: float = 2e-3
+
+    def effective_frequency(self, key: float) -> float:
+        domain, mhz = split_freq(key)
+        if domain in (None, "pcore"):
+            return mhz * self.p_ipc
+        if domain == "ecore":
+            return mhz * self.e_ipc
+        raise ValueError(
+            f"pstate model has no cluster {domain!r} (ecore | pcore)")
+
+    @property
+    def default_key(self) -> float:
+        return _encode_raw("pcore", self.p_default)
+
+    def _leg(self, cluster: str, v_from: float, v_to: float) -> float:
+        if v_from == v_to:
+            return 0.0
+        base, ramp = ((self.e_base_s, self.e_ramp_s_per_mhz)
+                      if cluster == "ecore"
+                      else (self.p_base_s, self.p_ramp_s_per_mhz))
+        u = _pair_hash(v_from, v_to, self.unit_seed + domain_index(cluster))
+        lat = base + ramp * abs(v_to - v_from)
+        if v_to > v_from:
+            lat *= self.up_factor
+        return lat * (0.9 + 0.2 * u)
+
+    def _default_of(self, cluster: str) -> float:
+        return self.e_default if cluster == "ecore" else self.p_default
+
+    def base_latency(self, f_from: float, f_to: float) -> float:
+        ca, va = split_freq(f_from)
+        cb, vb = split_freq(f_to)
+        ca, cb = ca or "pcore", cb or "pcore"
+        if ca == cb:
+            return self._leg(ca, va, vb)
+        return self.migrate_s + self._leg(ca, va, self._default_of(ca)) \
+            + self._leg(cb, self._default_of(cb), vb)
+
+    def sample_latency(self, f_from, f_to, rng):
+        base = self.base_latency(f_from, f_to)
+        return float(base * rng.lognormal(0.0, 0.03))
+
+    def trajectory(self, f_from, f_to, latency, rng):
+        if freq_domain(f_from, "pcore") == freq_domain(f_to, "pcore"):
+            return [(latency, f_to)]
+        return [(0.5 * latency, self.default_key), (latency, f_to)]

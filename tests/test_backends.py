@@ -43,6 +43,32 @@ def test_register_roundtrip():
     assert dev.cfg.n_cores == 2
 
 
+def test_domain_backends_registered_with_flags():
+    for name in ("multi-domain-sim", "pstate-sim"):
+        entry = get_backend(name)
+        assert entry.available
+        assert entry.virtual                 # pair-seeded parallel sweeps
+        assert not entry.batchable           # per-domain effective rates
+    assert get_backend("multi-domain-sim").domains == ("core", "uncore")
+    assert get_backend("pstate-sim").domains == ("ecore", "pcore")
+    # pre-domain backends keep the implicit single domain
+    assert get_backend("vmapped-sim").domains == ()
+
+
+def test_create_backend_canonicalizes_option_spellings():
+    """Factory options accept any freqkey spelling; the built device holds
+    canonical encoded keys, so differently-spelled options yield the same
+    device configuration."""
+    from repro.core.freqkey import canon_freq
+    a = create_backend("multi-domain-sim",
+                       power_throttle_freqs=["core:600"])
+    b = create_backend("multi-domain-sim",
+                       power_throttle_freqs=[("core", 600.0)])
+    assert a.cfg.power_throttle_freqs == (canon_freq("core:600"),)
+    assert a.cfg.power_throttle_freqs == b.cfg.power_throttle_freqs
+    assert a.cfg.frequencies == b.cfg.frequencies
+
+
 def test_vmapped_rejects_loop_impl():
     with pytest.raises(ValueError, match="vectorized"):
         create_backend("vmapped-sim", kind="a100", n_cores=2,

@@ -1,0 +1,332 @@
+"""Heterogeneous frequency-domain backends: the freqkey encoding, the
+multi-domain and pstate simulators, domain-dependent switching latency
+through the full pipeline, and the single-domain bit-identity contract."""
+import numpy as np
+import pytest
+
+from repro.backends import create_backend, get_backend
+from repro.campaign import aggregate
+from repro.campaign.scheduler import run_campaign
+from repro.campaign.spec import CampaignSpec, DeviceSpec, MeasureSpec
+from repro.campaign.store import ArtifactStore
+from repro.core.evaluation import MeasureConfig
+from repro.core.freqkey import (DOMAIN_STRIDE, canon_freq, encode_freq,
+                                format_freq, freq_domain, freq_mhz,
+                                has_domain, spec_form, split_freq,
+                                transition_class)
+from repro.core.session import (LatestConfig, MeasurementSession,
+                                SessionConfig)
+
+FAST = MeasureConfig(min_measurements=4, max_measurements=6,
+                     rse_check_every=4)
+
+MD_FREQS = [encode_freq("core", 600), encode_freq("core", 1500),
+            encode_freq("uncore", 300), encode_freq("uncore", 600)]
+
+
+def _cfg(**kw):
+    return SessionConfig(latest=LatestConfig(measure=FAST), **kw)
+
+
+def _md_session(out_dir=None, seed=7, **kw):
+    return MeasurementSession(
+        frequencies=MD_FREQS, cfg=_cfg(out_dir=out_dir, **kw),
+        backend="multi-domain-sim",
+        backend_options={"seed": seed, "n_cores": 8})
+
+
+# ------------------------------------------------------------------ #
+# freqkey: the encoding itself
+# ------------------------------------------------------------------ #
+def test_canon_freq_accepts_every_spelling():
+    key = encode_freq("uncore", 450)
+    assert canon_freq("uncore:450") == key
+    assert canon_freq(("uncore", 450)) == key
+    assert canon_freq(["uncore", 450.0]) == key
+    assert canon_freq(key) == key                      # idempotent
+    assert canon_freq("1410") == 1410.0
+    assert canon_freq(1410.0) == 1410.0                # bare passes through
+
+
+def test_split_format_roundtrip():
+    key = canon_freq("ecore:972")
+    assert split_freq(key) == ("ecore", 972.0)
+    assert format_freq(key) == "ecore:972"
+    assert freq_mhz(key) == 972.0
+    assert freq_domain(key) == "ecore"
+    assert has_domain(key) and not has_domain(1410.0)
+    assert split_freq(1410.0) == (None, 1410.0)
+    assert format_freq(1410.0) == "1410"
+
+
+def test_transition_class_labels():
+    c6, c15 = canon_freq("core:600"), canon_freq("core:1500")
+    u3 = canon_freq("uncore:300")
+    assert transition_class(c6, c15) == "core"
+    assert transition_class(c6, u3) == "core->uncore"
+    assert transition_class(u3, c6) == "uncore->core"
+    assert transition_class(210.0, 1410.0) == "core"   # bare = implicit core
+
+
+def test_unknown_domain_raises_with_canonical_list():
+    with pytest.raises(KeyError, match="ecore"):
+        encode_freq("gpu", 1000)
+    with pytest.raises(KeyError, match="canonical domains"):
+        canon_freq("fabric:600")
+
+
+def test_fractional_and_out_of_range_mhz_rejected():
+    # encoded keys must survive pair_seed's %.6g formatting bit-exactly
+    with pytest.raises(ValueError, match="whole"):
+        encode_freq("core", 892.5)
+    with pytest.raises(ValueError, match="range"):
+        encode_freq("core", DOMAIN_STRIDE + 1)
+    with pytest.raises(ValueError, match="range"):
+        encode_freq("core", 0)
+
+
+def test_spec_form_keeps_bare_floats_as_numbers():
+    assert spec_form(1410.0) == 1410.0                 # number, not string
+    assert spec_form(canon_freq("uncore:600")) == "uncore:600"
+
+
+def test_pair_seed_distinguishes_domains():
+    """("core", 600) and ("uncore", 600) must never share an RNG stream."""
+    from repro.core.pairtask import pair_seed
+    c, u = canon_freq("core:600"), canon_freq("uncore:600")
+    assert pair_seed(0, c, u) != pair_seed(0, c, c)
+    assert pair_seed(0, c, c) != pair_seed(0, u, u)
+    assert pair_seed(0, c, c) != pair_seed(0, 600.0, 600.0)
+
+
+# ------------------------------------------------------------------ #
+# multi-domain-sim: latency depends on which domain moves
+# ------------------------------------------------------------------ #
+def test_ground_truth_ordering_core_uncore_cross():
+    dev = create_backend("multi-domain-sim", seed=1)
+    m = dev.model
+    cc = m.base_latency(canon_freq("core:600"), canon_freq("core:1500"))
+    uu = m.base_latency(canon_freq("uncore:300"), canon_freq("uncore:600"))
+    xd = m.base_latency(canon_freq("core:600"), canon_freq("uncore:300"))
+    assert cc < uu < xd
+
+
+def test_unsupported_operating_point_names_the_ladder():
+    dev = create_backend("multi-domain-sim", seed=1)
+    with pytest.raises(ValueError, match="core:600"):
+        dev.set_frequency("mem:500")
+    with pytest.raises(ValueError, match="unsupported operating point"):
+        dev.set_frequency(999.0)                       # bare MHz, no ladder
+
+
+def test_measured_latency_depends_on_domain():
+    """Acceptance gate: through the full phase 1-3 pipeline, core-only,
+    uncore-only and cross-domain transitions land in distinct latency
+    regimes matching the model's ordering."""
+    table = _md_session().run()
+    by_class = {}
+    for (fi, ft), pr in table.pairs.items():
+        assert pr.status == "ok" and pr.clean.size
+        by_class.setdefault(transition_class(fi, ft), []).append(pr.mean)
+    assert {"core", "uncore", "core->uncore", "uncore->core"} <= set(by_class)
+    cc = np.mean(by_class["core"])
+    uu = np.mean(by_class["uncore"])
+    xd = np.mean(by_class["core->uncore"] + by_class["uncore->core"])
+    assert cc < uu < xd
+
+
+def test_threads_bit_identical_to_serial_multi_domain():
+    serial = _md_session().run()
+    threaded = _md_session(executor="threads", max_workers=3).run()
+    assert set(serial.pairs) == set(threaded.pairs)
+    for p, pr in serial.pairs.items():
+        assert np.array_equal(pr.latencies, threaded.pairs[p].latencies)
+        assert np.array_equal(pr.labels, threaded.pairs[p].labels)
+
+
+def test_resume_bit_identical_multi_domain(tmp_path):
+    out = str(tmp_path / "md")
+    subset = [(MD_FREQS[0], MD_FREQS[2]), (MD_FREQS[2], MD_FREQS[0])]
+    partial = _md_session(out_dir=out).run(pair_subset=subset)
+    resumed = _md_session(out_dir=out).run()
+    fresh = _md_session().run()
+    assert set(resumed.pairs) == set(fresh.pairs)
+    for p, pr in fresh.pairs.items():
+        assert np.array_equal(pr.latencies, resumed.pairs[p].latencies)
+    for p in subset:
+        assert np.array_equal(partial.pairs[p].latencies,
+                              resumed.pairs[p].latencies)
+
+
+def test_batched_engine_rejected_with_clear_error():
+    assert not get_backend("multi-domain-sim").batchable
+    s = MeasurementSession(
+        frequencies=MD_FREQS, cfg=_cfg(), backend="multi-domain-sim",
+        backend_options={"seed": 7, "n_cores": 8}, engine="batched")
+    with pytest.raises(ValueError, match="batchable"):
+        s.run()
+
+
+def test_asymmetry_skips_cross_domain_pairs():
+    table = _md_session().run()
+    a = table.asymmetry()
+    # 4 same-domain pairs split 2 up / 2 down; 8 cross-domain pairs excluded
+    assert a["increase"]["n"] == 2 and a["decrease"]["n"] == 2
+
+
+def test_trace_record_replay_multi_domain():
+    """Encoded operating points ride the trace event stream unchanged:
+    a replayed sweep reproduces the live table bit-for-bit."""
+    from repro.trace import TraceRecorder
+    from repro.trace.analyze import replay_table, table_digest
+    rec = TraceRecorder()
+    live = MeasurementSession(
+        frequencies=MD_FREQS, cfg=_cfg(), backend="multi-domain-sim",
+        backend_options={"seed": 7, "n_cores": 8}, trace=rec).run()
+    trace = rec.finish()
+    replayed = replay_table(trace)
+    assert set(replayed.pairs) == set(live.pairs)
+    for key, lp in live.pairs.items():
+        np.testing.assert_array_equal(replayed.pairs[key].latencies,
+                                      lp.latencies)
+    assert table_digest(replayed) == table_digest(live)
+    assert trace.meta["live_table_digest"] == table_digest(live)
+
+
+# ------------------------------------------------------------------ #
+# pstate-sim: per-cluster ladders + timelog measurement
+# ------------------------------------------------------------------ #
+def test_pstate_clusters_and_ladders():
+    dev = create_backend("pstate-sim", seed=2)
+    assert dev.clusters == ("ecore", "pcore")
+    ladders = dev.cluster_frequencies()
+    assert len(ladders["ecore"]) == 5 and len(ladders["pcore"]) == 15
+    assert ladders["ecore"][-1] == 2064.0 and ladders["pcore"][-1] == 3204.0
+
+
+def test_pstate_timelog_matches_ground_truth_within_sample_period():
+    dev = create_backend("pstate-sim", seed=2)
+    rate = 200e3
+    for pair in [("pcore:600", "pcore:3204"), ("ecore:600", "ecore:2064"),
+                 ("ecore:600", "pcore:2988")]:
+        lat, samples = dev.measure_pstate_latency(*pair, window_s=0.03,
+                                                  rate_hz=rate)
+        truth = dev.history[-1]["true_latency"]
+        assert abs(lat - truth) <= 1.0 / rate + 1e-9, pair
+        assert samples.shape[1] == 2
+
+
+def test_pstate_cross_cluster_passes_through_default():
+    """A cross-cluster trajectory visits the all-default operating point,
+    so the timelog sees three effective rates: source, default, target."""
+    dev = create_backend("pstate-sim", seed=3)
+    dev.set_frequency("ecore:600")
+    dev.usleep(0.05)
+    dev.set_frequency("pcore:600")
+    arrive = dev.history[-1]["arrive_dev"]
+    samples = dev.read_timelog(arrive, 0.02, 200e3)
+    eff = dev.model.effective_frequency
+    seen = set(np.unique(samples[:, 1]))
+    assert eff(canon_freq("pcore:3204")) in seen       # default waypoint
+    assert samples[-1, 1] == eff(canon_freq("pcore:600"))
+
+
+def test_pstate_session_runs_cross_cluster_pairs():
+    freqs = [encode_freq("ecore", 600), encode_freq("ecore", 2064),
+             encode_freq("pcore", 3204)]
+    table = MeasurementSession(
+        frequencies=freqs, cfg=_cfg(), backend="pstate-sim",
+        backend_options={"seed": 5, "n_cores": 6}).run()
+    classes = {transition_class(fi, ft) for fi, ft in table.pairs}
+    assert "ecore" in classes
+    assert {"ecore->pcore", "pcore->ecore"} <= classes
+    assert all(p.status == "ok" for p in table.pairs.values())
+
+
+# ------------------------------------------------------------------ #
+# campaign: cross-architecture report + single-domain gating
+# ------------------------------------------------------------------ #
+def _fast_measure():
+    return MeasureSpec(key="fast", min_measurements=4, max_measurements=6,
+                       rse_check_every=4)
+
+
+def test_mixed_campaign_report_covers_three_families(tmp_path):
+    spec = CampaignSpec(
+        name="cross-arch",
+        devices=(
+            DeviceSpec.make("rtx", "vmapped-sim",
+                            {"kind": "rtx6000", "n_cores": 6}, n_freqs=2),
+            DeviceSpec.make("md", "multi-domain-sim", {"n_cores": 8},
+                            frequencies=["core:600", "core:1500",
+                                         "uncore:300"]),
+            DeviceSpec.make("ps", "pstate-sim", {"n_cores": 6},
+                            frequencies=["ecore:600", "pcore:600",
+                                         "pcore:3204"]),
+        ),
+        measures=(_fast_measure(),))
+    run_campaign(spec, ArtifactStore(str(tmp_path)))
+    camp = ArtifactStore(str(tmp_path)).open(spec)
+    doc = aggregate.report_dict(camp)
+    assert doc["units_done"] == 3
+    assert aggregate.campaign_has_domains(camp)
+    units = {r["unit"] for r in doc["comparison"] if r.get("n_pairs")}
+    assert units == {"rtx@fast", "md@fast", "ps@fast"}
+    transitions = {(r["unit"], r["transition"]) for r in doc["domains"]}
+    assert ("md@fast", "core->uncore") in transitions
+    assert ("ps@fast", "ecore->pcore") in transitions
+    assert ("rtx@fast", "core") in transitions         # bare = implicit core
+    md = aggregate.report_markdown(camp)
+    assert "## Latency by transition class (domain breakdown)" in md
+
+
+def test_single_domain_campaign_report_has_no_domain_section(tmp_path):
+    spec = CampaignSpec(
+        name="plain",
+        devices=(DeviceSpec.make("rtx", "vmapped-sim",
+                                 {"kind": "rtx6000", "n_cores": 6},
+                                 n_freqs=2),),
+        measures=(_fast_measure(),))
+    run_campaign(spec, ArtifactStore(str(tmp_path)))
+    camp = ArtifactStore(str(tmp_path)).open(spec)
+    assert not aggregate.campaign_has_domains(camp)
+    assert "domains" not in aggregate.report_dict(camp)
+    assert "transition class" not in aggregate.report_markdown(camp)
+
+
+def test_spec_spellings_share_campaign_id():
+    """Tuple and string operating-point spellings canonicalize to the
+    same DeviceSpec, so equivalent specs share artifacts."""
+    a = DeviceSpec.make("md", "multi-domain-sim",
+                        frequencies=["core:600", "uncore:300"])
+    b = DeviceSpec.make("md", "multi-domain-sim",
+                        frequencies=[("core", 600), ("uncore", 300.0)])
+    assert a == b
+    sa = CampaignSpec(name="x", devices=(a,))
+    sb = CampaignSpec(name="x", devices=(b,))
+    assert sa.campaign_id() == sb.campaign_id()
+    # and the canonical JSON round-trips through from_dict
+    import json
+    rt = CampaignSpec.from_dict(json.loads(sa.canonical_json()))
+    assert rt.campaign_id() == sa.campaign_id()
+
+
+def test_bare_spec_canonical_json_unchanged():
+    """Bare-MHz specs keep numeric frequencies in canonical JSON — the
+    campaign_id of every pre-domain spec is stable."""
+    d = DeviceSpec.make("rtx", "vmapped-sim", frequencies=[210.0, 1410.0])
+    assert d.to_dict()["frequencies"] == [210.0, 1410.0]
+
+
+def test_mixed_spec_rejects_bare_mhz_on_domain_device():
+    d = DeviceSpec.make("md", "multi-domain-sim",
+                        frequencies=[600.0, "uncore:300"])
+    dev = create_backend("multi-domain-sim")
+    with pytest.raises(ValueError, match=r"domains \['core', 'uncore'\]"):
+        d.resolve_frequencies(dev)
+
+
+def test_spec_rejects_unknown_domain_at_make_time():
+    with pytest.raises(ValueError, match="bad frequency spec"):
+        DeviceSpec.make("md", "multi-domain-sim",
+                        frequencies=["fabric:600"])

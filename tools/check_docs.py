@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Docs gate (CI `docs-check`): keep the prose as tested as the code.
+
+Three checks over README.md and docs/*.md:
+
+1. every fenced ```python snippet must at least *compile* — docs with
+   syntax errors teach broken idiom;
+2. every relative markdown link must resolve to a file or directory in
+   the repo — stale paths are how docs rot;
+3. every registered backend name must appear in docs/backends.md — the
+   authoring guide's table is the user-facing backend inventory, and a
+   backend that ships undocumented fails the build.
+
+Run it the way CI does:
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exit 0 when clean; exit 1 with one line per problem otherwise.  The
+check functions are imported by tests/test_docs.py, so the gate also
+runs in the tier-1 suite.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — target up to the first ')' or whitespace; images share
+# the syntax, so they are covered too
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def python_snippets(text: str) -> list[tuple[int, str]]:
+    """(first line number, source) per fenced ```python block."""
+    out, lang, buf, start = [], None, [], 0
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _FENCE_RE.match(line)
+        if m and lang is None:
+            lang, buf, start = m.group(1), [], i + 1
+        elif line.strip() == "```" and lang is not None:
+            if lang == "python":
+                out.append((start, "\n".join(buf)))
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    return out
+
+
+def check_snippets(path: Path) -> list[str]:
+    errors = []
+    for lineno, code in python_snippets(path.read_text()):
+        try:
+            compile(code, f"{path.name}:{lineno}", "exec")
+        except SyntaxError as e:
+            errors.append(
+                f"{path.relative_to(ROOT)}:{lineno}: python snippet does "
+                f"not compile: {e.msg} (snippet line {e.lineno})")
+    return errors
+
+
+def check_links(path: Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for target in _LINK_RE.findall(line):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{lineno}: broken relative "
+                    f"link {target!r}")
+    return errors
+
+
+def check_backend_coverage() -> list[str]:
+    """Every *built-in* registered backend must be named in
+    docs/backends.md.  Built-in = factory defined under the repro
+    package, so fixture backends registered by a test process don't
+    trip the gate."""
+    from repro.backends import get_backend, list_backends
+    text = (ROOT / "docs" / "backends.md").read_text()
+    errors = []
+    for name in list_backends():
+        if not get_backend(name).factory.__module__.startswith("repro."):
+            continue
+        if f"`{name}`" not in text:
+            errors.append(
+                f"docs/backends.md: registered backend `{name}` is "
+                "undocumented — add it to the built-in families table")
+    return errors
+
+
+def run_all() -> list[str]:
+    errors = []
+    for path in doc_files():
+        errors += check_snippets(path)
+        errors += check_links(path)
+    errors += check_backend_coverage()
+    return errors
+
+
+def main() -> int:
+    errors = run_all()
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_docs = len(doc_files())
+    if not errors:
+        print(f"docs-check: {n_docs} files clean")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
